@@ -1,0 +1,62 @@
+"""Shared benchmark plumbing: profile cache, tables, JSON artifacts."""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+from typing import Dict, List, Optional, Sequence
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+BENCH_DIR = os.path.join(ROOT, "experiments", "bench")
+PROFILE_PATH = os.path.join(ROOT, "experiments", "profiles",
+                            "container.json")
+
+
+def container_profile(refresh: bool = False):
+    """Train (or load the cached) Level-2 model profile for this machine."""
+    from repro.core.hardware import HardwareProfile
+    from repro.core.training import train_profile
+    if os.path.exists(PROFILE_PATH) and not refresh:
+        return HardwareProfile.load(PROFILE_PATH)
+    profile = train_profile("HW-container", reps=48, max_size=1 << 20)
+    profile.save(PROFILE_PATH)
+    return profile
+
+
+def emit(name: str, rows: Sequence[Dict], keys: Optional[List[str]] = None
+         ) -> None:
+    """Print an aligned table and persist rows under experiments/bench/."""
+    os.makedirs(BENCH_DIR, exist_ok=True)
+    with open(os.path.join(BENCH_DIR, f"{name}.json"), "w") as fh:
+        json.dump(list(rows), fh, indent=1, default=str)
+    if not rows:
+        print(f"[{name}] (no rows)")
+        return
+    keys = keys or list(rows[0].keys())
+    widths = {k: max(len(k), *(len(_fmt(r.get(k))) for r in rows))
+              for k in keys}
+    print(f"== {name} ==")
+    print("  ".join(k.ljust(widths[k]) for k in keys))
+    for row in rows:
+        print("  ".join(_fmt(row.get(k)).ljust(widths[k]) for k in keys))
+    print()
+
+
+def _fmt(value) -> str:
+    if isinstance(value, float):
+        if value == 0:
+            return "0"
+        if abs(value) < 1e-3 or abs(value) >= 1e5:
+            return f"{value:.3e}"
+        return f"{value:.4g}"
+    return str(value)
+
+
+def timer():
+    t0 = time.perf_counter()
+    return lambda: time.perf_counter() - t0

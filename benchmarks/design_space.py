@@ -1,0 +1,15 @@
+"""§2 Equations 1-4: design-space cardinality accounting."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core import design_space
+
+
+def run(quick: bool = False) -> None:
+    summary = design_space.summary()
+    rows = [{"quantity": k, "log10_count": v} for k, v in summary.items()]
+    emit("design_space", rows)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,73 @@
+"""Fig. 6: the Calculator's synthesized Get latency vs a real
+implementation, per structure, as data grows.
+
+The paper sweeps 1e5..1e7 entries with 1e2 uniform Gets on three machines;
+this container is one machine and the python ground truths are slower than
+C++, so we sweep 1e4..2e5 and report per-structure predicted vs measured
+latency plus the cross-structure rank agreement — the paper's headline
+claim ("accurately computes the latency of arbitrary designs, ranked
+correctly") in reproducible form.
+"""
+from __future__ import annotations
+
+import inspect
+
+import numpy as np
+
+from benchmarks.common import container_profile, emit
+from repro.core import elements as el, structures as S, synthesis
+from repro.core.synthesis import Workload
+
+SIZES = (10_000, 50_000, 200_000)
+N_QUERIES = 100
+
+PAIRS = [
+    ("array", S.Array),
+    ("sorted_array", S.SortedArray),
+    ("linked_list", S.LinkedList),
+    ("range_partitioned_linked_list", S.RangePartitionedLinkedList),
+    ("skip_list", S.SkipList),
+    ("trie", S.Trie),
+    ("hash_table", S.HashTable),
+    ("btree", S.BPlusTree),
+]
+
+
+def run(quick: bool = False) -> None:
+    sizes = SIZES[:2] if quick else SIZES
+    hw = container_profile()
+    rng = np.random.default_rng(7)
+    rows = []
+    for n in sizes:
+        keys = rng.choice(np.arange(n * 4), size=n,
+                          replace=False).astype(np.int64)
+        values = rng.integers(0, 1 << 30, size=n).astype(np.int64)
+        queries = keys[rng.integers(0, n, size=N_QUERIES)]
+        for name, cls in PAIRS:
+            structure = cls()
+            measured = S.measure_workload(structure, keys, values,
+                                          queries)["per_query_s"]
+            make = el.ALL_PAPER_SPECS[name]
+            sig = inspect.signature(make)
+            spec = make(n) if "n_puts" in sig.parameters else make()
+            predicted = synthesis.cost(
+                "get", spec, Workload(n_entries=n, n_queries=N_QUERIES), hw)
+            rows.append({
+                "structure": name, "n": n,
+                "measured_us": measured * 1e6,
+                "predicted_us": predicted * 1e6,
+                "ratio": predicted / max(measured, 1e-12)})
+    # rank agreement per size
+    for n in sizes:
+        sub = [r for r in rows if r["n"] == n]
+        meas = np.argsort(np.argsort([r["measured_us"] for r in sub]))
+        pred = np.argsort(np.argsort([r["predicted_us"] for r in sub]))
+        rho = float(np.corrcoef(meas, pred)[0, 1])
+        rows.append({"structure": f"(rank-corr n={n})", "n": n,
+                     "measured_us": 0.0, "predicted_us": 0.0, "ratio": rho})
+    emit("fig6_accuracy", rows,
+         ["structure", "n", "measured_us", "predicted_us", "ratio"])
+
+
+if __name__ == "__main__":
+    run()

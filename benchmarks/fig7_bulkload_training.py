@@ -1,0 +1,63 @@
+"""Fig. 7: (a) bulk-loading cost synthesis vs measured; (b) time to train
+all Level-2 access primitives ("merely a few minutes")."""
+from __future__ import annotations
+
+import inspect
+import time
+
+import numpy as np
+
+from benchmarks.common import container_profile, emit
+from repro.core import access, elements as el, structures as S, synthesis
+from repro.core.synthesis import Workload
+from repro.core.training import benchmark_primitive, train_profile
+
+N = 100_000
+
+PAIRS = [
+    ("array", S.Array),
+    ("sorted_array", S.SortedArray),
+    ("linked_list", S.LinkedList),
+    ("skip_list", S.SkipList),
+    ("hash_table", S.HashTable),
+    ("btree", S.BPlusTree),
+]
+
+
+def run(quick: bool = False) -> None:
+    n = 20_000 if quick else N
+    hw = container_profile()
+    rng = np.random.default_rng(11)
+    keys = rng.permutation(n * 2)[:n].astype(np.int64)
+    values = keys.copy()
+    rows = []
+    for name, cls in PAIRS:
+        structure = cls()
+        measured = S.measure_workload(structure, keys, values,
+                                      queries=keys[:5])["bulk_load_s"]
+        make = el.ALL_PAPER_SPECS[name]
+        sig = inspect.signature(make)
+        spec = make(n) if "n_puts" in sig.parameters else make()
+        predicted = synthesis.cost("bulk_load", spec, Workload(n_entries=n),
+                                   hw)
+        rows.append({"structure": name, "measured_ms": measured * 1e3,
+                     "predicted_ms": predicted * 1e3,
+                     "ratio": predicted / max(measured, 1e-12)})
+    emit("fig7a_bulkload", rows)
+
+    # (b) training time per Level-2 primitive
+    rows = []
+    total = 0.0
+    for pname, prim in access.LEVEL2.items():
+        t0 = time.perf_counter()
+        sizes = prim.sizes[:4] if quick else prim.sizes[:6]
+        benchmark_primitive(prim, sizes=sizes, reps=16 if quick else 32)
+        dt = time.perf_counter() - t0
+        total += dt
+        rows.append({"primitive": pname, "train_seconds": dt})
+    rows.append({"primitive": "TOTAL", "train_seconds": total})
+    emit("fig7b_training_time", rows)
+
+
+if __name__ == "__main__":
+    run()

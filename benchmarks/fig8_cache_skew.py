@@ -1,0 +1,74 @@
+"""Fig. 8: cache-conscious designs (CSB+ vs B+) across data sizes, and
+workload skew (Zipf alpha sweep) — predicted vs measured."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import container_profile, emit
+from repro.core import elements as el, structures as S, synthesis
+from repro.core.synthesis import Workload
+
+ALPHAS = (0.0, 0.5, 1.0, 1.5, 2.0)
+
+
+def _zipf_queries(keys: np.ndarray, n_queries: int, alpha: float,
+                  rng) -> np.ndarray:
+    if alpha <= 0:
+        return keys[rng.integers(0, len(keys), n_queries)]
+    ranks = np.arange(1, len(keys) + 1, dtype=np.float64)
+    p = ranks ** (-alpha)
+    p /= p.sum()
+    return rng.choice(keys, size=n_queries, p=p)
+
+
+def run(quick: bool = False) -> None:
+    hw = container_profile()
+    rng = np.random.default_rng(3)
+
+    # (a) CSB+ vs B+ across sizes
+    rows = []
+    sizes = (10_000, 50_000) if quick else (10_000, 100_000, 400_000)
+    for n in sizes:
+        keys = rng.permutation(n * 2)[:n].astype(np.int64)
+        values = keys.copy()
+        queries = keys[rng.integers(0, n, 100)]
+        for name, cls, spec in (
+                ("btree", S.BPlusTree, el.spec_btree()),
+                ("csb_tree", S.CSBTree, el.spec_csb_tree())):
+            measured = S.measure_workload(cls(), keys, values,
+                                          queries)["per_query_s"]
+            predicted = synthesis.cost("get", spec, Workload(n_entries=n),
+                                       hw)
+            rows.append({"structure": name, "n": n,
+                         "measured_us": measured * 1e6,
+                         "predicted_us": predicted * 1e6})
+    emit("fig8a_cache_conscious", rows)
+
+    # (b) skew sweep: predicted latency must fall with alpha, faster for B+
+    rows = []
+    n = 50_000 if quick else 200_000
+    keys = rng.permutation(n * 2)[:n].astype(np.int64)
+    values = keys.copy()
+    for name, cls, spec in (
+            ("btree", S.BPlusTree, el.spec_btree()),
+            ("csb_tree", S.CSBTree, el.spec_csb_tree())):
+        structure = cls()
+        structure.bulk_load(keys, values)
+        for alpha in ALPHAS:
+            queries = _zipf_queries(np.sort(keys), 200, alpha, rng)
+            import time
+            t0 = time.perf_counter()
+            for q in queries:
+                structure.get(int(q))
+            measured = (time.perf_counter() - t0) / len(queries)
+            predicted = synthesis.cost(
+                "get", spec, Workload(n_entries=n, n_queries=200,
+                                      zipf_alpha=alpha), hw)
+            rows.append({"structure": name, "alpha": alpha,
+                         "measured_us": measured * 1e6,
+                         "predicted_us": predicted * 1e6})
+    emit("fig8b_skew", rows)
+
+
+if __name__ == "__main__":
+    run()

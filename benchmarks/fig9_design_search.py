@@ -1,0 +1,72 @@
+"""Fig. 9 + §5 'Rich Design Questions': auto-completion scenarios.
+
+Scenario 1: mixed reads/writes; point reads touch 20% of the domain.
+Scenario 2: 50% point reads on 10% of the domain, 50% range reads on a
+disjoint 10%, plus uniform inserts.
+
+The Calculator designs per-region sub-structures under a shared
+partitioning root (the paper reports hash->{log, B+tree-like} hybrids) —
+we report the synthesized designs, costs, and wall time, plus the §5
+what-if question sequence (hardware change, bloom filters, skew).
+"""
+from __future__ import annotations
+
+from benchmarks.common import container_profile, emit, timer
+from repro.core import elements as el, whatif
+from repro.core.autocomplete import (DomainRegion, complete_design,
+                                     design_hybrid)
+from repro.core.hardware import hw1, hw3
+from repro.core.synthesis import Workload
+
+W = Workload(n_entries=1_000_000, n_queries=100)
+
+
+def run(quick: bool = False) -> None:
+    hw = hw3()
+    rows = []
+
+    t = timer()
+    scenario1 = design_hybrid(W, [
+        DomainRegion("point-reads", 0.2, {"get": 100.0}),
+        DomainRegion("writes", 0.8, {"update": 100.0, "bulk_load": 1.0}),
+    ], hw)
+    rows.append({"scenario": "1 (reads 20% / writes 80%)",
+                 "design": scenario1.describe(),
+                 "cost_s": scenario1.cost_seconds,
+                 "search_seconds": t()})
+
+    t = timer()
+    scenario2 = design_hybrid(W, [
+        DomainRegion("point-reads", 0.1, {"get": 50.0}),
+        DomainRegion("range-reads", 0.1, {"range_get": 50.0}),
+        DomainRegion("writes", 0.8, {"update": 100.0, "bulk_load": 1.0}),
+    ], hw)
+    rows.append({"scenario": "2 (+range region)",
+                 "design": scenario2.describe(),
+                 "cost_s": scenario2.cost_seconds,
+                 "search_seconds": t()})
+    emit("fig9_designs", rows)
+
+    # §5 question sequence on a B-tree design
+    rows = []
+    base = el.spec_btree()
+    ans = whatif.what_if_hardware(base, W, hw1(), hw3())
+    rows.append({"question": "move HW1 -> HW3?", "answer": ans.summary()})
+    t = timer()
+    better = complete_design((), W, hw3(), mix={"get": 100.0}, max_depth=2)
+    rows.append({"question": "better design for HW3? (5-element pool)",
+                 "answer": better.summary()})
+    ans = whatif.what_if_design(base, whatif.add_bloom_filters(base), W,
+                                hw3())
+    rows.append({"question": "bloom filters in all leaves?",
+                 "answer": ans.summary()})
+    import dataclasses
+    skewed = dataclasses.replace(W, zipf_alpha=2.0)
+    ans = whatif.what_if_workload(base, W, skewed, hw3())
+    rows.append({"question": "workload skews to 0.01% of keys?",
+                 "answer": ans.summary()})
+    emit("fig9_whatif_sequence", rows)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,107 @@
+"""§Perf hillclimb driver: run tagged dry-run variants for the three
+selected cells and print the before/after roofline deltas.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb [--only CELL]
+
+Each variant is one lower+compile of the cell with one knob changed; the
+baseline is the sweep's untagged cell file.  Results append to
+experiments/dryrun/<cell>__<tag>.json and the comparison table prints at
+the end (and lands in experiments/bench/hillclimb.json).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import subprocess
+import sys
+
+from benchmarks.common import ROOT, emit
+
+DRYRUN = os.path.join(ROOT, "experiments", "dryrun")
+
+# (cell-id, arch, shape, [(tag, [flags...]), ...])
+PLANS = [
+    ("A-prefill-mem", "qwen1.5-32b", "prefill_32k", [
+        ("noattn", ["--attn-impl", "skip"]),
+        ("nofsdp", ["--no-fsdp"]),
+        ("mesh32x8", ["--mesh-shape", "32x8"]),
+        ("mesh32x8-noattn", ["--mesh-shape", "32x8",
+                             "--attn-impl", "skip"]),
+    ]),
+    ("B-moe-coll", "granite-moe-1b-a400m", "train_4k", [
+        ("noep", ["--no-ep"]),                      # it.1 (refuted)
+        ("gc", ["--grad-compress"]),                # it.2: grad bytes /2
+        ("gc-nofsdp", ["--grad-compress", "--no-fsdp"]),  # it.3: no gathers
+        ("mesh32x8", ["--mesh-shape", "32x8"]),     # it.4: kv-head divis.
+    ]),
+    ("C-405b-train", "llama3-405b", "train_4k", [
+        ("bf16mom", ["--moment-dtype", "bfloat16"]),
+        ("bf16mom-gc", ["--moment-dtype", "bfloat16", "--grad-compress"]),
+        ("bf16mom-gc-mb64", ["--moment-dtype", "bfloat16",
+                             "--grad-compress", "--microbatch", "64"]),
+        ("nosp", ["--no-sp"]),
+        ("mesh32x8", ["--mesh-shape", "32x8",
+                      "--moment-dtype", "bfloat16"]),  # kv=8 divides TP=8
+    ]),
+]
+
+
+def run_variant(arch: str, shape: str, tag: str, flags) -> None:
+    path = os.path.join(DRYRUN, f"{arch}__{shape}__single__{tag}.json")
+    if os.path.exists(path):
+        print(f"cached {arch} {shape} [{tag}]")
+        return
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--mesh", "single", "--tag", tag] + list(flags)
+    print("run:", " ".join(cmd), flush=True)
+    proc = subprocess.run(cmd, capture_output=True, text=True, timeout=7200,
+                          env=dict(os.environ))
+    if proc.returncode != 0:
+        print(proc.stderr[-3000:])
+        raise RuntimeError(f"variant failed: {tag}")
+
+
+def summarize() -> None:
+    rows = []
+    for cell_id, arch, shape, variants in PLANS:
+        base_path = os.path.join(DRYRUN, f"{arch}__{shape}__single.json")
+        entries = [("baseline", base_path)]
+        entries += [(tag, os.path.join(
+            DRYRUN, f"{arch}__{shape}__single__{tag}.json"))
+            for tag, _ in variants]
+        for tag, path in entries:
+            if not os.path.exists(path):
+                continue
+            r = json.load(open(path))
+            rf = r.get("roofline") or {}
+            mem = r.get("full", {}).get("memory", {})
+            rows.append({
+                "cell": cell_id, "variant": tag,
+                "Tc_s": rf.get("compute_s"), "Tm_s": rf.get("memory_s"),
+                "Tcoll_s": rf.get("collective_s"),
+                "dominant": rf.get("dominant"),
+                "frac": rf.get("roofline_fraction"),
+                "args_GB": (mem.get("argument_size_in_bytes") or 0) / 1e9,
+                "temps_GB": (mem.get("temp_size_in_bytes") or 0) / 1e9,
+            })
+    emit("hillclimb", rows)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--summarize-only", action="store_true")
+    args = ap.parse_args()
+    if not args.summarize_only:
+        for cell_id, arch, shape, variants in PLANS:
+            if args.only and args.only != cell_id:
+                continue
+            for tag, flags in variants:
+                run_variant(arch, shape, tag, flags)
+    summarize()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""Kernel micro-benchmarks: per-kernel arithmetic intensity + oracle check.
+
+Interpret-mode wall time on CPU is not TPU performance; what this harness
+reports per kernel is (a) correctness vs the ref oracle at benchmark
+shapes, and (b) the structural roofline terms — FLOPs, HBM bytes and
+FLOPs/byte for the BlockSpec tiling — which is how we reason about the
+kernels without hardware (same method as §Roofline).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+
+
+def run(quick: bool = False) -> None:
+    rows = []
+    rng = np.random.default_rng(0)
+
+    # flash attention: S=1024, H=8, D=128 block tiling
+    b, h, s, d = 1, 8, 512 if quick else 1024, 128
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.flash_attention.ref import attention_ref
+    q = jnp.asarray(rng.standard_normal((b, h, s, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, h, s, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, h, s, d)), jnp.float32)
+    got = np.asarray(flash_attention(q, k, v, True), np.float32)
+    want = np.asarray(attention_ref(q, k, v, causal=True), np.float32)
+    err = float(np.nanmax(np.abs(got - want)))
+    flops = 4.0 * b * h * s * s * d
+    bytes_ = 4.0 * (3 * b * h * s * d + b * h * s * d)
+    rows.append({"kernel": "flash_attention", "max_err": err,
+                 "flops": flops, "hbm_bytes": bytes_,
+                 "flops_per_byte": flops / bytes_})
+
+    # sorted search: N=64k keys, Q=4k queries
+    from repro.kernels.sorted_search.ops import sorted_search
+    from repro.kernels.sorted_search.ref import sorted_search_ref
+    n, nq = (1 << 14, 1 << 10) if quick else (1 << 16, 1 << 12)
+    keys = np.sort(rng.integers(0, 1 << 30, n)).astype(np.int32)
+    queries = rng.integers(0, 1 << 30, nq).astype(np.int32)
+    got = np.asarray(sorted_search(jnp.asarray(keys), jnp.asarray(queries)))
+    want = np.asarray(sorted_search_ref(jnp.asarray(keys),
+                                        jnp.asarray(queries)))
+    cmps = float(n) * nq
+    rows.append({"kernel": "sorted_search",
+                 "max_err": float(np.abs(got - want).max()),
+                 "flops": cmps, "hbm_bytes": 4.0 * (n + 2 * nq),
+                 "flops_per_byte": cmps / (4.0 * (n + 2 * nq))})
+
+    # scan filter
+    from repro.kernels.scan_filter.ops import scan_filter
+    from repro.kernels.scan_filter.ref import scan_filter_ref
+    ukeys = rng.permutation(keys).astype(np.int32)
+    lo, hi = queries - 1000, queries + 1000
+    got = scan_filter(jnp.asarray(ukeys), jnp.asarray(queries),
+                      jnp.asarray(lo), jnp.asarray(hi))
+    want = scan_filter_ref(jnp.asarray(ukeys), jnp.asarray(queries),
+                           jnp.asarray(lo), jnp.asarray(hi))
+    err = float(np.abs(np.asarray(got[1]) - np.asarray(want[1])).max())
+    rows.append({"kernel": "scan_filter", "max_err": err,
+                 "flops": 3.0 * cmps, "hbm_bytes": 4.0 * (n + 4 * nq),
+                 "flops_per_byte": 3.0 * cmps / (4.0 * (n + 4 * nq))})
+
+    # hash probe
+    from repro.kernels.hash_probe.ops import DEFAULT_A, hash_probe
+    from repro.kernels.hash_probe.ref import build_table, hash_probe_ref
+    s_bits, cap = 10, 16
+    tkeys = rng.choice(1 << 24, 8000, replace=False).astype(np.int64)
+    tvals = rng.integers(1, 1 << 30, 8000).astype(np.int32)
+    tk, tv = build_table(tkeys, tvals, s_bits, DEFAULT_A, cap)
+    found, val = hash_probe(jnp.asarray(tk), jnp.asarray(tv),
+                            jnp.asarray(queries), s=s_bits)
+    pos_r, val_r = hash_probe_ref(tk, tv, queries, DEFAULT_A, s_bits)
+    err = float(np.abs(np.asarray(val) - val_r).max())
+    work = float((1 << s_bits) * cap) * nq
+    rows.append({"kernel": "hash_probe", "max_err": err, "flops": work,
+                 "hbm_bytes": 8.0 * (1 << s_bits) * cap + 8.0 * nq,
+                 "flops_per_byte": work / (8.0 * (1 << s_bits) * cap)})
+
+    # bloom probe
+    from repro.kernels.bloom_probe.ops import DEFAULT_COEFFS, bloom_probe
+    from repro.kernels.bloom_probe.ref import bloom_probe_ref, build_filter
+    sb = 16
+    words = build_filter(tkeys, DEFAULT_COEFFS[:3], sb)
+    got = np.asarray(bloom_probe(jnp.asarray(words), jnp.asarray(queries),
+                                 s=sb, num_hashes=3))
+    want = bloom_probe_ref(words, queries, DEFAULT_COEFFS[:3], sb)
+    rows.append({"kernel": "bloom_probe",
+                 "max_err": float((got != want).sum()),
+                 "flops": 3.0 * nq * len(words),
+                 "hbm_bytes": 4.0 * len(words) + 4.0 * nq,
+                 "flops_per_byte": 3.0 * nq * len(words) /
+                 (4.0 * len(words) + 4.0 * nq)})
+    emit("kernels", rows)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,73 @@
+"""§Roofline: the three-term roofline per (arch x shape x mesh) from the
+dry-run artifacts, plus the Distributed Data Calculator's predicted terms
+(the Fig. 6 predicted-vs-measured methodology transferred to TPU).
+
+Reads experiments/dryrun/*.json (produced by repro.launch.dryrun); run the
+sweep first for full coverage — cells not yet swept are listed as missing.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import ROOT, emit
+
+DRYRUN = os.path.join(ROOT, "experiments", "dryrun")
+
+
+def load_cells():
+    cells = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN, "*.json"))):
+        with open(path) as fh:
+            record = json.load(fh)
+        if record.get("variant"):
+            continue  # §Perf hillclimb variants live in hillclimb.json
+        cells.append(record)
+    return cells
+
+
+def run(quick: bool = False) -> None:
+    cells = load_cells()
+    rows, missing, pred_rows = [], 0, []
+    for cell in cells:
+        if "error" in cell:
+            missing += 1
+            continue
+        if "skipped" in cell and cell["skipped"]:
+            rows.append({"arch": cell["arch"], "shape": cell["shape"],
+                         "mesh": cell["mesh"], "dominant": "SKIP"})
+            continue
+        rf = cell.get("roofline")
+        if not rf:
+            missing += 1
+            continue
+        rows.append({
+            "arch": cell["arch"], "shape": cell["shape"],
+            "mesh": cell["mesh"],
+            "compute_s": rf["compute_s"], "memory_s": rf["memory_s"],
+            "collective_s": rf["collective_s"],
+            "dominant": rf["dominant"],
+            "roofline_frac": rf["roofline_fraction"],
+            "useful_ratio": rf["useful_flops_ratio"],
+        })
+        dc = cell.get("distcalc")
+        if dc and cell["mesh"] == "single":
+            step = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+            pred_rows.append({
+                "arch": cell["arch"], "shape": cell["shape"],
+                "xla_step_bound_s": step,
+                "distcalc_step_s": dc["step_seconds"],
+                "ratio": dc["step_seconds"] / max(step, 1e-12),
+                "both_pick": ("same" if dc["dominant"] == rf["dominant"]
+                              else f'{dc["dominant"]}!={rf["dominant"]}')})
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    emit("roofline_table", rows)
+    emit("distcalc_vs_xla", pred_rows)
+    if missing:
+        print(f"[roofline] {missing} cells missing/failed — "
+              f"run PYTHONPATH=src python -m repro.launch.dryrun --all")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,55 @@
+"""Benchmark driver: one module per paper table/figure + the TPU roofline.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+
+Artifacts land in experiments/bench/<name>.json; tables print to stdout.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (design_space, fig6_accuracy, fig7_bulkload_training,
+                        fig8_cache_skew, fig9_design_search, kernels_bench,
+                        roofline)
+
+BENCHES = [
+    ("design_space", design_space.run),
+    ("fig6_accuracy", fig6_accuracy.run),
+    ("fig7_bulkload_training", fig7_bulkload_training.run),
+    ("fig8_cache_skew", fig8_cache_skew.run),
+    ("fig9_design_search", fig9_design_search.run),
+    ("kernels", kernels_bench.run),
+    ("roofline", roofline.run),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced sizes (CI mode)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    failures = []
+    for name, fn in BENCHES:
+        if args.only and name != args.only:
+            continue
+        t0 = time.perf_counter()
+        print(f"### benchmark: {name}", flush=True)
+        try:
+            fn(quick=args.quick)
+            print(f"### {name} done in {time.perf_counter() - t0:.1f}s\n",
+                  flush=True)
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+    if failures:
+        print(f"FAILED benchmarks: {failures}")
+        sys.exit(1)
+    print("all benchmarks passed")
+
+
+if __name__ == "__main__":
+    main()

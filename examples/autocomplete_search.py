@@ -1,0 +1,33 @@
+"""Fig. 9: the Calculator designs hybrid structures to fit a workload.
+
+    PYTHONPATH=src python examples/autocomplete_search.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.autocomplete import DomainRegion, design_hybrid
+from repro.core.hardware import hw3
+from repro.core.synthesis import Workload
+
+workload = Workload(n_entries=1_000_000)
+
+print("Scenario 1: point reads on 20% of the domain, writes on the rest")
+design = design_hybrid(workload, [
+    DomainRegion("point-reads", 0.2, {"get": 100.0}),
+    DomainRegion("writes", 0.8, {"update": 100.0, "bulk_load": 1.0}),
+], hw3())
+print("  ", design.describe())
+print(f"   cost {design.cost_seconds:.3e}s, designed in "
+      f"{design.elapsed_seconds:.1f}s")
+
+print("Scenario 2: + disjoint range-read region")
+design = design_hybrid(workload, [
+    DomainRegion("point-reads", 0.1, {"get": 50.0}),
+    DomainRegion("range-reads", 0.1, {"range_get": 50.0}),
+    DomainRegion("writes", 0.8, {"update": 100.0, "bulk_load": 1.0}),
+], hw3())
+print("  ", design.describe())
+print(f"   cost {design.cost_seconds:.3e}s, designed in "
+      f"{design.elapsed_seconds:.1f}s")

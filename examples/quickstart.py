@@ -1,0 +1,40 @@
+"""Quickstart: cost a data structure design without implementing it.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Covers the Calculator loop end to end: describe a design as layout
+primitives -> synthesize the Get operation -> price it on two hardware
+profiles -> read the per-primitive breakdown (paper Fig. 2 / §3).
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import elements as el
+from repro.core.hardware import hw1, hw3
+from repro.core.synthesis import Workload, synthesize_get
+
+# 1. a design: classic B+tree (fanout-20 internals, 250-record sorted leaves)
+spec = el.spec_btree(fanout=20, page=250)
+print(f"design: {spec.describe()}")
+
+# 2. a workload: 100k uniform keys, 100 point Gets
+workload = Workload(n_entries=100_000, n_queries=100)
+
+# 3. synthesize the Get operation -> Level-1 access primitive sequence
+breakdown = synthesize_get(spec, workload)
+print(f"synthesized access path: {breakdown.format()}")
+print("  (compare paper §3: P(312)+B(152)+P(6552)+B(152)+P(1606552)+"
+      "B(2000)+P(2000))")
+
+# 4. price it on two machines — no implementation, no deployment
+for hw in (hw1(), hw3()):
+    latency = breakdown.total(hw)
+    print(f"predicted Get latency on {hw.name}: {latency * 1e6:.3f} us")
+
+# 5. one what-if: would bloom filters on the leaves help here?
+from repro.core import whatif
+answer = whatif.what_if_design(spec, whatif.add_bloom_filters(spec),
+                               workload, hw1())
+print(answer.summary())

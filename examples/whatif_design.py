@@ -1,0 +1,42 @@
+"""The §5 'Rich Design Questions' session, replayed.
+
+    PYTHONPATH=src python examples/whatif_design.py
+
+A user operating a B-tree design asks the Calculator a sequence of
+design / hardware / workload questions; every answer is a cost synthesis,
+not an experiment.
+"""
+import dataclasses
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import elements as el, whatif
+from repro.core.autocomplete import complete_design
+from repro.core.hardware import hw1, hw3
+from repro.core.synthesis import Workload
+
+workload = Workload(n_entries=1_000_000, n_queries=100)
+base = el.spec_btree()
+
+print("Q1: What if we change our hardware to HW3?")
+print("   ", whatif.what_if_hardware(base, workload, hw1(), hw3()).summary())
+
+print("Q2: Is there a better design for HW3 and this workload?")
+result = complete_design((), workload, hw3(), mix={"get": 100.0},
+                         max_depth=2)
+print("   ", result.summary())
+
+print("Q3: Would bloom filters in all B-tree leaves help?")
+print("   ", whatif.what_if_design(
+    base, whatif.add_bloom_filters(base), workload, hw3()).summary())
+
+print("Q4: What if the workload skews to 0.01% of the key space?")
+skewed = dataclasses.replace(workload, zipf_alpha=2.0)
+print("   ", whatif.what_if_workload(base, workload, skewed,
+                                     hw3()).summary())
+
+print("Q5: ...and is there a better design for that skewed workload?")
+result = complete_design((), skewed, hw3(), mix={"get": 100.0}, max_depth=2)
+print("   ", result.summary())

@@ -1,0 +1,151 @@
+"""Step-atomic sharded checkpointing with async writer.
+
+Layout:  <dir>/step_<n>/{manifest.json, arrays.npz}; a checkpoint is only
+visible once its manifest exists (written last), so a crash mid-write never
+corrupts restore — the fault-tolerance contract train/ft.py relies on.
+Restore resharding: arrays are ``device_put`` against the *current* mesh's
+shardings, so a run may restart on a different pod count (elastic scaling).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+Params = Any
+_SEP = "/"
+
+
+def _flatten(tree: Params) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_path_str(p) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.name in ("bfloat16", "float8_e4m3fn", "float8_e5m2"):
+            # npz cannot store ml_dtypes; upcast losslessly — restore casts
+            # back to the template dtype
+            arr = arr.astype(np.float32)
+        flat[key] = arr
+    return flat
+
+
+def _path_str(entry) -> str:
+    if hasattr(entry, "key"):
+        return str(entry.key)
+    if hasattr(entry, "idx"):
+        return f"[{entry.idx}]"
+    return str(entry)
+
+
+def save_checkpoint(directory: str, step: int, tree: Params,
+                    extra: Optional[Dict] = None) -> str:
+    """Synchronous step-atomic save."""
+    step_dir = os.path.join(directory, f"step_{step:08d}")
+    tmp_dir = step_dir + ".tmp"
+    os.makedirs(tmp_dir, exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(os.path.join(tmp_dir, "arrays.npz"), **flat)
+    manifest = {"step": step, "time": time.time(),
+                "keys": sorted(flat.keys()),
+                "shapes": {k: list(v.shape) for k, v in flat.items()},
+                "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+                "extra": extra or {}}
+    with open(os.path.join(tmp_dir, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh)
+    if os.path.exists(step_dir):
+        shutil.rmtree(step_dir)
+    os.rename(tmp_dir, step_dir)  # atomic publish
+    return step_dir
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.endswith(".tmp") and \
+                os.path.exists(os.path.join(directory, name,
+                                            "manifest.json")):
+            steps.append(int(name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, template: Params,
+                       step: Optional[int] = None,
+                       shardings: Optional[Params] = None
+                       ) -> Tuple[int, Params]:
+    """Restore into the structure of ``template``; reshard onto the current
+    mesh if ``shardings`` (same pytree structure) is given."""
+    step = step if step is not None else latest_step(directory)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint under {directory}")
+    step_dir = os.path.join(directory, f"step_{step:08d}")
+    data = np.load(os.path.join(step_dir, "arrays.npz"))
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    shard_leaves = (jax.tree_util.tree_leaves(shardings)
+                    if shardings is not None else [None] * len(paths))
+    leaves: List = []
+    for (path, leaf), shard in zip(paths, shard_leaves):
+        key = _SEP.join(_path_str(p) for p in path)
+        arr = data[key]
+        if hasattr(leaf, "dtype"):
+            arr = arr.astype(leaf.dtype)
+        if shard is not None:
+            leaves.append(jax.device_put(arr, shard))
+        else:
+            leaves.append(jax.numpy.asarray(arr))
+    return step, jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    """Async checkpointing: snapshot to host, write in a background thread.
+
+    Keeps the last ``keep`` checkpoints; ``wait()`` drains pending writes
+    (call before process exit).  A failed async write surfaces on the next
+    ``save``/``wait`` call rather than being silently dropped.
+    """
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+        os.makedirs(directory, exist_ok=True)
+
+    def save(self, step: int, tree: Params,
+             extra: Optional[Dict] = None) -> None:
+        self.wait()
+        host_tree = jax.tree.map(np.asarray, tree)  # snapshot before async
+
+        def write():
+            try:
+                save_checkpoint(self.directory, step, host_tree, extra)
+                self._gc()
+            except BaseException as exc:  # surfaced on next call
+                self._error = exc
+
+        self._thread = threading.Thread(target=write, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            error, self._error = self._error, None
+            raise RuntimeError("async checkpoint write failed") from error
+
+    def _gc(self) -> None:
+        steps = sorted(s for s in (
+            int(n.split("_")[1]) for n in os.listdir(self.directory)
+            if n.startswith("step_") and not n.endswith(".tmp")))
+        for old in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.directory,
+                                       f"step_{old:08d}"),
+                          ignore_errors=True)

@@ -1,0 +1,34 @@
+"""Config registry: ``--arch <id>`` resolution for all assigned archs."""
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+from repro.configs import (codeqwen1_5_7b, granite_moe_1b, llama3_405b,
+                           phi3_5_moe_42b, pixtral_12b, qwen1_5_32b,
+                           qwen2_1_5b, seamless_m4t_large_v2, xlstm_350m,
+                           zamba2_1_2b)
+from repro.configs.base import (ArchConfig, RunConfig, ShapeConfig, SHAPES,
+                                shape_applies)
+
+_MODULES = {
+    "phi3.5-moe-42b-a6.6b": phi3_5_moe_42b,
+    "granite-moe-1b-a400m": granite_moe_1b,
+    "qwen1.5-32b": qwen1_5_32b,
+    "qwen2-1.5b": qwen2_1_5b,
+    "llama3-405b": llama3_405b,
+    "codeqwen1.5-7b": codeqwen1_5_7b,
+    "xlstm-350m": xlstm_350m,
+    "zamba2-1.2b": zamba2_1_2b,
+    "seamless-m4t-large-v2": seamless_m4t_large_v2,
+    "pixtral-12b": pixtral_12b,
+}
+
+ARCH_IDS = tuple(_MODULES.keys())
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    return _MODULES[arch_id].config()
+
+
+def get_smoke_config(arch_id: str) -> ArchConfig:
+    return _MODULES[arch_id].smoke()

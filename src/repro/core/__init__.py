@@ -1,0 +1,14 @@
+"""The Data Calculator core (paper's primary contribution) in JAX.
+
+Layout primitives + elements describe the design space (§2); access
+primitives with learned cost models synthesize operation latencies (§3);
+what-if and auto-completion search the space (§4).  ``distcalc`` applies
+the same paradigm to the distributed (TPU multi-pod) layout space.
+"""
+from repro.core import access, design_space, elements, hardware, models
+from repro.core import primitives, structures, synthesis, training
+from repro.core.elements import ALL_PAPER_SPECS, DataStructureSpec, Element
+from repro.core.hardware import HardwareProfile, TPU_V5E
+from repro.core.synthesis import (CostBreakdown, Workload, cost,
+                                  cost_workload, instantiate,
+                                  synthesize_operation)

@@ -1,0 +1,185 @@
+"""Design auto-completion (paper §4, Algorithm 1) and hybrid design search.
+
+``complete_design`` fills in the missing suffix of a partial element chain,
+ranking candidates by synthesized workload cost, with memoization (the
+paper's ``cachedSolution``).  ``design_hybrid`` reproduces the Fig. 9
+scenarios: the workload is split into domain regions with different
+read/write/range mixes and each region's sub-design is auto-completed
+independently under a shared partitioning root — yielding the paper's
+"hash over {log, B+tree}" style hybrids.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core import elements as el
+from repro.core.elements import DataStructureSpec, Element
+from repro.core.hardware import HardwareProfile
+from repro.core.synthesis import Workload, cost_workload
+
+
+def default_candidates() -> List[Element]:
+    """The element pool offered to the search (right side of Fig. 3)."""
+    return [
+        el.hash_element(100),
+        el.range_element(100),
+        el.btree_internal(20),
+        el.csb_internal(20),
+        el.linked_list_element(256),
+        el.skip_list_element(256),
+        el.trie_element(256, 4),
+    ]
+
+
+def default_terminals() -> List[Element]:
+    return [el.unordered_data_page(256), el.ordered_data_page(256)]
+
+
+@dataclasses.dataclass
+class SearchResult:
+    spec: DataStructureSpec
+    cost_seconds: float
+    explored: int
+    elapsed_seconds: float
+
+    def summary(self) -> str:
+        return (f"{self.spec.describe()}  cost={self.cost_seconds:.3e}s  "
+                f"explored={self.explored} designs in "
+                f"{self.elapsed_seconds:.2f}s")
+
+
+def _meaningful(chain: Sequence[Element]) -> bool:
+    """Prune meaningless paths (Algorithm 1 ``meaningfulPath``)."""
+    seen_partitioners = 0
+    for i, element in enumerate(chain[:-1] if chain and chain[-1].terminal
+                                else chain):
+        if element.tag("fanout") == "unlimited" and i > 0 and \
+                chain[i - 1].tag("fanout") == "unlimited":
+            return False  # LL of LL adds nothing
+        if element.tag("key_partitioning") == "data-ind":
+            seen_partitioners += 1
+            if seen_partitioners > 2:
+                return False
+    return True
+
+
+def complete_design(partial: Sequence[Element], workload: Workload,
+                    hw: HardwareProfile,
+                    candidates: Optional[Sequence[Element]] = None,
+                    terminals: Optional[Sequence[Element]] = None,
+                    mix: Optional[Dict[str, float]] = None,
+                    max_depth: int = 3,
+                    name: str = "auto") -> SearchResult:
+    """Algorithm 1: complete a partial layout spec for (workload, hardware).
+
+    ``partial`` is the known prefix of the element chain (may be empty).
+    The search extends it with up to ``max_depth`` non-terminal candidates
+    plus one terminal, memoizing (level, prefix-class) costs.
+    """
+    candidates = list(candidates or default_candidates())
+    terminals = list(terminals or default_terminals())
+    cache: Dict[Tuple, Tuple[float, Tuple[Element, ...]]] = {}
+    explored = 0
+    t0 = time.perf_counter()
+
+    def best_completion(prefix: Tuple[Element, ...], depth: int
+                        ) -> Tuple[float, Optional[Tuple[Element, ...]]]:
+        nonlocal explored
+        key = (tuple(e.name for e in prefix), depth)
+        if key in cache:
+            return cache[key]
+        best: Tuple[float, Optional[Tuple[Element, ...]]] = (math.inf, None)
+        # option 1: terminate here
+        for term in terminals:
+            chain = prefix + (term,)
+            if not _meaningful(chain):
+                continue
+            try:
+                spec = DataStructureSpec(name, chain)
+            except ValueError:
+                continue
+            explored += 1
+            c = cost_workload(spec, workload, hw, mix)
+            if c < best[0]:
+                best = (c, chain)
+        # option 2: extend with one more non-terminal
+        if depth < max_depth:
+            for cand in candidates:
+                chain = prefix + (cand,)
+                if not _meaningful(chain):
+                    continue
+                sub_cost, sub_chain = best_completion(chain, depth + 1)
+                if sub_chain is not None and sub_cost < best[0]:
+                    best = (sub_cost, sub_chain)
+        cache[key] = best
+        return best
+
+    cost_s, chain = best_completion(tuple(partial), len(tuple(partial)))
+    if chain is None:
+        raise RuntimeError("no valid completion found")
+    return SearchResult(DataStructureSpec(name, chain), cost_s, explored,
+                        time.perf_counter() - t0)
+
+
+# ---------------------------------------------------------------------------
+# Hybrid (Fig. 9) design synthesis
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class DomainRegion:
+    """A contiguous fraction of the key domain with its own operation mix."""
+
+    name: str
+    fraction: float                     # of the key domain
+    mix: Dict[str, float]              # op -> count
+
+
+@dataclasses.dataclass
+class HybridDesign:
+    root: Element
+    regions: List[Tuple[DomainRegion, SearchResult]]
+    cost_seconds: float
+    elapsed_seconds: float
+
+    def describe(self) -> str:
+        parts = ", ".join(
+            f"{region.name}: {result.spec.describe()}"
+            for region, result in self.regions)
+        return f"{self.root.name} -> {{{parts}}}"
+
+
+def design_hybrid(workload: Workload, regions: Sequence[DomainRegion],
+                  hw: HardwareProfile,
+                  candidates: Optional[Sequence[Element]] = None,
+                  root: Optional[Element] = None,
+                  max_depth: int = 2) -> HybridDesign:
+    """Reproduce the paper's Fig. 9 search: per-region auto-completion under
+    a shared partitioning root, costed on each region's own sub-workload."""
+    t0 = time.perf_counter()
+    root = root or el.hash_element(100)
+    results: List[Tuple[DomainRegion, SearchResult]] = []
+    total = 0.0
+    for region in regions:
+        sub_workload = dataclasses.replace(
+            workload,
+            n_entries=max(int(workload.n_entries * region.fraction), 1))
+        result = complete_design((), sub_workload, hw,
+                                 candidates=candidates, mix=region.mix,
+                                 max_depth=max_depth,
+                                 name=f"hybrid-{region.name}")
+        results.append((region, result))
+        total += result.cost_seconds
+    # root routing cost: one probe per operation through the partitioner
+    ops = sum(sum(r.mix.values()) for r in regions)
+    from repro.core import access
+    from repro.core.synthesis import AccessRecord, CostBreakdown
+    cb = CostBreakdown()
+    fanout = root.fanout or 100
+    cb.add(access.HASH_PROBE if
+           root.get("key_partitioning", ("x",))[1] == "func" else
+           access.RANDOM_ACCESS, fanout * 8, count=float(ops),
+           note="root routing")
+    total += cb.total(hw)
+    return HybridDesign(root, results, total, time.perf_counter() - t0)

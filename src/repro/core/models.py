@@ -1,0 +1,311 @@
+"""Learned cost models for Level-2 access primitives (paper §3, Appendix D).
+
+Model zoo (Table 1): Linear, Log-Linear, Log+LogLog, NLogN, Sum-of-Sigmoids,
+Sum-of-Sum-of-Sigmoids (2-D), Weighted k-NN.  All parametric models are
+fitted **in JAX**: a non-negative least-squares solve (projected Adam with a
+closed-form ridge initializer) for the linear-basis family, and jitted Adam
+gradient descent with the paper's rate-of-change initialization for the
+non-convex sigmoid models.
+
+A fitted model is a (name, params) pair; ``predict`` is pure and jittable so
+the cost synthesizer can evaluate thousands of designs in a batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+# All model fitting happens in float64-ish scale space; latencies are tiny
+# (ns..ms), so standardize y internally for stable optimization.
+_EPS = 1e-12
+
+
+# ---------------------------------------------------------------------------
+# Linear-basis family: f(x) = w . phi(x) + y0 with w >= 0
+# ---------------------------------------------------------------------------
+def _basis_linear(x: Array) -> Array:
+    return jnp.stack([x], axis=-1)
+
+
+def _basis_loglinear(x: Array) -> Array:
+    return jnp.stack([x, jnp.log(x + 1.0)], axis=-1)
+
+
+def _basis_logloglog(x: Array) -> Array:
+    lx = jnp.log(x + 1.0)
+    return jnp.stack([x, lx, jnp.log(lx + 1.0)], axis=-1)
+
+
+def _basis_nlogn(x: Array) -> Array:
+    return jnp.stack([x * jnp.log(x + 1.0), x], axis=-1)
+
+
+_BASES: Dict[str, Callable[[Array], Array]] = {
+    "linear": _basis_linear,
+    "log_linear": _basis_loglinear,
+    "log_loglog": _basis_logloglog,
+    "nlogn": _basis_nlogn,
+}
+
+
+@functools.partial(jax.jit, static_argnames=("basis", "steps"))
+def _fit_nnls(x: Array, y: Array, basis: str, steps: int = 2000
+              ) -> Tuple[Array, Array]:
+    """Non-negative least squares via projected Adam, ridge warm start."""
+    phi = _BASES[basis](x)
+    scale = jnp.maximum(jnp.max(jnp.abs(phi), axis=0), _EPS)
+    yscale = jnp.maximum(jnp.max(jnp.abs(y)), _EPS)
+    phi_n, y_n = phi / scale, y / yscale
+
+    # ridge warm start (may have negative entries -> projected)
+    a = phi_n.T @ phi_n + 1e-6 * jnp.eye(phi.shape[-1])
+    b = phi_n.T @ y_n
+    w = jnp.maximum(jnp.linalg.solve(a, b), 0.0)
+    y0 = jnp.maximum(jnp.mean(y_n - phi_n @ w), 0.0)
+
+    def loss_fn(params):
+        w, y0 = params
+        r = phi_n @ w + y0 - y_n
+        return jnp.mean(r * r)
+
+    lr = 3e-3
+    m = (jnp.zeros_like(w), jnp.zeros_like(y0))
+    v = (jnp.zeros_like(w), jnp.zeros_like(y0))
+
+    def step(carry, i):
+        params, m, v = carry
+        g = jax.grad(loss_fn)(params)
+        m = jax.tree.map(lambda mi, gi: 0.9 * mi + 0.1 * gi, m, g)
+        v = jax.tree.map(lambda vi, gi: 0.999 * vi + 0.001 * gi * gi, v, g)
+        t = i + 1.0
+        params = jax.tree.map(
+            lambda p, mi, vi: jnp.maximum(
+                p - lr * (mi / (1 - 0.9 ** t)) /
+                (jnp.sqrt(vi / (1 - 0.999 ** t)) + 1e-8), 0.0),
+            params, m, v)
+        return (params, m, v), loss_fn(params)
+
+    (params, _, _), _ = jax.lax.scan(step, ((w, y0), m, v),
+                                     jnp.arange(steps, dtype=jnp.float32))
+    w, y0 = params
+    return w * (yscale / scale), y0 * yscale
+
+
+def _predict_basis(params: Tuple[Array, Array], x: Array, basis: str) -> Array:
+    w, y0 = params
+    return _BASES[basis](x) @ w + y0
+
+
+# ---------------------------------------------------------------------------
+# Sum of sigmoids: f(x) = sum_i c_i / (1 + exp(-k_i (log x - x_i))) + y0
+# ---------------------------------------------------------------------------
+def _sigmoid_predict(params: Dict[str, Array], logx: Array) -> Array:
+    c, k, x0, y0 = params["c"], params["k"], params["x0"], params["y0"]
+    z = jax.nn.sigmoid(k[None, :] * (logx[:, None] - x0[None, :]))
+    return z @ c + y0
+
+
+def _sigmoid_init(logx: np.ndarray, y: np.ndarray, k: int) -> Dict[str, np.ndarray]:
+    """Paper's initialization: local maxima of the rate of change -> x_i."""
+    order = np.argsort(logx)
+    lx, ys = logx[order], y[order]
+    dy = np.diff(ys) / np.maximum(np.diff(lx), _EPS)
+    # local maxima of |rate of change|
+    mag = np.abs(dy)
+    idx = np.argsort(mag)[::-1]
+    centers = []
+    for i in idx:
+        x_candidate = 0.5 * (lx[i] + lx[i + 1])
+        if all(abs(x_candidate - c) > 0.5 for c in centers):
+            centers.append(float(x_candidate))
+        if len(centers) == k:
+            break
+    while len(centers) < k:
+        centers.append(float(np.median(lx)))
+    rng = np.random.default_rng(0)
+    return {
+        "c": rng.uniform(0.1, 1.0, size=k).astype(np.float32)
+             * max(float(ys.max() - ys.min()), _EPS) / k,
+        "k": rng.uniform(0.5, 1.0, size=k).astype(np.float32) * 4.0,
+        "x0": np.asarray(sorted(centers), dtype=np.float32),
+        "y0": np.asarray(float(ys[0]), dtype=np.float32),
+    }
+
+
+@functools.partial(jax.jit, static_argnames=("steps",))
+def _fit_sigmoids_gd(logx: Array, y: Array, init: Dict[str, Array],
+                     steps: int = 4000) -> Dict[str, Array]:
+    yscale = jnp.maximum(jnp.max(jnp.abs(y)), _EPS)
+    y_n = y / yscale
+    init = dict(init)
+    init["c"] = init["c"] / yscale
+    init["y0"] = init["y0"] / yscale
+
+    def loss_fn(params):
+        pred = _sigmoid_predict(params, logx)
+        return jnp.mean((pred - y_n) ** 2)
+
+    lr = 2e-2
+    m = jax.tree.map(jnp.zeros_like, init)
+    v = jax.tree.map(jnp.zeros_like, init)
+
+    def step(carry, i):
+        params, m, v = carry
+        g = jax.grad(loss_fn)(params)
+        m = jax.tree.map(lambda mi, gi: 0.9 * mi + 0.1 * gi, m, g)
+        v = jax.tree.map(lambda vi, gi: 0.999 * vi + 0.001 * gi * gi, v, g)
+        t = i + 1.0
+        params = jax.tree.map(
+            lambda p, mi, vi: p - lr * (mi / (1 - 0.9 ** t)) /
+            (jnp.sqrt(vi / (1 - 0.999 ** t)) + 1e-8),
+            params, m, v)
+        # amplitudes and slopes stay non-negative (monotone step functions)
+        params["c"] = jnp.maximum(params["c"], 0.0)
+        params["k"] = jnp.maximum(params["k"], 1e-3)
+        return (params, m, v), None
+
+    (params, _, _), _ = jax.lax.scan(step, (init, m, v),
+                                     jnp.arange(steps, dtype=jnp.float32))
+    params["c"] = params["c"] * yscale
+    params["y0"] = params["y0"] * yscale
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Fitted model wrapper
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class FittedModel:
+    """A trained Level-2 cost model: latency_seconds = predict(x)."""
+
+    kind: str                       # linear|log_linear|log_loglog|nlogn|sigmoids|knn
+    params: Dict[str, np.ndarray]
+    x_range: Tuple[float, float] = (1.0, 1e9)
+
+    def predict(self, x) -> np.ndarray:
+        x = np.atleast_1d(np.asarray(x, dtype=np.float32))
+        x = np.clip(x, self.x_range[0], self.x_range[1])
+        if self.kind in _BASES:
+            w = jnp.asarray(self.params["w"])
+            y0 = jnp.asarray(self.params["y0"])
+            out = _predict_basis((w, y0), jnp.asarray(x), self.kind)
+        elif self.kind == "sigmoids":
+            out = _sigmoid_predict(
+                {k: jnp.asarray(v) for k, v in self.params.items()},
+                jnp.log(jnp.asarray(x) + 1.0))
+        elif self.kind == "sigmoids2d":
+            # f(x, m) = S1(x) + (m - 1) * S2(x)   (sum of sum of sigmoids)
+            m = np.atleast_1d(np.asarray(self.params["_m"], dtype=np.float32))
+            s1 = _sigmoid_predict(
+                {k: jnp.asarray(self.params["s1_" + k]) for k in
+                 ("c", "k", "x0", "y0")}, jnp.log(jnp.asarray(x) + 1.0))
+            s2 = _sigmoid_predict(
+                {k: jnp.asarray(self.params["s2_" + k]) for k in
+                 ("c", "k", "x0", "y0")}, jnp.log(jnp.asarray(x) + 1.0))
+            out = s1 + (jnp.asarray(m) - 1.0) * s2
+        elif self.kind == "knn":
+            xs = self.params["x"]
+            ys = self.params["y"]
+            lx = np.log(x + 1.0)
+            lxs = np.log(xs + 1.0)
+            d = np.abs(lx[:, None] - lxs[None, :]) + 1e-6
+            k = min(4, len(xs))
+            idx = np.argpartition(d, k - 1, axis=1)[:, :k]
+            dk = np.take_along_axis(d, idx, axis=1)
+            wk = 1.0 / dk
+            out = (wk * ys[idx]).sum(axis=1) / wk.sum(axis=1)
+            return np.maximum(np.asarray(out), 0.0)
+        else:
+            raise ValueError(self.kind)
+        return np.maximum(np.asarray(out), 0.0)
+
+    def predict_scalar(self, x: float) -> float:
+        return float(self.predict(np.asarray([x]))[0])
+
+    def to_json(self) -> Dict:
+        return {"kind": self.kind, "x_range": list(self.x_range),
+                "params": {k: np.asarray(v).tolist()
+                           for k, v in self.params.items()}}
+
+    @staticmethod
+    def from_json(obj: Dict) -> "FittedModel":
+        return FittedModel(
+            kind=obj["kind"],
+            params={k: np.asarray(v, dtype=np.float32)
+                    for k, v in obj["params"].items()},
+            x_range=tuple(obj["x_range"]))
+
+
+def fit(kind: str, x: np.ndarray, y: np.ndarray,
+        num_sigmoids: int = 3) -> FittedModel:
+    """Fit one cost model of the given kind to benchmark data (x, y)."""
+    x = np.asarray(x, dtype=np.float32)
+    y = np.asarray(y, dtype=np.float32)
+    x_range = (float(x.min()), float(x.max()))
+    if kind in _BASES:
+        w, y0 = _fit_nnls(jnp.asarray(x), jnp.asarray(y), kind)
+        return FittedModel(kind, {"w": np.asarray(w), "y0": np.asarray(y0)},
+                           x_range)
+    if kind == "sigmoids":
+        logx = np.log(x + 1.0)
+        init = _sigmoid_init(logx, y, num_sigmoids)
+        params = _fit_sigmoids_gd(jnp.asarray(logx), jnp.asarray(y),
+                                  {k: jnp.asarray(v) for k, v in init.items()})
+        return FittedModel(kind, {k: np.asarray(v) for k, v in params.items()},
+                           x_range)
+    if kind == "knn":
+        return FittedModel(kind, {"x": x, "y": y}, x_range)
+    raise ValueError(kind)
+
+
+def fit2d_sigmoids(x: np.ndarray, m: np.ndarray, y: np.ndarray,
+                   num_sigmoids: int = 3) -> FittedModel:
+    """Sum-of-sum-of-sigmoids: f(x, m) = S1(x) + (m-1) S2(x) (bloom filters)."""
+    x = np.asarray(x, dtype=np.float32)
+    m = np.asarray(m, dtype=np.float32)
+    y = np.asarray(y, dtype=np.float32)
+    # fit S1 on the m == min(m) slice, then S2 on the residual slope wrt m
+    m0 = float(m.min())
+    base_mask = m == m0
+    s1 = fit("sigmoids", x[base_mask], y[base_mask] / max(m0, 1.0),
+             num_sigmoids=num_sigmoids)
+    resid_mask = m > m0
+    if resid_mask.any():
+        slope = (y[resid_mask] - s1.predict(x[resid_mask]) * 1.0) / \
+            np.maximum(m[resid_mask] - 1.0, 1.0)
+        s2 = fit("sigmoids", x[resid_mask], np.maximum(slope, 0.0),
+                 num_sigmoids=num_sigmoids)
+    else:
+        s2 = FittedModel("sigmoids", {
+            "c": np.zeros(num_sigmoids, np.float32),
+            "k": np.ones(num_sigmoids, np.float32),
+            "x0": np.zeros(num_sigmoids, np.float32),
+            "y0": np.zeros((), np.float32)})
+    params = {"_m": np.asarray([1.0], np.float32)}
+    for key in ("c", "k", "x0", "y0"):
+        params["s1_" + key] = s1.params[key]
+        params["s2_" + key] = s2.params[key]
+    fm = FittedModel("sigmoids2d", params,
+                     (float(x.min()), float(x.max())))
+    return fm
+
+
+def predict2d(model: FittedModel, x, m) -> np.ndarray:
+    assert model.kind == "sigmoids2d"
+    model.params["_m"] = np.asarray(np.atleast_1d(m), dtype=np.float32)
+    return model.predict(x)
+
+
+def r2_score(y_true: np.ndarray, y_pred: np.ndarray) -> float:
+    y_true = np.asarray(y_true, dtype=np.float64)
+    y_pred = np.asarray(y_pred, dtype=np.float64)
+    ss_res = float(((y_true - y_pred) ** 2).sum())
+    ss_tot = float(((y_true - y_true.mean()) ** 2).sum()) + _EPS
+    return 1.0 - ss_res / ss_tot

@@ -1,0 +1,64 @@
+"""Cost-learning module (paper Fig. 4): benchmark -> fit -> profile.
+
+Runs every Level-2 primitive's micro-benchmark over its size grid on the
+current machine, fits the designated model family with JAX, and assembles a
+:class:`HardwareProfile`.  This is the paper's offline "training" pass —
+"it takes merely a few minutes" (Fig. 7b) — kept that cheap here by bounding
+reps per size.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Iterable, Optional, Tuple
+
+import numpy as np
+
+from repro.core import access
+from repro.core.hardware import HardwareProfile
+from repro.core.models import FittedModel, fit, r2_score
+
+
+def benchmark_primitive(prim: access.Level2Primitive,
+                        sizes: Optional[Iterable[int]] = None,
+                        reps: int = 64) -> Tuple[np.ndarray, np.ndarray]:
+    """Collect (X, Y): size grid vs measured seconds-per-op (Fig. 4 step 1-2)."""
+    xs, ys = [], []
+    for n in (sizes or prim.sizes):
+        # fewer reps on big inputs keeps total training time bounded
+        n_reps = max(int(reps / max(np.log2(n) - 6, 1)), 4)
+        ys.append(prim.benchmark(int(n), n_reps))
+        xs.append(float(n))
+    return np.asarray(xs, np.float64), np.asarray(ys, np.float64)
+
+
+def train_profile(name: str = "HW-container",
+                  primitives: Optional[Iterable[str]] = None,
+                  reps: int = 64,
+                  max_size: Optional[int] = None) -> HardwareProfile:
+    """Train all (or selected) Level-2 primitives on this machine."""
+    models: Dict[str, FittedModel] = {}
+    fit_quality: Dict[str, float] = {}
+    t0 = time.perf_counter()
+    names = list(primitives or access.LEVEL2.keys())
+    for pname in names:
+        prim = access.LEVEL2[pname]
+        sizes = [s for s in prim.sizes if max_size is None or s <= max_size]
+        x, y = benchmark_primitive(prim, sizes=sizes, reps=reps)
+        model = fit(prim.model_kind, x, y)
+        pred = model.predict(x)
+        fit_quality[pname] = r2_score(y, pred)
+        models[pname] = model
+    train_s = time.perf_counter() - t0
+    constants = {"training_seconds": train_s}
+    constants.update({f"r2_{k}": v for k, v in fit_quality.items()})
+    return HardwareProfile(name, models, constants=constants)
+
+
+def quick_profile(name: str = "HW-container-quick") -> HardwareProfile:
+    """Reduced grid used by tests: trains in a few seconds."""
+    models: Dict[str, FittedModel] = {}
+    for pname, prim in access.LEVEL2.items():
+        sizes = prim.sizes[:5]
+        x, y = benchmark_primitive(prim, sizes=sizes, reps=16)
+        models[pname] = fit(prim.model_kind, x, y)
+    return HardwareProfile(name, models)

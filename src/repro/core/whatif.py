@@ -1,0 +1,92 @@
+"""What-if design engine (paper §4).
+
+Answers design questions by re-costing a specification under a varied
+design / hardware / workload, e.g.:
+
+* "What if we change our hardware to HW3?"
+* "Would it be beneficial to add a bloom filter in all B-tree leaves?"
+* "What if the workload becomes skewed?"
+
+Every question is two cost-synthesis invocations (baseline + variation)
+over the same inputs, so answers arrive in milliseconds–seconds.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Optional
+
+from repro.core.elements import DataStructureSpec, Element
+from repro.core.hardware import HardwareProfile
+from repro.core.synthesis import Workload, cost_workload
+
+
+@dataclasses.dataclass
+class WhatIfAnswer:
+    question: str
+    baseline_seconds: float
+    variant_seconds: float
+    elapsed_seconds: float
+
+    @property
+    def speedup(self) -> float:
+        return self.baseline_seconds / max(self.variant_seconds, 1e-30)
+
+    @property
+    def beneficial(self) -> bool:
+        return self.variant_seconds < self.baseline_seconds
+
+    def summary(self) -> str:
+        verdict = "beneficial" if self.beneficial else "detrimental"
+        return (f"{self.question}: {verdict} "
+                f"({self.baseline_seconds:.3e}s -> {self.variant_seconds:.3e}s,"
+                f" {self.speedup:.2f}x, answered in {self.elapsed_seconds:.2f}s)")
+
+
+def _ask(question: str, base_cost: Callable[[], float],
+         var_cost: Callable[[], float]) -> WhatIfAnswer:
+    t0 = time.perf_counter()
+    base = base_cost()
+    var = var_cost()
+    return WhatIfAnswer(question, base, var, time.perf_counter() - t0)
+
+
+def what_if_design(spec: DataStructureSpec, variant: DataStructureSpec,
+                   workload: Workload, hw: HardwareProfile,
+                   mix: Optional[Dict[str, float]] = None) -> WhatIfAnswer:
+    """Same workload + hardware, different design (Fig. 2 leftmost input)."""
+    return _ask(
+        f"design {spec.describe()} -> {variant.describe()}",
+        lambda: cost_workload(spec, workload, hw, mix),
+        lambda: cost_workload(variant, workload, hw, mix))
+
+
+def what_if_hardware(spec: DataStructureSpec, workload: Workload,
+                     hw: HardwareProfile, new_hw: HardwareProfile,
+                     mix: Optional[Dict[str, float]] = None) -> WhatIfAnswer:
+    """Test new hardware without deploying to it (paper §4/§5)."""
+    return _ask(
+        f"hardware {hw.name} -> {new_hw.name}",
+        lambda: cost_workload(spec, workload, hw, mix),
+        lambda: cost_workload(spec, workload, new_hw, mix))
+
+
+def what_if_workload(spec: DataStructureSpec, workload: Workload,
+                     new_workload: Workload, hw: HardwareProfile,
+                     mix: Optional[Dict[str, float]] = None) -> WhatIfAnswer:
+    """E.g. "what if queries skew to 0.01% of the key space?"."""
+    return _ask(
+        f"workload n={workload.n_entries},zipf={workload.zipf_alpha} -> "
+        f"n={new_workload.n_entries},zipf={new_workload.zipf_alpha}",
+        lambda: cost_workload(spec, workload, hw, mix),
+        lambda: cost_workload(spec, new_workload, hw, mix))
+
+
+def add_bloom_filters(spec: DataStructureSpec, num_hashes: int = 4,
+                      num_bits: int = 1 << 14) -> DataStructureSpec:
+    """The paper's running example: add a bloom filter to every leaf."""
+    leaf = spec.terminal.with_values(
+        bloom_filters=("on", num_hashes, num_bits),
+        filters_memory_layout="scatter")
+    return DataStructureSpec(spec.name + "+bloom",
+                             spec.chain[:-1] + (leaf,))

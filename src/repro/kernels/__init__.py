@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the paper's access primitives + attention.
+
+Each subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+public wrapper), ref.py (pure-jnp/numpy oracle).  Validated in interpret
+mode (tests/test_kernels.py sweeps shapes and dtypes against the oracles);
+BlockSpecs tile for VMEM with 128-aligned MXU dims on the real target.
+
+Kernel inventory (the paper's Level-2 access primitives, TPU-adapted, plus
+the framework's attention hot-spot):
+  flash_attention  online-softmax attention, causal block skipping
+  sorted_search    branchless compare-count search (paper: Sorted Search)
+  scan_filter      predicated equal/range scan     (paper: Scan)
+  hash_probe       multiply-shift bucket probe     (paper: Hash Probe)
+  bloom_probe      k-hash bit test                 (paper: Bloom Probe)
+"""

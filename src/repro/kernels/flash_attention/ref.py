@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True,
+                  sm_scale: Optional[float] = None) -> jax.Array:
+    """q: [B, H, Sq, D]; k/v: [B, KH, Skv, D].  Naive softmax attention."""
+    b, h, sq, d = q.shape
+    _, kh, skv, _ = k.shape
+    g = h // kh
+    scale = 1.0 / math.sqrt(d) if sm_scale is None else sm_scale
+    qg = q.reshape(b, kh, g, sq, d).astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bkgid,bkjd->bkgij", qg, kf)
+    if causal:
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(skv)[None, :]
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgij,bkjd->bkgid", p, vf)
+    return out.reshape(b, h, sq, d).astype(q.dtype)

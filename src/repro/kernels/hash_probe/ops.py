@@ -1,0 +1,39 @@
+"""Jit'd wrapper for the hash-probe kernel: padding + Get helper."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.hash_probe.kernel import NOT_FOUND, hash_probe_kernel
+
+#: default multiply-shift coefficient (odd, from a fixed PRNG draw — the
+#: paper draws a randomly per run; determinism helps tests)
+DEFAULT_A = 0x9E3779B1  # Knuth's 32-bit golden ratio, odd
+
+
+def _pad1(x: jax.Array, mult: int, value) -> jax.Array:
+    pad = (-x.shape[0]) % mult
+    if pad == 0:
+        return x
+    return jnp.concatenate([x, jnp.full((pad,), value, x.dtype)])
+
+
+@functools.partial(jax.jit, static_argnames=("a", "s", "block_q", "block_nb",
+                                             "interpret"))
+def hash_probe(table_keys: jax.Array, table_values: jax.Array,
+               queries: jax.Array, s: int, a: int = DEFAULT_A,
+               block_q: int = 256, block_nb: int = 64,
+               interpret: bool = True):
+    """(found mask, values) for point probes against a bucketized table."""
+    q = queries.shape[0]
+    nb = table_keys.shape[0]
+    block_nb = min(block_nb, nb)
+    queries_p = _pad1(queries, block_q, jnp.asarray(NOT_FOUND - 1,
+                                                    queries.dtype))
+    pos, val = hash_probe_kernel(table_keys, table_values, queries_p,
+                                 a=a, s=s, block_q=block_q,
+                                 block_nb=block_nb, interpret=interpret)
+    found = pos[:q] != NOT_FOUND
+    return found, jnp.where(found, val[:q], 0)

@@ -1,0 +1,51 @@
+"""Pure-numpy/jnp oracle for the hash-probe kernel (and table builder)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NOT_FOUND = np.int32(2147483647)
+EMPTY_KEY = np.int32(-2147483648)  # sentinel: never a valid key
+
+
+def multiply_shift_np(x: np.ndarray, a: int, s: int) -> np.ndarray:
+    return ((x.astype(np.uint32) * np.uint32(a | 1)) >>
+            np.uint32(32 - s)).astype(np.int64)
+
+
+def build_table(keys: np.ndarray, values: np.ndarray, s: int, a: int,
+                cap: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Bucket-major [2^s, cap] table; overflowing entries are dropped (the
+    kernel models a fixed-capacity bucket, like the paper's page-5 bucket
+    lists; callers size cap for the load factor)."""
+    nb = 1 << s
+    tkeys = np.full((nb, cap), EMPTY_KEY, np.int32)
+    tvals = np.zeros((nb, cap), np.int32)
+    fill = np.zeros(nb, np.int64)
+    buckets = multiply_shift_np(keys, a, s)
+    for key, val, b in zip(keys.tolist(), values.tolist(), buckets.tolist()):
+        if fill[b] < cap:
+            tkeys[b, fill[b]] = key
+            tvals[b, fill[b]] = val
+            fill[b] += 1
+    return tkeys, tvals
+
+
+def hash_probe_ref(table_keys: np.ndarray, table_values: np.ndarray,
+                   queries: np.ndarray, a: int, s: int):
+    """(flat slot pos | NOT_FOUND, value | 0) per query."""
+    nb, cap = table_keys.shape
+    buckets = multiply_shift_np(np.asarray(queries), a, s)
+    pos = np.full(len(queries), NOT_FOUND, np.int32)
+    val = np.zeros(len(queries), table_values.dtype)
+    for i, (query, b) in enumerate(zip(np.asarray(queries).tolist(),
+                                       buckets.tolist())):
+        row = table_keys[b]
+        hits = np.flatnonzero(row == query)
+        if hits.size:
+            pos[i] = b * cap + hits[0]
+            val[i] = table_values[b, hits[0]]
+    return pos, val

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the scan kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NOT_FOUND = 2147483647
+
+
+def scan_filter_ref(keys: jax.Array, queries: jax.Array,
+                    lo: jax.Array, hi: jax.Array):
+    """(first equal-match position | NOT_FOUND, range-match count)."""
+    eq = keys[None, :] == queries[:, None]
+    idx = jnp.arange(keys.shape[0], dtype=jnp.int32)[None, :]
+    pos = jnp.where(eq, idx, NOT_FOUND).min(axis=1)
+    in_range = (keys[None, :] >= lo[:, None]) & (keys[None, :] < hi[:, None])
+    return pos, in_range.sum(axis=1).astype(jnp.int32)

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the sorted-search kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sorted_search_ref(keys: jax.Array, queries: jax.Array) -> jax.Array:
+    """rank[q] = #{i : keys[i] <= q}  (numpy searchsorted side='right')."""
+    return jnp.searchsorted(keys, queries, side="right").astype(jnp.int32)

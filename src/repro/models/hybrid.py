@@ -1,0 +1,144 @@
+"""Zamba2-style hybrid: Mamba2 backbone + weight-shared attention block.
+
+The Mamba2 layers are scanned with stacked params; the single shared
+attention+MLP block (one param set, Zamba2's signature design) is applied
+every ``shared_attn_every`` layers via ``lax.cond`` inside the scan —
+weights are loop-invariant, so SPMD sharding sees one copy.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.parallel import ctx
+
+Params = Dict[str, Any]
+
+
+def n_shared_applications(cfg: ArchConfig) -> int:
+    k = max(cfg.shared_attn_every, 1)
+    return (cfg.n_layers + k - 1) // k
+
+
+def init_params(key, cfg: ArchConfig) -> Params:
+    keys = jax.random.split(key, 5)
+    stacked = jax.vmap(lambda k: {
+        "ln": L.init_rmsnorm(cfg.d_model, cfg.pdtype()),
+        "mamba": S.init_mamba2(k, cfg),
+    })(jax.random.split(keys[0], cfg.n_layers))
+    shared = {
+        "ln1": L.init_rmsnorm(cfg.d_model, cfg.pdtype()),
+        "attn": L.init_attention(keys[1], cfg),
+        "ln2": L.init_rmsnorm(cfg.d_model, cfg.pdtype()),
+        "mlp": L.init_mlp(keys[2], cfg),
+    }
+    return {
+        "embed": L.init_embed(keys[3], cfg),
+        "layers": stacked,
+        "shared": shared,
+        "final_norm": L.init_rmsnorm(cfg.d_model, cfg.pdtype()),
+    }
+
+
+def _shared_block(shared: Params, x: jax.Array, cfg: ArchConfig,
+                  positions: jax.Array) -> jax.Array:
+    x = x + L.attention(shared["attn"],
+                        L.rmsnorm(shared["ln1"], x, cfg.norm_eps),
+                        cfg, positions)
+    return x + L.mlp(shared["mlp"],
+                     L.rmsnorm(shared["ln2"], x, cfg.norm_eps), cfg)
+
+
+def forward(params: Params, tokens: jax.Array, cfg: ArchConfig,
+            embeds: Optional[jax.Array] = None,
+            positions: Optional[jax.Array] = None,
+            hidden: bool = False) -> Tuple[jax.Array, jax.Array]:
+    x = L.embed(params["embed"], tokens, cfg) if embeds is None else \
+        embeds.astype(cfg.cdtype())
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    shared = params["shared"]
+    k = max(cfg.shared_attn_every, 1)
+
+    def body(carry, inputs):
+        x = carry
+        i, layer = inputs
+        x = x + S.mamba2_forward(layer["mamba"],
+                                 L.rmsnorm(layer["ln"], x, cfg.norm_eps),
+                                 cfg)
+        x = jax.lax.cond(i % k == 0,
+                         lambda x: _shared_block(shared, x, cfg, positions),
+                         lambda x: x, x)
+        return ctx.constrain_residual(x), jnp.zeros((), jnp.float32)
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = L.scan_layers(cfg, body, x,
+                         (jnp.arange(cfg.n_layers), params["layers"]))
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if hidden:
+        return x, jnp.zeros((), jnp.float32)
+    return L.unembed(params["embed"], x, cfg), jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Decode: python-unrolled layer loop (heterogeneous per-layer state).
+# Mamba states are O(1) in context; only the shared-attn applications carry
+# KV caches ([n_apps, B, S, K, hd] — sequence dim shardable for long_500k).
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> Params:
+    hd = cfg.resolved_head_dim
+    n_apps = n_shared_applications(cfg)
+    mamba_states = jax.vmap(lambda _: S.mamba2_init_state(cfg, batch))(
+        jnp.arange(cfg.n_layers))
+    return {
+        "mamba": mamba_states,
+        "k": jnp.zeros((n_apps, batch, max_len, cfg.n_kv_heads, hd),
+                       cfg.cdtype()),
+        "v": jnp.zeros((n_apps, batch, max_len, cfg.n_kv_heads, hd),
+                       cfg.cdtype()),
+    }
+
+
+def decode_step(params: Params, cache: Params, token: jax.Array,
+                pos: jax.Array, cfg: ArchConfig
+                ) -> Tuple[jax.Array, Params]:
+    x = L.embed(params["embed"], token[:, None], cfg)
+    max_len = cache["k"].shape[2]
+    k_mamba = max(cfg.shared_attn_every, 1)
+    shared = params["shared"]
+    new_mamba: List[Params] = []
+    k_caches, v_caches = [], []
+    app = 0
+    for i in range(cfg.n_layers):
+        layer = jax.tree.map(lambda p, i=i: p[i], params["layers"])
+        state = jax.tree.map(lambda p, i=i: p[i], cache["mamba"])
+        h = L.rmsnorm(layer["ln"], x, cfg.norm_eps)
+        y, state = S.mamba2_step(layer["mamba"], h, state, cfg)
+        x = x + y
+        new_mamba.append(state)
+        if i % k_mamba == 0:
+            h = L.rmsnorm(shared["ln1"], x, cfg.norm_eps)
+            y, k_new, v_new = L.decode_attention(
+                shared["attn"], h, cfg, cache["k"][app], cache["v"][app],
+                pos, max_len)
+            x = x + y
+            x = x + L.mlp(shared["mlp"],
+                          L.rmsnorm(shared["ln2"], x, cfg.norm_eps), cfg)
+            k_caches.append(k_new)
+            v_caches.append(v_new)
+            app += 1
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], x, cfg)
+    new_cache = {
+        "mamba": jax.tree.map(lambda *xs: jnp.stack(xs), *new_mamba),
+        "k": jnp.stack(k_caches),
+        "v": jnp.stack(v_caches),
+    }
+    return logits[:, 0], new_cache

@@ -1,0 +1,304 @@
+"""Shared building blocks: RMSNorm, RoPE, GQA attention, SwiGLU MLP.
+
+Pure-functional JAX: params are nested dicts of arrays; every forward is a
+function of (params, inputs).  Layer stacks are scanned with stacked
+params (leading layer axis) for small HLO and fast 512-device compiles.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.parallel import ctx
+
+Params = Dict[str, Any]
+
+
+def normal(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def scan_layers(cfg: ArchConfig, body, init, xs, length: Optional[int] = None):
+    """lax.scan over the layer stack; fully unrolled for dry-run cost probes
+    (XLA HloCostAnalysis counts while bodies once — see launch/dryrun.py)."""
+    n = length if length is not None else cfg.n_layers
+    unroll = n if cfg.scan_unroll else 1
+    return jax.lax.scan(body, init, xs, unroll=max(unroll, 1))
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+def init_rmsnorm(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (llama-style rotate-half)
+# ---------------------------------------------------------------------------
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)  # [head_dim/2]
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, head_dim]; positions: broadcastable to [..., S]."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)                    # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs    # [..,S,hd/2]
+    cos = jnp.cos(angles)[..., None, :]                          # [..,S,1,hd/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention (train/prefill full-sequence path + one-token decode path)
+# ---------------------------------------------------------------------------
+def init_attention(key, cfg: ArchConfig, d_model: Optional[int] = None
+                   ) -> Params:
+    d = d_model or cfg.d_model
+    hd = cfg.resolved_head_dim
+    h, k = cfg.n_heads, cfg.n_kv_heads
+    keys = jax.random.split(key, 4)
+    scale = 1.0 / math.sqrt(d)
+    out_scale = 1.0 / math.sqrt(h * hd * 2 * cfg.n_layers)
+    params = {
+        "wq": normal(keys[0], (d, h, hd), scale, cfg.pdtype()),
+        "wk": normal(keys[1], (d, k, hd), scale, cfg.pdtype()),
+        "wv": normal(keys[2], (d, k, hd), scale, cfg.pdtype()),
+        "wo": normal(keys[3], (h, hd, d), out_scale, cfg.pdtype()),
+    }
+    if cfg.qkv_bias:
+        params["bq"] = jnp.zeros((h, hd), cfg.pdtype())
+        params["bk"] = jnp.zeros((k, hd), cfg.pdtype())
+        params["bv"] = jnp.zeros((k, hd), cfg.pdtype())
+    return params
+
+
+def _qkv(params: Params, x: jax.Array, cfg: ArchConfig,
+         positions: jax.Array, rope: bool = True
+         ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    dtype = cfg.cdtype()
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dtype))
+    if "bq" in params:
+        q = q + params["bq"].astype(dtype)
+        k = k + params["bk"].astype(dtype)
+        v = v + params["bv"].astype(dtype)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return (ctx.constrain_heads(q), ctx.constrain_heads(k),
+            ctx.constrain_heads(v))
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      causal: bool = True,
+                      q_chunk: int = 512, kv_chunk: int = 1024,
+                      q_offset: int = 0, unroll: bool = False) -> jax.Array:
+    """Flash-style online-softmax attention in pure jnp (O(S·chunk) memory).
+
+    q: [B, Sq, H, hd]; k/v: [B, Skv, K, hd] with H % K == 0.  This is both
+    the dry-run lowering path (bounded HBM temps at 32k+ context) and the
+    oracle for the Pallas kernel (kernels/flash_attention/ref.py wraps it).
+    """
+    b, sq, h, hd = q.shape
+    _, skv, kh, _ = k.shape
+    g = h // kh
+    scale = 1.0 / math.sqrt(hd)
+    q = q.reshape(b, sq, kh, g, hd) * scale
+
+    if unroll:
+        # dry-run cost probes: HloCostAnalysis counts while bodies once, so
+        # the scans below must be unrolled — but the *algorithm* must stay
+        # chunked (a one-shot S^2 softmax would charge quadratic HBM bytes
+        # the real pipeline never moves).  Cap the body count at ~8x8 by
+        # widening chunks for long sequences.
+        q_chunk = max(q_chunk, sq // 8)
+        kv_chunk = max(kv_chunk, skv // 8)
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, skv)
+    nq = sq // q_chunk if sq % q_chunk == 0 else -1
+    nkv = skv // kv_chunk if skv % kv_chunk == 0 else -1
+    if nq < 0 or nkv < 0:  # ragged fallback (tests with odd lengths)
+        scores = jnp.einsum("bikgh,bjkh->bkgij", q, k).astype(jnp.float32)
+        if causal:
+            qi = jnp.arange(sq)[:, None] + q_offset
+            kj = jnp.arange(skv)[None, :]
+            scores = jnp.where(qi >= kj, scores, -jnp.inf)
+        probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        out = jnp.einsum("bkgij,bjkh->bikgh", probs, v)
+        return out.reshape(b, sq, h, hd)
+
+    qc = q.reshape(b, nq, q_chunk, kh, g, hd)
+    kc = k.reshape(b, nkv, kv_chunk, kh, hd)
+    vc = v.reshape(b, nkv, kv_chunk, kh, hd)
+
+    def per_q_chunk(qi, q_blk):
+        # online softmax over kv chunks
+        acc0 = jnp.zeros((b, q_chunk, kh, g, hd), jnp.float32)
+        m0 = jnp.full((b, q_chunk, kh, g), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, q_chunk, kh, g), jnp.float32)
+
+        def body(carry, inputs):
+            acc, m, l = carry
+            kj, k_blk, v_blk = inputs
+            s = jnp.einsum("bikgh,bjkh->bikgj", q_blk,
+                           k_blk).astype(jnp.float32)
+            if causal:
+                qpos = qi * q_chunk + jnp.arange(q_chunk)[:, None] + q_offset
+                kpos = kj * kv_chunk + jnp.arange(kv_chunk)[None, :]
+                mask = qpos >= kpos
+                s = jnp.where(mask[None, :, None, None, :], s, -jnp.inf)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            # guard fully-masked rows
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(jnp.isfinite(s), p, 0.0)
+            corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+            l = l * corr + p.sum(axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bikgj,bjkh->bikgh", p.astype(v_blk.dtype),
+                v_blk).astype(jnp.float32)
+            return (acc, m_new, l), None
+
+        ks = jnp.arange(nkv)
+        (acc, m, l), _ = jax.lax.scan(
+            body, (acc0, m0, l0),
+            (ks, jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0)),
+            unroll=nkv if unroll else 1)
+        return acc / jnp.maximum(l[..., None], 1e-30)
+
+    def outer(_, args):
+        return None, per_q_chunk(*args)
+
+    _, out = jax.lax.scan(outer, None,
+                          (jnp.arange(nq), jnp.moveaxis(qc, 1, 0)),
+                          unroll=nq if unroll else 1)
+    out = jnp.moveaxis(out, 0, 1)  # [B, nq, qc, kh, g, hd]
+    return out.reshape(b, sq, h, hd).astype(v.dtype)
+
+
+def attention(params: Params, x: jax.Array, cfg: ArchConfig,
+              positions: jax.Array, causal: bool = True,
+              kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+              rope: bool = True) -> jax.Array:
+    """Full-sequence attention. ``kv`` overrides keys/values (cross-attn)."""
+    dtype = cfg.cdtype()
+    q, k, v = _qkv(params, x, cfg, positions, rope=rope)
+    if kv is not None:
+        k, v = kv
+        causal = False
+    if cfg.attn_impl == "flash":
+        from repro.kernels.flash_attention.ops import flash_attention_bshd
+        out = flash_attention_bshd(q, k, v, causal=causal)
+    elif cfg.attn_impl == "skip":
+        # §Perf ablation probe: identity in place of the score/PV chain —
+        # the bytes/FLOPs delta vs "xla" measures the attention-internal
+        # HBM traffic a VMEM-resident flash kernel eliminates
+        out = q
+    else:
+        out = chunked_attention(q, k, v, causal=causal,
+                                unroll=cfg.scan_unroll)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dtype))
+
+
+def decode_attention(params: Params, x: jax.Array, cfg: ArchConfig,
+                     k_cache: jax.Array, v_cache: jax.Array,
+                     pos: jax.Array, cache_len: int
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode: x [B, 1, D]; caches [B, S, K, hd]; pos [B]."""
+    dtype = cfg.cdtype()
+    q, k, v = _qkv(params, x, cfg, pos[:, None])
+    # insert new kv at per-batch position
+    b = x.shape[0]
+    k_cache = _scatter_time(k_cache, k, pos)
+    v_cache = _scatter_time(v_cache, v, pos)
+    h, kh = cfg.n_heads, cfg.n_kv_heads
+    g = h // kh
+    hd = cfg.resolved_head_dim
+    qg = q.reshape(b, 1, kh, g, hd) / math.sqrt(hd)
+    scores = jnp.einsum("bikgh,bjkh->bkgij", qg,
+                        k_cache.astype(dtype)).astype(jnp.float32)
+    t = jnp.arange(cache_len)
+    mask = t[None, :] <= pos[:, None]                     # [B, S]
+    scores = jnp.where(mask[:, None, None, None, :], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1).astype(dtype)
+    out = jnp.einsum("bkgij,bjkh->bikgh", probs, v_cache.astype(dtype))
+    out = out.reshape(b, 1, h, hd)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dtype))
+    return y, k_cache, v_cache
+
+
+def _scatter_time(cache: jax.Array, new: jax.Array, pos: jax.Array
+                  ) -> jax.Array:
+    """cache [B,S,...] <- new [B,1,...] at per-batch position ``pos``."""
+    s = cache.shape[1]
+    onehot = jax.nn.one_hot(pos, s, dtype=cache.dtype)    # [B, S]
+    onehot = onehot.reshape(onehot.shape + (1,) * (cache.ndim - 2))
+    return cache * (1 - onehot) + new.astype(cache.dtype) * onehot
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP (and plain MLP when d_ff holds GELU stacks — seamless uses GLU
+# too in practice; we use SwiGLU uniformly, noted in DESIGN.md)
+# ---------------------------------------------------------------------------
+def init_mlp(key, cfg: ArchConfig, d_ff: Optional[int] = None) -> Params:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    keys = jax.random.split(key, 3)
+    scale = 1.0 / math.sqrt(d)
+    out_scale = 1.0 / math.sqrt(f * 2 * cfg.n_layers)
+    return {
+        "w_gate": normal(keys[0], (d, f), scale, cfg.pdtype()),
+        "w_up": normal(keys[1], (d, f), scale, cfg.pdtype()),
+        "w_down": normal(keys[2], (f, d), out_scale, cfg.pdtype()),
+    }
+
+
+def mlp(params: Params, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    dtype = cfg.cdtype()
+    gate = ctx.constrain_ffn(
+        jnp.einsum("bsd,df->bsf", x, params["w_gate"].astype(dtype)))
+    up = ctx.constrain_ffn(
+        jnp.einsum("bsd,df->bsf", x, params["w_up"].astype(dtype)))
+    return jnp.einsum("bsf,fd->bsd", jax.nn.silu(gate) * up,
+                      params["w_down"].astype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+def init_embed(key, cfg: ArchConfig) -> Params:
+    keys = jax.random.split(key, 2)
+    params = {"tok": normal(keys[0], (cfg.vocab_size, cfg.d_model), 0.02,
+                            cfg.pdtype())}
+    if not cfg.tie_embeddings:
+        params["head"] = normal(keys[1], (cfg.d_model, cfg.vocab_size),
+                                1.0 / math.sqrt(cfg.d_model), cfg.pdtype())
+    return params
+
+
+def embed(params: Params, tokens: jax.Array, cfg: ArchConfig) -> jax.Array:
+    return params["tok"].astype(cfg.cdtype())[tokens]
+
+
+def unembed(params: Params, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    dtype = cfg.cdtype()
+    if cfg.tie_embeddings:
+        return jnp.einsum("bsd,vd->bsv", x, params["tok"].astype(dtype))
+    return jnp.einsum("bsd,dv->bsv", x, params["head"].astype(dtype))

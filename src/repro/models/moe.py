@@ -1,0 +1,97 @@
+"""Mixture-of-Experts layer: top-k routing with capacity-bounded dispatch.
+
+Gather/scatter dispatch (sort-free): per expert, the assigned token ids are
+extracted with a top-capacity selection, tokens gathered to [E, C, D],
+expert FFNs applied batched over the expert axis (shardable along the
+"model"/expert axis = EP), and outputs combined with a scatter-add weighted
+by the router gates.  FLOPs match the active-parameter count
+(top_k · d · d_ff per token), unlike dense all-experts compute.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import normal
+from repro.parallel import ctx
+
+Params = Dict[str, Any]
+
+
+def init_moe(key, cfg: ArchConfig) -> Params:
+    assert cfg.moe is not None
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.moe.n_experts
+    keys = jax.random.split(key, 4)
+    scale = 1.0 / math.sqrt(d)
+    out_scale = 1.0 / math.sqrt(f * 2 * cfg.n_layers)
+    return {
+        "router": normal(keys[0], (d, e), scale, jnp.float32),
+        "w_gate": normal(keys[1], (e, d, f), scale, cfg.pdtype()),
+        "w_up": normal(keys[2], (e, d, f), scale, cfg.pdtype()),
+        "w_down": normal(keys[3], (e, f, d), out_scale, cfg.pdtype()),
+    }
+
+
+def capacity(n_tokens: int, cfg: ArchConfig) -> int:
+    moe = cfg.moe
+    c = int(math.ceil(n_tokens * moe.top_k * moe.capacity_factor /
+                      moe.n_experts))
+    return max(min(c, n_tokens), 1)
+
+
+def moe_ffn(params: Params, x: jax.Array, cfg: ArchConfig
+            ) -> Tuple[jax.Array, jax.Array]:
+    """x: [B, S, D] -> (y, aux_loss). Capacity-dropped tokens pass through
+    (residual connection supplies identity)."""
+    moe = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    e, k = moe.n_experts, moe.top_k
+    c = capacity(t, cfg)
+    dtype = cfg.cdtype()
+    xt = x.reshape(t, d)
+
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                    # [T, E]
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)              # [T, k]
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # assignment mask and per-expert gate weight
+    assign = jax.nn.one_hot(gate_idx, e, dtype=jnp.float32)    # [T, k, E]
+    mask = assign.sum(axis=1)                                  # [T, E]
+    combine_w = (assign * gate_vals[..., None]).sum(axis=1)    # [T, E]
+
+    # load-balancing auxiliary loss (Switch-style)
+    density = mask.mean(axis=0)
+    density_proxy = probs.mean(axis=0)
+    aux_loss = (density * density_proxy).sum() * (e ** 2) / e
+
+    # top-C token selection per expert: rank tokens by assignment priority
+    # (mask desc, then token order) — one argsort of [E, T]
+    priority = mask.T * (t * 2.0) - jnp.arange(t, dtype=jnp.float32)[None, :]
+    token_ids = jax.lax.top_k(priority, c)[1]                  # [E, C]
+    gathered_mask = jnp.take_along_axis(mask.T, token_ids, axis=1)  # [E, C]
+
+    xg = xt[token_ids.reshape(-1)].reshape(e, c, d).astype(dtype)
+    xg = xg * gathered_mask[..., None].astype(dtype)           # zero padding
+    # expert-parallel dispatch: [E, C, D] sharded on the expert axis — XLA
+    # lowers the gather/scatter across it to the MoE all-to-all pattern
+    xg = ctx.constrain_experts(xg)
+    gate = jnp.einsum("ecd,edf->ecf", xg, params["w_gate"].astype(dtype))
+    up = jnp.einsum("ecd,edf->ecf", xg, params["w_up"].astype(dtype))
+    out = ctx.constrain_experts(
+        jnp.einsum("ecf,efd->ecd", jax.nn.silu(gate) * up,
+                   params["w_down"].astype(dtype)))
+
+    # combine: scatter-add expert outputs weighted by router gates
+    w = jnp.take_along_axis(combine_w.T, token_ids, axis=1)    # [E, C]
+    flat_out = (out * w[..., None].astype(dtype)).reshape(e * c, d)
+    y = jnp.zeros((t, d), dtype).at[token_ids.reshape(-1)].add(
+        flat_out, mode="drop")
+    return y.reshape(b, s, d), aux_loss.astype(jnp.float32)

@@ -1,0 +1,73 @@
+"""Model registry: family dispatch for init / forward / decode.
+
+The single entry point the trainer, server and dry-run use:
+
+    model = registry.build(cfg)
+    params = model.init(rng)
+    logits, aux = model.forward(params, tokens, embeds=...)
+    cache = model.init_cache(batch, max_len)
+    logits, cache = model.decode_step(params, cache, token, pos)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import encdec, hybrid, transformer, xlstm
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    _init: Callable
+    _forward: Callable
+    _init_cache: Callable
+    _decode_step: Callable
+    _prefill: Optional[Callable] = None
+
+    def init(self, rng) -> Params:
+        return self._init(rng, self.cfg)
+
+    def init_abstract(self, rng=None) -> Params:
+        """Shapes without allocation (dry-run path)."""
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        return jax.eval_shape(lambda k: self._init(k, self.cfg), rng)
+
+    def forward(self, params, tokens, embeds=None, hidden=False
+                ) -> Tuple[jax.Array, jax.Array]:
+        return self._forward(params, tokens, self.cfg, embeds=embeds,
+                             hidden=hidden)
+
+    def init_cache(self, batch: int, max_len: int, **kw) -> Params:
+        return self._init_cache(self.cfg, batch, max_len, **kw)
+
+    def decode_step(self, params, cache, token, pos):
+        return self._decode_step(params, cache, token, pos, self.cfg)
+
+    def prefill(self, params, tokens, max_len, embeds=None):
+        assert self._prefill is not None
+        return self._prefill(params, tokens, self.cfg, max_len,
+                             embeds=embeds)
+
+
+def build(cfg: ArchConfig) -> Model:
+    if cfg.family in ("dense", "moe", "vlm"):
+        return Model(cfg, transformer.init_params, transformer.forward,
+                     transformer.init_cache, transformer.decode_step,
+                     transformer.prefill)
+    if cfg.family == "hybrid":
+        return Model(cfg, hybrid.init_params, hybrid.forward,
+                     hybrid.init_cache, hybrid.decode_step)
+    if cfg.family == "ssm":
+        return Model(cfg, xlstm.init_params, xlstm.forward,
+                     xlstm.init_cache, xlstm.decode_step)
+    if cfg.family == "audio":
+        return Model(cfg, encdec.init_params, encdec.forward,
+                     encdec.init_cache, encdec.decode_step)
+    raise ValueError(f"unknown family {cfg.family!r}")

@@ -1,0 +1,403 @@
+"""State-space / recurrent blocks: Mamba2 (chunked SSD), mLSTM, sLSTM.
+
+TPU adaptation notes (DESIGN.md §5): the Mamba2 CUDA kernel's chunked SSD
+algorithm maps naturally onto the MXU — intra-chunk work is batched
+[chunk x chunk] matmuls, inter-chunk work is a short ``lax.scan`` over
+chunk states.  Chunk length defaults to 128 (MXU-aligned).  The same
+chunked machinery drives the mLSTM (matrix-memory, per-head keys/queries);
+the sLSTM is inherently sequential (its own paper says so) and runs as a
+``lax.scan`` over time.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import normal, rmsnorm
+from repro.parallel import ctx
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Shared chunked linear-recurrence scan:
+#   h_t = exp(loga_t) h_{t-1} + B_t (x_t)^T ;  y_t = C_t . h_t
+# shapes: x [b,s,h,p], B/C [b,s,h,n], loga [b,s,h]
+# ---------------------------------------------------------------------------
+def chunked_linear_scan(x: jax.Array, B: jax.Array, C: jax.Array,
+                        loga: jax.Array, chunk: int,
+                        h0: Optional[jax.Array] = None,
+                        unroll: bool = False
+                        ) -> Tuple[jax.Array, jax.Array]:
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    chunk = min(chunk, s)
+    if s % chunk != 0:  # pad to a chunk multiple (masked by zero decay-in)
+        pad = chunk - s % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        loga = jnp.pad(loga, ((0, 0), (0, pad), (0, 0)))
+        s_pad = s + pad
+    else:
+        s_pad = s
+    nc = s_pad // chunk
+    xc = x.reshape(b, nc, chunk, h, p)
+    Bc = B.reshape(b, nc, chunk, h, n)
+    Cc = C.reshape(b, nc, chunk, h, n)
+    la = loga.reshape(b, nc, chunk, h).astype(jnp.float32)
+
+    cum = jnp.cumsum(la, axis=2)                       # [b,nc,cl,h]
+    total = cum[:, :, -1]                              # [b,nc,h]
+
+    # --- intra-chunk (quadratic within chunk, like attention) -------------
+    G = jnp.einsum("bcihn,bcjhn->bchij", Cc, Bc)       # [b,nc,h,cl,cl]
+    ii = jnp.arange(chunk)
+    causal = ii[:, None] >= ii[None, :]
+    cum_t = cum.transpose(0, 1, 3, 2)                  # [b,nc,h,cl]
+    decay = jnp.exp(jnp.clip(cum_t[:, :, :, :, None] -
+                             cum_t[:, :, :, None, :],
+                             -60.0, 0.0))               # [b,nc,h,cl,cl]
+    M = (G.astype(jnp.float32) * decay *
+         causal[None, None, None]).astype(x.dtype)
+    y_intra = jnp.einsum("bchij,bcjhp->bcihp", M, xc)
+
+    # --- chunk states ------------------------------------------------------
+    w_out = jnp.exp(jnp.clip(total[:, :, None, :] - cum, -60.0, 0.0))
+    states = jnp.einsum("bcjh,bcjhn,bcjhp->bchnp",
+                        w_out.astype(x.dtype), Bc, xc)  # [b,nc,h,n,p]
+
+    # --- inter-chunk recurrence over nc ------------------------------------
+    if h0 is None:
+        h0 = jnp.zeros((b, h, n, p), jnp.float32)
+
+    def body(carry, inp):
+        state_c, total_c = inp
+        h_prev = carry
+        h_new = jnp.exp(jnp.clip(total_c, -60.0, 0.0))[..., None, None] * \
+            h_prev + state_c.astype(jnp.float32)
+        return h_new, h_prev
+
+    # probe unroll capped at 32 bodies: the inter-chunk recurrence is a few
+    # elementwise ops per chunk (negligible FLOPs next to the fully-counted
+    # intra-chunk matmuls), and a 500k-token probe would otherwise unroll
+    # 4096 bodies per layer (compile blow-up)
+    h_final, h_prevs = jax.lax.scan(
+        body, h0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(total, 1, 0)),
+        unroll=min(nc, 32) if unroll else 1)
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)              # [b,nc,h,n,p]
+
+    # --- inter-chunk contribution ------------------------------------------
+    w_in = jnp.exp(jnp.clip(cum, -60.0, 0.0))
+    y_inter = jnp.einsum("bcihn,bchnp,bcih->bcihp", Cc,
+                         h_prevs.astype(x.dtype),
+                         w_in.astype(x.dtype))
+    y = (y_intra + y_inter).reshape(b, s_pad, h, p)[:, :s]
+    return y, h_final
+
+
+def linear_scan_step(h: jax.Array, x: jax.Array, B: jax.Array, C: jax.Array,
+                     loga: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """One decode step. h [b,hh,n,p]; x [b,hh,p]; B/C [b,hh,n]; loga [b,hh]."""
+    decay = jnp.exp(jnp.clip(loga, -60.0, 0.0))[..., None, None]
+    h = decay * h.astype(jnp.float32) + jnp.einsum(
+        "bhn,bhp->bhnp", B, x).astype(jnp.float32)
+    y = jnp.einsum("bhn,bhnp->bhp", C.astype(jnp.float32), h)
+    return h, y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+def mamba2_dims(cfg: ArchConfig) -> Tuple[int, int, int, int]:
+    d_in = cfg.ssm_expand * cfg.d_model
+    headdim = 64
+    n_heads = d_in // headdim
+    return d_in, headdim, n_heads, cfg.ssm_state
+
+
+CONV_WIDTH = 4
+
+
+def init_mamba2(key, cfg: ArchConfig) -> Params:
+    d = cfg.d_model
+    d_in, hd, h, n = mamba2_dims(cfg)
+    conv_dim = d_in + 2 * n
+    keys = jax.random.split(key, 5)
+    scale = 1.0 / math.sqrt(d)
+    return {
+        # projections to z (gate), x, B, C, dt
+        "in_proj": normal(keys[0], (d, 2 * d_in + 2 * n + h), scale,
+                          cfg.pdtype()),
+        "conv_w": normal(keys[1], (CONV_WIDTH, conv_dim), 0.1, cfg.pdtype()),
+        "conv_b": jnp.zeros((conv_dim,), cfg.pdtype()),
+        "A_log": jnp.zeros((h,), jnp.float32),
+        "D_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm_scale": jnp.ones((d_in,), cfg.pdtype()),
+        "out_proj": normal(keys[2], (d_in, d),
+                           1.0 / math.sqrt(2 * d_in * cfg.n_layers),
+                           cfg.pdtype()),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv1d. x [b,s,c]; w [W,c]; state [b,W-1,c]."""
+    width = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], width - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None]
+              for i in range(width))
+    new_state = xp[:, -(width - 1):]
+    return jax.nn.silu(out + b[None, None]), new_state
+
+
+def _mamba2_project(params: Params, x: jax.Array, cfg: ArchConfig):
+    d_in, hd, h, n = mamba2_dims(cfg)
+    dtype = cfg.cdtype()
+    proj = jnp.einsum("bsd,de->bse", x, params["in_proj"].astype(dtype))
+    z, xin, Bv, Cv, dt = jnp.split(
+        proj, [d_in, 2 * d_in, 2 * d_in + n, 2 * d_in + 2 * n], axis=-1)
+    return ctx.constrain_ffn(z), ctx.constrain_ffn(xin), Bv, Cv, dt
+
+
+def mamba2_forward(params: Params, x: jax.Array, cfg: ArchConfig
+                   ) -> jax.Array:
+    b, s, _ = x.shape
+    d_in, hd, h, n = mamba2_dims(cfg)
+    dtype = cfg.cdtype()
+    z, xin, Bv, Cv, dt = _mamba2_project(params, x, cfg)
+    conv_in = jnp.concatenate([xin, Bv, Cv], axis=-1)
+    conv_out, _ = _causal_conv(conv_in, params["conv_w"].astype(dtype),
+                               params["conv_b"].astype(dtype))
+    xin, Bv, Cv = jnp.split(conv_out, [d_in, d_in + n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         params["dt_bias"][None, None])      # [b,s,h]
+    a = -jnp.exp(params["A_log"])                            # [h]
+    loga = dt * a[None, None]
+    xh = xin.reshape(b, s, h, hd) * dt[..., None].astype(dtype)
+    Bh = jnp.broadcast_to(Bv[:, :, None, :], (b, s, h, n)).astype(dtype)
+    Ch = jnp.broadcast_to(Cv[:, :, None, :], (b, s, h, n)).astype(dtype)
+    y, _ = chunked_linear_scan(xh, Bh, Ch, loga, cfg.ssm_chunk,
+                               unroll=cfg.scan_unroll)
+    y = y + params["D_skip"][None, None, :, None].astype(dtype) * \
+        xin.reshape(b, s, h, hd)
+    y = y.reshape(b, s, d_in) * jax.nn.silu(z)
+    y = rmsnorm({"scale": params["norm_scale"]}, y, cfg.norm_eps)
+    return jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(dtype))
+
+
+def mamba2_init_state(cfg: ArchConfig, batch: int) -> Params:
+    d_in, hd, h, n = mamba2_dims(cfg)
+    conv_dim = d_in + 2 * n
+    return {"h": jnp.zeros((batch, h, n, hd), jnp.float32),
+            "conv": jnp.zeros((batch, CONV_WIDTH - 1, conv_dim),
+                              cfg.cdtype())}
+
+
+def mamba2_step(params: Params, x: jax.Array, state: Params,
+                cfg: ArchConfig) -> Tuple[jax.Array, Params]:
+    """One-token decode. x [b,1,d]."""
+    b = x.shape[0]
+    d_in, hd, h, n = mamba2_dims(cfg)
+    dtype = cfg.cdtype()
+    z, xin, Bv, Cv, dt = _mamba2_project(params, x, cfg)
+    conv_in = jnp.concatenate([xin, Bv, Cv], axis=-1)
+    conv_out, conv_state = _causal_conv(
+        conv_in, params["conv_w"].astype(dtype),
+        params["conv_b"].astype(dtype), state["conv"])
+    xin, Bv, Cv = jnp.split(conv_out, [d_in, d_in + n], axis=-1)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) +
+                         params["dt_bias"][None])            # [b,h]
+    a = -jnp.exp(params["A_log"])
+    loga = dt * a[None]
+    xh = xin[:, 0].reshape(b, h, hd) * dt[..., None].astype(dtype)
+    Bh = jnp.broadcast_to(Bv[:, 0, None, :], (b, h, n)).astype(dtype)
+    Ch = jnp.broadcast_to(Cv[:, 0, None, :], (b, h, n)).astype(dtype)
+    h_new, y = linear_scan_step(state["h"], xh, Bh, Ch, loga)
+    y = y + params["D_skip"][None, :, None].astype(dtype) * \
+        xin[:, 0].reshape(b, h, hd)
+    y = y.reshape(b, 1, d_in) * jax.nn.silu(z)
+    y = rmsnorm({"scale": params["norm_scale"]}, y, cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(dtype))
+    return out, {"h": h_new, "conv": conv_state}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block (xLSTM): matrix memory C += i v k^T with forget decay
+# ---------------------------------------------------------------------------
+def xlstm_dims(cfg: ArchConfig) -> Tuple[int, int, int]:
+    d_in = cfg.ssm_expand * cfg.d_model
+    h = cfg.n_heads
+    hd = d_in // h
+    return d_in, h, hd
+
+
+def init_mlstm(key, cfg: ArchConfig) -> Params:
+    d = cfg.d_model
+    d_in, h, hd = xlstm_dims(cfg)
+    keys = jax.random.split(key, 7)
+    scale = 1.0 / math.sqrt(d)
+    return {
+        "up_proj": normal(keys[0], (d, 2 * d_in), scale, cfg.pdtype()),
+        "wq": normal(keys[1], (d_in, h, hd), 1 / math.sqrt(d_in),
+                     cfg.pdtype()),
+        "wk": normal(keys[2], (d_in, h, hd), 1 / math.sqrt(d_in),
+                     cfg.pdtype()),
+        "wv": normal(keys[3], (d_in, h, hd), 1 / math.sqrt(d_in),
+                     cfg.pdtype()),
+        "w_igate": normal(keys[4], (d_in, h), 1 / math.sqrt(d_in),
+                          jnp.float32),
+        "w_fgate": normal(keys[5], (d_in, h), 1 / math.sqrt(d_in),
+                          jnp.float32),
+        "fgate_bias": jnp.full((h,), 3.0, jnp.float32),  # open at init
+        "norm_scale": jnp.ones((d_in,), cfg.pdtype()),
+        "down_proj": normal(keys[6], (d_in, d),
+                            1 / math.sqrt(2 * d_in * cfg.n_layers),
+                            cfg.pdtype()),
+    }
+
+
+def _mlstm_gates(params: Params, xu: jax.Array):
+    """Stabilized gating: sigmoid forget in log space, exp input gate folded
+    into the key scaling (chunk-stable simplification of xLSTM eq. 19-27)."""
+    logf = jax.nn.log_sigmoid(
+        xu.astype(jnp.float32) @ params["w_fgate"] +
+        params["fgate_bias"][None, None])                   # [b,s,h] < 0
+    igate = jax.nn.sigmoid(xu.astype(jnp.float32) @ params["w_igate"])
+    return logf, igate
+
+
+def mlstm_forward(params: Params, x: jax.Array, cfg: ArchConfig
+                  ) -> jax.Array:
+    b, s, _ = x.shape
+    d_in, h, hd = xlstm_dims(cfg)
+    dtype = cfg.cdtype()
+    up = jnp.einsum("bsd,de->bse", x, params["up_proj"].astype(dtype))
+    xu, z = jnp.split(up, 2, axis=-1)
+    q = jnp.einsum("bse,ehk->bshk", xu, params["wq"].astype(dtype))
+    k = jnp.einsum("bse,ehk->bshk", xu, params["wk"].astype(dtype)) / \
+        math.sqrt(hd)
+    v = jnp.einsum("bse,ehk->bshk", xu, params["wv"].astype(dtype))
+    logf, igate = _mlstm_gates(params, xu)
+    k = k * igate[..., None].astype(dtype)
+    y, _ = chunked_linear_scan(v, k, q, logf, cfg.ssm_chunk,
+                               unroll=cfg.scan_unroll)
+    y = y.reshape(b, s, d_in) * jax.nn.silu(z)
+    y = rmsnorm({"scale": params["norm_scale"]}, y, cfg.norm_eps)
+    return jnp.einsum("bse,ed->bsd", y, params["down_proj"].astype(dtype))
+
+
+def mlstm_init_state(cfg: ArchConfig, batch: int) -> jax.Array:
+    d_in, h, hd = xlstm_dims(cfg)
+    return jnp.zeros((batch, h, hd, hd), jnp.float32)
+
+
+def mlstm_step(params: Params, x: jax.Array, state: jax.Array,
+               cfg: ArchConfig) -> Tuple[jax.Array, jax.Array]:
+    b = x.shape[0]
+    d_in, h, hd = xlstm_dims(cfg)
+    dtype = cfg.cdtype()
+    up = jnp.einsum("bsd,de->bse", x, params["up_proj"].astype(dtype))
+    xu, z = jnp.split(up, 2, axis=-1)
+    q = jnp.einsum("bse,ehk->bshk", xu, params["wq"].astype(dtype))[:, 0]
+    k = jnp.einsum("bse,ehk->bshk", xu, params["wk"].astype(dtype))[:, 0] / \
+        math.sqrt(hd)
+    v = jnp.einsum("bse,ehk->bshk", xu, params["wv"].astype(dtype))[:, 0]
+    logf, igate = _mlstm_gates(params, xu)
+    k = k * igate[:, 0][..., None].astype(dtype)
+    state, y = linear_scan_step(state, v, k, q, logf[:, 0])
+    y = y.reshape(b, 1, d_in) * jax.nn.silu(z)
+    y = rmsnorm({"scale": params["norm_scale"]}, y, cfg.norm_eps)
+    return jnp.einsum("bse,ed->bsd", y,
+                      params["down_proj"].astype(dtype)), state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (xLSTM): scalar memory, sequential over time
+# ---------------------------------------------------------------------------
+def init_slstm(key, cfg: ArchConfig) -> Params:
+    d = cfg.d_model
+    h = cfg.n_heads
+    hd = d // h
+    keys = jax.random.split(key, 3)
+    return {
+        "w_in": normal(keys[0], (d, 4, h, hd), 1 / math.sqrt(d),
+                       cfg.pdtype()),
+        "r": normal(keys[1], (4, h, hd, hd), 1 / math.sqrt(hd),
+                    cfg.pdtype()),
+        "bias": jnp.zeros((4, h, hd), jnp.float32),
+        "norm_scale": jnp.ones((d,), cfg.pdtype()),
+        "out_proj": normal(keys[2], (d, d),
+                           1 / math.sqrt(2 * d * cfg.n_layers),
+                           cfg.pdtype()),
+    }
+
+
+def slstm_init_state(cfg: ArchConfig, batch: int) -> Params:
+    h = cfg.n_heads
+    hd = cfg.d_model // h
+    zero = jnp.zeros((batch, h, hd), jnp.float32)
+    return {"c": zero, "n": zero, "hid": zero,
+            "m": jnp.zeros((batch, h, hd), jnp.float32)}
+
+
+def _slstm_cell(params: Params, xt: jax.Array, state: Params
+                ) -> Tuple[Params, jax.Array]:
+    """xt: [b, 4, h, hd] pre-activation from input projection."""
+    c, n, hid, m = state["c"], state["n"], state["hid"], state["m"]
+    rec = jnp.einsum("bhk,ghkl->bghl", hid.astype(params["r"].dtype),
+                     params["r"]).astype(jnp.float32)
+    pre = xt.astype(jnp.float32) + rec + params["bias"][None]
+    zt = jnp.tanh(pre[:, 0])
+    it = pre[:, 1]
+    ft = pre[:, 2]
+    ot = jax.nn.sigmoid(pre[:, 3])
+    # stabilized exponential gating
+    logf = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(logf + m, it)
+    i_s = jnp.exp(it - m_new)
+    f_s = jnp.exp(logf + m - m_new)
+    c_new = f_s * c + i_s * zt
+    n_new = f_s * n + i_s
+    hid_new = ot * c_new / jnp.maximum(jnp.abs(n_new), 1.0)
+    return {"c": c_new, "n": n_new, "hid": hid_new, "m": m_new}, hid_new
+
+
+def slstm_forward(params: Params, x: jax.Array, cfg: ArchConfig
+                  ) -> jax.Array:
+    b, s, d = x.shape
+    h = cfg.n_heads
+    hd = d // h
+    dtype = cfg.cdtype()
+    xt = jnp.einsum("bsd,dghk->bsghk", x, params["w_in"].astype(dtype))
+    state = slstm_init_state(cfg, b)
+
+    def body(state, x_step):
+        state, out = _slstm_cell(params, x_step, state)
+        return state, out
+
+    _, outs = jax.lax.scan(body, state, jnp.moveaxis(xt, 1, 0))
+    y = jnp.moveaxis(outs, 0, 1).reshape(b, s, d).astype(dtype)
+    y = rmsnorm({"scale": params["norm_scale"]}, y, cfg.norm_eps)
+    return jnp.einsum("bsd,de->bse", y, params["out_proj"].astype(dtype))
+
+
+def slstm_step(params: Params, x: jax.Array, state: Params,
+               cfg: ArchConfig) -> Tuple[jax.Array, Params]:
+    b, _, d = x.shape
+    dtype = cfg.cdtype()
+    xt = jnp.einsum("bsd,dghk->bsghk", x, params["w_in"].astype(dtype))[:, 0]
+    state, out = _slstm_cell(params, xt, state)
+    y = out.reshape(b, 1, d).astype(dtype)
+    y = rmsnorm({"scale": params["norm_scale"]}, y, cfg.norm_eps)
+    return jnp.einsum("bsd,de->bse", y,
+                      params["out_proj"].astype(dtype)), state

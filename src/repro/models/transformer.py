@@ -1,0 +1,185 @@
+"""Decoder-only transformer (dense / MoE / VLM backbone).
+
+Layers are scanned with stacked params (leading layer axis): small HLO,
+fast 512-device SPMD compiles, and one large leaf per weight matrix for
+FSDP sharding.  ``remat`` wraps the layer body with jax.checkpoint.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.parallel import ctx
+
+Params = Dict[str, Any]
+
+
+def _layer_keys(key, n: int):
+    return jax.random.split(key, n)
+
+
+def init_layer(key, cfg: ArchConfig) -> Params:
+    keys = jax.random.split(key, 2)
+    params = {
+        "ln1": L.init_rmsnorm(cfg.d_model, cfg.pdtype()),
+        "ln2": L.init_rmsnorm(cfg.d_model, cfg.pdtype()),
+        "attn": L.init_attention(keys[0], cfg),
+    }
+    if cfg.moe:
+        params["moe"] = M.init_moe(keys[1], cfg)
+    else:
+        params["mlp"] = L.init_mlp(keys[1], cfg)
+    return params
+
+
+def init_params(key, cfg: ArchConfig) -> Params:
+    keys = jax.random.split(key, 3)
+    stacked = jax.vmap(lambda k: init_layer(k, cfg))(
+        _layer_keys(keys[0], cfg.n_layers))
+    return {
+        "embed": L.init_embed(keys[1], cfg),
+        "layers": stacked,
+        "final_norm": L.init_rmsnorm(cfg.d_model, cfg.pdtype()),
+    }
+
+
+def layer_forward(layer: Params, x: jax.Array, cfg: ArchConfig,
+                  positions: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    aux = jnp.zeros((), jnp.float32)
+    x = ctx.constrain_residual(
+        x + L.attention(layer["attn"], L.rmsnorm(layer["ln1"], x,
+                                                 cfg.norm_eps),
+                        cfg, positions))
+    h = L.rmsnorm(layer["ln2"], x, cfg.norm_eps)
+    if cfg.moe:
+        y, aux = M.moe_ffn(layer["moe"], h, cfg)
+    else:
+        y = L.mlp(layer["mlp"], h, cfg)
+    return ctx.constrain_residual(x + y), aux
+
+
+def forward(params: Params, tokens: Optional[jax.Array], cfg: ArchConfig,
+            embeds: Optional[jax.Array] = None,
+            positions: Optional[jax.Array] = None,
+            hidden: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward: returns (logits [B,S,V], aux_loss).
+
+    ``hidden=True`` returns the post-final-norm hidden states instead of
+    logits — the trainer's chunked cross-entropy path, which never
+    materializes the [B,S,V] logits tensor (at 405B/128k-vocab scale the
+    full logits are ~1 TB/chip of temps; see EXPERIMENTS.md §Perf)."""
+    if embeds is None:
+        x = L.embed(params["embed"], tokens, cfg)
+    else:
+        x = embeds.astype(cfg.cdtype())
+        if tokens is not None:  # VLM: patch embeds ++ token embeds
+            x = jnp.concatenate(
+                [x, L.embed(params["embed"], tokens, cfg)], axis=1)
+    b, s, _ = x.shape
+    x = ctx.constrain_residual(x)
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    def body(x, layer):
+        x, aux = layer_forward(layer, x, cfg, positions)
+        return x, aux
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, auxs = L.scan_layers(cfg, body, x, params["layers"])
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if hidden:
+        return x, auxs.sum()
+    logits = L.unembed(params["embed"], x, cfg)
+    return logits, auxs.sum()
+
+
+# ---------------------------------------------------------------------------
+# Decode (KV cache) path
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> Params:
+    hd = cfg.resolved_head_dim
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, hd)
+    return {"k": jnp.zeros(shape, cfg.cdtype()),
+            "v": jnp.zeros(shape, cfg.cdtype())}
+
+
+def decode_step(params: Params, cache: Params, token: jax.Array,
+                pos: jax.Array, cfg: ArchConfig
+                ) -> Tuple[jax.Array, Params]:
+    """token [B] at per-sequence position ``pos`` [B] against the cache."""
+    x = L.embed(params["embed"], token[:, None], cfg)
+    max_len = cache["k"].shape[2]
+
+    def body(x, inputs):
+        layer, k_cache, v_cache = inputs
+        h = L.rmsnorm(layer["ln1"], x, cfg.norm_eps)
+        y, k_cache, v_cache = L.decode_attention(
+            layer["attn"], h, cfg, k_cache, v_cache, pos, max_len)
+        x = x + y
+        h = L.rmsnorm(layer["ln2"], x, cfg.norm_eps)
+        if cfg.moe:
+            y, _ = M.moe_ffn(layer["moe"], h, cfg)
+        else:
+            y = L.mlp(layer["mlp"], h, cfg)
+        return x + y, (k_cache, v_cache)
+
+    x, (k_new, v_new) = L.scan_layers(
+        cfg, body, x, (params["layers"], cache["k"], cache["v"]))
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], x, cfg)
+    return logits[:, 0], {"k": k_new, "v": v_new}
+
+
+def prefill(params: Params, tokens: jax.Array, cfg: ArchConfig,
+            max_len: int, embeds: Optional[jax.Array] = None
+            ) -> Tuple[jax.Array, Params]:
+    """Run the full-sequence forward while materializing the KV cache."""
+    if embeds is None:
+        x = L.embed(params["embed"], tokens, cfg)
+    else:
+        x = embeds.astype(cfg.cdtype())
+        if tokens is not None:
+            x = jnp.concatenate(
+                [x, L.embed(params["embed"], tokens, cfg)], axis=1)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    def body(x, layer):
+        h = L.rmsnorm(layer["ln1"], x, cfg.norm_eps)
+        q, k, v = L._qkv(layer["attn"], h, cfg, positions)
+        if cfg.attn_impl == "flash":
+            from repro.kernels.flash_attention.ops import \
+                flash_attention_bshd
+            out = flash_attention_bshd(q, k, v, causal=True)
+        elif cfg.attn_impl == "skip":   # §Perf ablation (see layers.py)
+            out = q
+        else:
+            out = L.chunked_attention(q, k, v, causal=True,
+                                      unroll=cfg.scan_unroll)
+        y = jnp.einsum("bshk,hkd->bsd", out,
+                       layer["attn"]["wo"].astype(cfg.cdtype()))
+        x = ctx.constrain_residual(x + y)
+        h = L.rmsnorm(layer["ln2"], x, cfg.norm_eps)
+        if cfg.moe:
+            y, _ = M.moe_ffn(layer["moe"], h, cfg)
+        else:
+            y = L.mlp(layer["mlp"], h, cfg)
+        # pad kv to max_len for the cache
+        pad = max_len - s
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return ctx.constrain_residual(x + y), (k, v)
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, (ks, vs) = L.scan_layers(cfg, body, x, params["layers"])
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], x[:, -1:], cfg)
+    return logits[:, 0], {"k": ks, "v": vs}

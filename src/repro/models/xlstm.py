@@ -1,0 +1,95 @@
+"""xLSTM language model: alternating mLSTM / sLSTM blocks.
+
+Blocks are heterogeneous (every ``slstm_every``-th is an sLSTM), so the
+stack is python-unrolled with per-layer param dicts rather than scanned.
+mLSTM state is a constant-size matrix memory => long_500k decode applies.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.parallel import ctx
+
+Params = Dict[str, Any]
+
+
+def layer_kinds(cfg: ArchConfig) -> List[str]:
+    k = cfg.slstm_every
+    return ["slstm" if (k > 0 and (i + 1) % k == 0) else "mlstm"
+            for i in range(cfg.n_layers)]
+
+
+def init_params(key, cfg: ArchConfig) -> Params:
+    keys = jax.random.split(key, cfg.n_layers + 2)
+    blocks = []
+    for i, kind in enumerate(layer_kinds(cfg)):
+        ln = L.init_rmsnorm(cfg.d_model, cfg.pdtype())
+        if kind == "slstm":
+            blocks.append({"ln": ln, "slstm": S.init_slstm(keys[i], cfg)})
+        else:
+            blocks.append({"ln": ln, "mlstm": S.init_mlstm(keys[i], cfg)})
+    return {
+        "embed": L.init_embed(keys[-2], cfg),
+        "blocks": tuple(blocks),
+        "final_norm": L.init_rmsnorm(cfg.d_model, cfg.pdtype()),
+    }
+
+
+def forward(params: Params, tokens: jax.Array, cfg: ArchConfig,
+            embeds: Optional[jax.Array] = None,
+            positions: Optional[jax.Array] = None,
+            hidden: bool = False) -> Tuple[jax.Array, jax.Array]:
+    x = L.embed(params["embed"], tokens, cfg) if embeds is None else \
+        embeds.astype(cfg.cdtype())
+
+    def block_fn(block, x):
+        h = L.rmsnorm(block["ln"], x, cfg.norm_eps)
+        if "slstm" in block:
+            return ctx.constrain_residual(
+                x + S.slstm_forward(block["slstm"], h, cfg))
+        return ctx.constrain_residual(
+            x + S.mlstm_forward(block["mlstm"], h, cfg))
+
+    for block in params["blocks"]:
+        if cfg.remat:
+            x = jax.checkpoint(block_fn)(block, x)
+        else:
+            x = block_fn(block, x)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if hidden:
+        return x, jnp.zeros((), jnp.float32)
+    return L.unembed(params["embed"], x, cfg), jnp.zeros((), jnp.float32)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> Params:
+    states = []
+    for kind in layer_kinds(cfg):
+        if kind == "slstm":
+            states.append(S.slstm_init_state(cfg, batch))
+        else:
+            states.append(S.mlstm_init_state(cfg, batch))
+    return {"states": tuple(states)}
+
+
+def decode_step(params: Params, cache: Params, token: jax.Array,
+                pos: jax.Array, cfg: ArchConfig
+                ) -> Tuple[jax.Array, Params]:
+    x = L.embed(params["embed"], token[:, None], cfg)
+    new_states = []
+    for block, state in zip(params["blocks"], cache["states"]):
+        h = L.rmsnorm(block["ln"], x, cfg.norm_eps)
+        if "slstm" in block:
+            y, state = S.slstm_step(block["slstm"], h, state, cfg)
+        else:
+            y, state = S.mlstm_step(block["mlstm"], h, state, cfg)
+        x = x + y
+        new_states.append(state)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], x, cfg)
+    return logits[:, 0], {"states": tuple(new_states)}

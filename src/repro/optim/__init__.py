@@ -1,0 +1,3 @@
+from repro.optim.adamw import (AdamWState, adamw_init, adamw_update,
+                               apply_updates, clip_by_global_norm,
+                               cosine_schedule)

@@ -1,0 +1,84 @@
+"""AdamW + global-norm clipping + warmup-cosine schedule, in pure JAX.
+
+Moments are kept in float32 regardless of param dtype (bf16 params at
+scale); the update is computed in float32 and cast back — the standard
+mixed-precision recipe.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RunConfig
+
+Params = Any
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Params
+    nu: Params
+
+
+def adamw_init(params: Params, moment_dtype=jnp.float32) -> AdamWState:
+    """``moment_dtype=bfloat16`` halves optimizer-state HBM (low-precision
+    moments; the update math itself stays float32)."""
+    zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+    return AdamWState(jnp.zeros((), jnp.int32),
+                      jax.tree.map(zeros, params),
+                      jax.tree.map(zeros, params))
+
+
+def cosine_schedule(step: jax.Array, run: RunConfig) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / max(run.warmup_steps, 1), 1.0)
+    progress = jnp.clip((step - run.warmup_steps) /
+                        max(run.total_steps - run.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * progress))
+    return run.learning_rate * warm * (0.1 + 0.9 * cos)
+
+
+def clip_by_global_norm(grads: Params, max_norm: float
+                        ) -> Tuple[Params, jax.Array]:
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), gnorm
+
+
+def adamw_update(grads: Params, state: AdamWState, params: Params,
+                 run: RunConfig) -> Tuple[Params, AdamWState]:
+    step = state.step + 1
+    lr = cosine_schedule(step, run)
+    b1, b2 = run.b1, run.b2
+
+    mu = jax.tree.map(
+        lambda g, m: (b1 * m.astype(jnp.float32) +
+                      (1 - b1) * g.astype(jnp.float32)).astype(m.dtype),
+        grads, state.mu)
+    nu = jax.tree.map(
+        lambda g, v: (b2 * v.astype(jnp.float32) + (1 - b2) *
+                      jnp.square(g.astype(jnp.float32))).astype(v.dtype),
+        grads, state.nu)
+    t = step.astype(jnp.float32)
+    bc1 = 1 - b1 ** t
+    bc2 = 1 - b2 ** t
+
+    def update(p, m, v):
+        m = m.astype(jnp.float32)
+        v = v.astype(jnp.float32)
+        u = (m / bc1) / (jnp.sqrt(v / bc2) + 1e-8)
+        u = u + run.weight_decay * p.astype(jnp.float32)
+        return (-lr * u).astype(p.dtype)
+
+    updates = jax.tree.map(update, params, mu, nu)
+    return updates, AdamWState(step, mu, nu)
+
+
+def apply_updates(params: Params, updates: Params) -> Params:
+    return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)

@@ -1,0 +1,3 @@
+from repro.parallel.sharding import (batch_sharding, cache_shardings,
+                                     data_axes, param_shardings,
+                                     state_shardings)

@@ -1,0 +1,149 @@
+"""Activation-sharding context.
+
+XLA's SPMD partitioner is free to resolve a conflict between FSDP weights
+(sharded on "data") and batch-parallel activations (also on "data") by
+replicating the batch — catastrophic for DP.  Real frameworks pin
+intermediate activations with sharding constraints so the partitioner must
+all-gather weights instead.  ``set_mesh`` installs the active mesh; the
+model code calls ``constrain_bsd`` etc., which are no-ops outside a mesh
+context (single-host tests stay unchanged).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+def set_mesh(mesh: Optional[Mesh]) -> None:
+    _STATE.mesh = mesh
+
+
+def get_mesh() -> Optional[Mesh]:
+    return getattr(_STATE, "mesh", None)
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Mesh):
+    prev = get_mesh()
+    set_mesh(mesh)
+    try:
+        yield mesh
+    finally:
+        set_mesh(prev)
+
+
+def _clean_axis(axis, mesh: Mesh):
+    if axis is None:
+        return None
+    if isinstance(axis, (tuple, list)):
+        kept = tuple(a for a in axis if a in mesh.axis_names)
+        return kept if kept else None
+    return axis if axis in mesh.axis_names else None
+
+
+def constrain(x: jax.Array, *spec) -> jax.Array:
+    """with_sharding_constraint against the active mesh (no-op if none).
+
+    Axes missing from the mesh are dropped; dims whose size is not
+    divisible by the target axis are left unsharded.
+    """
+    mesh = get_mesh()
+    if mesh is None or x.ndim != len(spec):
+        return x
+    cleaned = []
+    for dim, axis in zip(x.shape, spec):
+        axis = _clean_axis(axis, mesh)
+        if axis is None:
+            cleaned.append(None)
+            continue
+        names = axis if isinstance(axis, tuple) else (axis,)
+        size = 1
+        for a in names:
+            size *= mesh.shape[a]
+        cleaned.append(axis if dim % size == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*cleaned)))
+
+
+def batch_axes() -> Tuple[str, ...]:
+    mesh = get_mesh()
+    if mesh is None:
+        return ()
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def set_sequence_parallel(enabled: bool) -> None:
+    """Megatron-style sequence parallelism for the residual stream: outside
+    attention/MLP blocks, activations are sharded [batch->(pod,data),
+    seq->model].  XLA inserts the block-entry all-gathers; the remat stash
+    (the per-layer residual) shrinks by the model-axis size — the change
+    that makes llama3-405b/train_4k activations fit (EXPERIMENTS.md §Perf).
+    """
+    _STATE.seq_parallel = enabled
+
+
+def sequence_parallel() -> bool:
+    return getattr(_STATE, "seq_parallel", False)
+
+
+def set_expert_parallel(enabled: bool) -> None:
+    _STATE.expert_parallel = enabled
+
+
+def expert_parallel() -> bool:
+    return getattr(_STATE, "expert_parallel", True)
+
+
+@contextlib.contextmanager
+def options(seq_parallel: bool = False, expert_parallel: bool = True):
+    prev = sequence_parallel()
+    prev_ep = globals()["expert_parallel"]()
+    set_sequence_parallel(seq_parallel)
+    set_expert_parallel(expert_parallel)
+    try:
+        yield
+    finally:
+        set_sequence_parallel(prev)
+        set_expert_parallel(prev_ep)
+
+
+def constrain_bsd(x: jax.Array) -> jax.Array:
+    """Activations [B, S, D]: batch over (pod, data)."""
+    return constrain(x, batch_axes() or None, None, None)
+
+
+def constrain_residual(x: jax.Array) -> jax.Array:
+    """Residual stream [B, S, D] at layer boundaries: batch over (pod,data)
+    plus sequence over model when sequence parallelism is on."""
+    if sequence_parallel():
+        return constrain(x, batch_axes() or None, "model", None)
+    return constrain_bsd(x)
+
+
+def constrain_heads(x: jax.Array) -> jax.Array:
+    """Per-head activations [B, S, H, hd]: heads over model (TP)."""
+    return constrain(x, batch_axes() or None, None, "model", None)
+
+
+def constrain_ffn(x: jax.Array) -> jax.Array:
+    """MLP hidden [B, S, F]: F over model (TP)."""
+    return constrain(x, batch_axes() or None, None, "model")
+
+
+def constrain_experts(x: jax.Array) -> jax.Array:
+    """MoE dispatch [E, C, D]: experts over model (EP); under ep=False the
+    expert dim stays replicated and TP lives inside the expert ffn."""
+    if not expert_parallel():
+        return x
+    return constrain(x, "model", None, None)
+
+
+def constrain_logits(x: jax.Array) -> jax.Array:
+    """[B, S, V]: batch over (pod, data), vocab over model."""
+    return constrain(x, batch_axes() or None, None, "model")

@@ -1,0 +1,245 @@
+"""Sharding rules: logical tensor axes -> mesh axes, with divisibility
+fallback chains so every assigned (arch x shape) cell shards on the
+production meshes (16,16) and (2,16,16).
+
+Strategy (see DESIGN.md §5 and the distcalc auto-completion that derived
+it):
+
+* TP ("model" axis): attention q-heads (fallback head_dim), MLP hidden,
+  MoE expert axis (EP), vocab (fallback embed dim), mamba/xlstm inner dim.
+* FSDP ("data" axis): parameters additionally sharded along their largest
+  remaining dim within a pod (hierarchical ZeRO-3 — cross-pod parameter
+  gathers avoided; only grad all-reduce crosses pods).
+* batch: ("pod", "data"); long-context caches: sequence over "data" when
+  the batch axis cannot be split (context parallelism).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+Params = Any
+
+#: params smaller than this stay replicated (FSDP gather overhead dominates)
+FSDP_MIN_ELEMS = 1 << 16
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def _divisible(dim: int, mesh: Mesh, axis: str) -> bool:
+    return dim % _axis_size(mesh, axis) == 0
+
+
+# ---------------------------------------------------------------------------
+# Per-leaf rules.  Each rule gives, per tensor dim counted FROM THE END,
+# an ordered preference of mesh-axis candidates; the first divisible one
+# wins, otherwise the dim is unsharded.  ``None`` marks "never shard".
+# dims not listed are unsharded (covers the stacked leading layer dim).
+# ---------------------------------------------------------------------------
+# name-pattern -> {negative_dim_index: (axis_candidates...)}
+_RULES: Tuple[Tuple[str, Dict[int, Tuple[str, ...]]], ...] = (
+    # attention projections [.., D, H|K, hd]
+    (r"(^|/)(attn|xattn)/w[qkv]$", {-2: ("model",), -1: ("model",),
+                                    -3: ("data",)}),
+    (r"(^|/)(attn|xattn)/b[qkv]$", {-2: ("model",), -1: ("model",)}),
+    (r"(^|/)(attn|xattn)/wo$", {-3: ("model",), -2: ("model",),
+                                -1: ("data",)}),
+    # MoE expert weights [.., E, D, F] / [.., E, F, D]: EP on E, FSDP inside
+    (r"(^|/)moe/w_(gate|up)$", {-3: ("model",), -2: ("data",)}),
+    (r"(^|/)moe/w_down$", {-3: ("model",), -2: ("data",)}),
+    # no-EP variant (ep=False rewrites moe/ paths to dmoe/): experts
+    # replicated across model; TP shards the ffn dim, FSDP the d dim
+    (r"(^|/)dmoe/w_(gate|up)$", {-1: ("model",), -2: ("data",)}),
+    (r"(^|/)dmoe/w_down$", {-2: ("model",), -1: ("data",)}),
+    (r"(^|/)moe/router$", {-2: ("data",)}),
+    # dense MLP [.., D, F] / [.., F, D]
+    (r"(^|/)mlp/w_(gate|up)$", {-1: ("model",), -2: ("data",)}),
+    (r"(^|/)mlp/w_down$", {-2: ("model",), -1: ("data",)}),
+    # embeddings
+    (r"(^|/)embed/tok$", {-2: ("model",), -1: ("data",)}),
+    (r"(^|/)embed/head$", {-1: ("model",), -2: ("data",)}),
+    # mamba2
+    (r"(^|/)mamba/in_proj$", {-1: ("model",), -2: ("data",)}),
+    (r"(^|/)mamba/out_proj$", {-2: ("model",), -1: ("data",)}),
+    (r"(^|/)mamba/conv_w$", {-1: ("model",)}),
+    # xlstm blocks
+    (r"(^|/)mlstm/up_proj$", {-1: ("model",), -2: ("data",)}),
+    (r"(^|/)mlstm/down_proj$", {-2: ("model",), -1: ("data",)}),
+    (r"(^|/)mlstm/w[qkv]$", {-2: ("model",), -1: ("model",),
+                             -3: ("data",)}),
+    (r"(^|/)mlstm/w_[if]gate$", {-2: ("data",)}),
+    (r"(^|/)slstm/w_in$", {-1: ("model",), -4: ("data",)}),
+    (r"(^|/)slstm/r$", {-1: ("model",)}),
+    (r"(^|/)slstm/out_proj$", {-2: ("model",), -1: ("data",)}),
+)
+
+
+def _path_to_str(path) -> str:
+    parts = []
+    for entry in path:
+        if hasattr(entry, "key"):
+            parts.append(str(entry.key))
+        elif hasattr(entry, "idx"):
+            parts.append(str(entry.idx))
+        elif hasattr(entry, "name"):
+            parts.append(str(entry.name))
+    return "/".join(parts)
+
+
+def spec_for_param(path_str: str, shape: Tuple[int, ...], mesh: Mesh,
+                   fsdp: bool = True, ep: bool = True) -> P:
+    """Resolve one parameter's PartitionSpec under the fallback chain.
+
+    ``fsdp=False`` drops the "data"-axis (ZeRO-3) candidates: params are
+    TP-sharded only and replicated across data — the DP baseline the §Perf
+    hillclimb compares against (no per-step param gathers, more HBM).
+    ``ep=False`` switches MoE expert weights from expert-parallel (model
+    axis on E => all-to-all dispatch) to TP-inside-experts (model axis on
+    d_ff; experts replicated over data modulo FSDP).
+    """
+    if not ep:
+        path_str = path_str.replace("moe/", "dmoe/")
+    if len(shape) == 0 or int(np.prod(shape)) < FSDP_MIN_ELEMS and \
+            len(shape) <= 1:
+        return P()
+    spec: list = [None] * len(shape)
+    used_axes = set()
+    matched = False
+    for pattern, dims in _RULES:
+        if re.search(pattern, path_str):
+            matched = True
+            # sort: model assignments first so FSDP takes what's left
+            order = sorted(dims.items(),
+                           key=lambda kv: 0 if "model" in kv[1] else 1)
+            for neg_idx, candidates in order:
+                if -neg_idx > len(shape):
+                    continue
+                idx = len(shape) + neg_idx
+                if spec[idx] is not None:
+                    continue
+                for axis in candidates:
+                    if axis in used_axes or axis not in mesh.axis_names:
+                        continue
+                    if axis == "data" and (not fsdp or
+                            int(np.prod(shape)) < FSDP_MIN_ELEMS):
+                        continue
+                    if _divisible(shape[idx], mesh, axis):
+                        spec[idx] = axis
+                        used_axes.add(axis)
+                        break
+            break
+    if not matched:
+        # generic fallback: big tensors get model on the last divisible dim
+        if int(np.prod(shape)) >= FSDP_MIN_ELEMS and len(shape) >= 2:
+            for idx in range(len(shape) - 1, -1, -1):
+                if "model" in mesh.axis_names and \
+                        _divisible(shape[idx], mesh, "model"):
+                    spec[idx] = "model"
+                    break
+    return P(*spec)
+
+
+def param_shardings(abstract_params: Params, mesh: Mesh,
+                    fsdp: bool = True, ep: bool = True) -> Params:
+    """Pytree of NamedSharding matching ``abstract_params``."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(abstract_params)
+    out = []
+    for path, leaf in flat:
+        spec = spec_for_param(_path_to_str(path), tuple(leaf.shape), mesh,
+                              fsdp=fsdp, ep=ep)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def state_shardings(abstract_state: Any, mesh: Mesh,
+                    fsdp: bool = True, ep: bool = True) -> Any:
+    """TrainState = (params, AdamWState(step, mu, nu)); Adam moments follow
+    the params sharding exactly (same pytree structure)."""
+    from repro.optim.adamw import AdamWState
+    from repro.train.loop import TrainState
+    p_sh = param_shardings(abstract_state.params, mesh, fsdp=fsdp, ep=ep)
+    mu_sh = param_shardings(abstract_state.opt.mu, mesh, fsdp=fsdp, ep=ep)
+    nu_sh = param_shardings(abstract_state.opt.nu, mesh, fsdp=fsdp, ep=ep)
+    return TrainState(p_sh, AdamWState(NamedSharding(mesh, P()),
+                                       mu_sh, nu_sh))
+
+
+# ---------------------------------------------------------------------------
+# Activations / inputs / caches
+# ---------------------------------------------------------------------------
+def batch_sharding(mesh: Mesh, batch_size: int, ndim: int = 2
+                   ) -> NamedSharding:
+    """tokens/labels [B, S] (or [B] for decode): batch over (pod, data)."""
+    axes = data_axes(mesh)
+    total = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    first = None
+    if axes and batch_size % total == 0:
+        first = axes if len(axes) > 1 else axes[0]
+    return NamedSharding(mesh, P(*([first] + [None] * (ndim - 1))))
+
+
+def embeds_sharding(mesh: Mesh, batch_size: int) -> NamedSharding:
+    axes = data_axes(mesh)
+    total = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    first = axes if batch_size % max(total, 1) == 0 and axes else None
+    return NamedSharding(mesh, P(first, None, None))
+
+
+def cache_shardings(abstract_cache: Params, mesh: Mesh, batch: int,
+                    cfg: ArchConfig) -> Params:
+    """KV / SSM-state caches.
+
+    Preference: batch over (pod,data) when divisible; otherwise shard the
+    *sequence* dim over "data" (context parallelism for long_500k b=1).
+    Heads/state dims go on "model" when divisible.
+    """
+    axes = data_axes(mesh)
+    total = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    batch_ok = axes and batch % total == 0
+    flat, treedef = jax.tree_util.tree_flatten_with_path(abstract_cache)
+    out = []
+    for path, leaf in flat:
+        shape = tuple(leaf.shape)
+        spec: list = [None] * len(shape)
+        # locate the batch dim: first dim equal to batch (after any leading
+        # stacking dims); KV caches are [L|apps, B, S, K, hd], ssm states
+        # [L, B, ...]
+        try:
+            b_idx = shape.index(batch)
+        except ValueError:
+            b_idx = -1
+        if b_idx >= 0 and batch_ok:
+            spec[b_idx] = axes if len(axes) > 1 else axes[0]
+        path_str = _path_to_str(path)
+        is_kv = re.search(r"(^|/)(k|v|xk|xv)$", path_str) is not None
+        if is_kv and len(shape) >= 4:
+            # [.., B, S, K, hd]
+            if not (b_idx >= 0 and batch_ok) and "data" in mesh.axis_names \
+                    and _divisible(shape[-3], mesh, "data"):
+                spec[-3] = "data"  # context parallelism over sequence
+            if _divisible(shape[-2], mesh, "model"):
+                spec[-2] = "model"
+            elif _divisible(shape[-1], mesh, "model"):
+                spec[-1] = "model"
+        elif len(shape) >= 2:
+            # ssm states [.., B, h, n, p] etc: shard a head/state dim
+            for idx in range(len(shape) - 1, max(b_idx, 0), -1):
+                if spec[idx] is None and \
+                        _divisible(shape[idx], mesh, "model") and \
+                        shape[idx] >= _axis_size(mesh, "model"):
+                    spec[idx] = "model"
+                    break
+        out.append(NamedSharding(mesh, P(*spec)))
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,2 @@
+from repro.train.loop import (TrainState, cross_entropy_loss, init_state,
+                              make_train_step, train_step)

@@ -1,0 +1,135 @@
+"""Training step: loss, grads, clipping, AdamW — plus microbatch grad
+accumulation (scan over microbatches, constant memory)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, RunConfig
+from repro.models.registry import Model
+from repro.optim.adamw import (AdamWState, adamw_init, adamw_update,
+                               apply_updates, clip_by_global_norm)
+
+Params = Any
+
+
+class TrainState(NamedTuple):
+    params: Params
+    opt: AdamWState
+
+
+def init_state(model: Model, rng, moment_dtype=jnp.float32) -> TrainState:
+    params = model.init(rng)
+    return TrainState(params, adamw_init(params, moment_dtype))
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """logits [B,S,V] (any float dtype), labels [B,S] int."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None].astype(jnp.int32),
+                               axis=-1)[..., 0]
+    return (logz - gold).mean()
+
+
+#: sequence positions per chunked-CE slice; at vocab 128k / bf16 one chunk's
+#: logits are B/chips x 512 x V ~ 128 MB per chip — VMEM-pipeline friendly
+CE_CHUNK = 512
+
+
+def chunked_cross_entropy(x: jax.Array, embed: Params, labels: jax.Array,
+                          cfg: ArchConfig) -> jax.Array:
+    """CE over hidden states without materializing [B,S,V] logits.
+
+    Scans the sequence in CE_CHUNK slices; each slice computes its logits,
+    reduces them to (logsumexp - gold), and frees them.  The body is
+    rematerialized so the backward pass also recomputes per-slice logits
+    instead of stashing them — this is what makes llama3-405b/train_4k fit
+    (naive CE: ~1.05 TB/chip of logit temps; chunked: ~134 MB/chip)."""
+    b, s, d = x.shape
+    chunk = min(CE_CHUNK, s)
+    if s % chunk != 0:  # fall back (tests with odd tiny lengths)
+        from repro.models import layers as L
+        return cross_entropy_loss(L.unembed(embed, x, cfg), labels)
+    nc = s // chunk
+    xc = jnp.moveaxis(x.reshape(b, nc, chunk, d), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(b, nc, chunk), 1, 0)
+
+    @jax.checkpoint
+    def body(total, inputs):
+        x_blk, l_blk = inputs
+        from repro.models import layers as L
+        logits = L.unembed(embed, x_blk, cfg).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, l_blk[..., None].astype(jnp.int32), axis=-1)[..., 0]
+        return total + (logz - gold).sum(), None
+
+    # scan_unroll: dry-run cost probes count while bodies once; unroll so
+    # HloCostAnalysis sees every chunk (launch/dryrun.py)
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xc, lc),
+                            unroll=nc if cfg.scan_unroll else 1)
+    return total / (b * s)
+
+
+def _loss_fn(params: Params, batch: Dict[str, jax.Array], model: Model
+             ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    embeds = batch.get("embeds")
+    labels = batch["labels"]
+    x, aux = model.forward(params, batch["tokens"], embeds=embeds,
+                           hidden=True)
+    # VLM: hidden states cover [patches ++ text]; loss on text positions
+    if x.shape[1] != labels.shape[1]:
+        x = x[:, -labels.shape[1]:]
+    loss = chunked_cross_entropy(x, params["embed"], labels, model.cfg)
+    total = loss + 0.01 * aux
+    return total, {"loss": loss, "aux_loss": aux}
+
+
+def train_step(state: TrainState, batch: Dict[str, jax.Array], model: Model,
+               run: RunConfig) -> Tuple[TrainState, Dict[str, jax.Array]]:
+    grad_fn = jax.value_and_grad(_loss_fn, has_aux=True)
+    micro = run.microbatch
+    # gradient compression: reduce cross-replica grads in bf16 (halves the
+    # all-reduce / reduce-scatter traffic; accumulation + Adam stay fp32)
+    compress = (lambda g: g.astype(jnp.bfloat16)) if run.grad_compression \
+        else (lambda g: g)
+    if micro and micro < batch["tokens"].shape[0]:
+        # gradient accumulation: scan over microbatches
+        b = batch["tokens"].shape[0]
+        n_micro = b // micro
+        stacked = {k: v.reshape((n_micro, micro) + v.shape[1:])
+                   for k, v in batch.items()}
+        acc_dtype = jnp.bfloat16 if run.grad_compression else jnp.float32
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dtype),
+                             state.params)
+
+        def body(acc, mb):
+            (_, metrics), grads = grad_fn(state.params, mb, model)
+            acc = jax.tree.map(
+                lambda a, g: a + (compress(g) / n_micro).astype(a.dtype),
+                acc, grads)
+            return acc, metrics
+
+        grads, metrics = jax.lax.scan(body, zeros, stacked)
+        metrics = jax.tree.map(lambda m: m.mean(), metrics)
+    else:
+        (_, metrics), grads = grad_fn(state.params, batch, model)
+        grads = jax.tree.map(compress, grads)
+    grads, gnorm = clip_by_global_norm(grads, run.grad_clip)
+    updates, opt = adamw_update(grads, state.opt, state.params, run)
+    params = apply_updates(state.params, updates)
+    metrics = dict(metrics, grad_norm=gnorm)
+    return TrainState(params, opt), metrics
+
+
+def make_train_step(model: Model, run: RunConfig):
+    """Closure suitable for jax.jit(in_shardings=..., out_shardings=...)."""
+
+    def step(state: TrainState, batch: Dict[str, jax.Array]):
+        return train_step(state, batch, model, run)
+
+    return step

@@ -1,0 +1,73 @@
+"""Serving: batched prefill + decode steps with KV/SSM caches.
+
+``make_serve_step`` returns the one-token decode closure lowered by the
+dry-run for ``decode_*`` / ``long_*`` shapes; ``make_prefill_step`` covers
+``prefill_*`` shapes.  ``generate`` is the runnable batched-request loop
+used by examples/serve_lm.py.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.registry import Model
+
+Params = Any
+
+
+def make_serve_step(model: Model):
+    def step(params: Params, cache: Params, token: jax.Array,
+             pos: jax.Array) -> Tuple[jax.Array, Params]:
+        logits, cache = model.decode_step(params, cache, token, pos)
+        return logits, cache
+
+    return step
+
+
+def make_prefill_step(model: Model, max_len: int):
+    cfg = model.cfg
+
+    def step(params: Params, tokens: Optional[jax.Array],
+             embeds: Optional[jax.Array] = None):
+        if model._prefill is not None:
+            return model.prefill(params, tokens, max_len, embeds=embeds)
+        # families without a fused prefill: full forward, last-token logits
+        logits, _ = model.forward(params, tokens, embeds=embeds)
+        return logits[:, -1], None
+
+    return step
+
+
+def greedy_sample(logits: jax.Array) -> jax.Array:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def generate(model: Model, params: Params, prompt: jax.Array,
+             max_new_tokens: int, max_len: Optional[int] = None,
+             embeds=None) -> jax.Array:
+    """Batched greedy generation: prompt [B, S] -> [B, S + new]."""
+    cfg = model.cfg
+    b, s = prompt.shape
+    max_len = max_len or (s + max_new_tokens)
+    cache = model.init_cache(b, max_len)
+    decode = jax.jit(make_serve_step(model))
+
+    # prefill by stepping the prompt (works for every family; transformer
+    # families could use the fused prefill instead)
+    pos = jnp.zeros((b,), jnp.int32)
+    logits = None
+    for t in range(s):
+        logits, cache = decode(params, cache, prompt[:, t], pos)
+        pos = pos + 1
+    tokens = [prompt]
+    token = greedy_sample(logits)
+    for _ in range(max_new_tokens - 1):
+        tokens.append(token[:, None])
+        logits, cache = decode(params, cache, token, pos)
+        pos = pos + 1
+        token = greedy_sample(logits)
+    tokens.append(token[:, None])
+    return jnp.concatenate(tokens, axis=1)

@@ -1,0 +1,25 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def cpu_profile():
+    """A quickly-trained container hardware profile shared across tests."""
+    from repro.core.training import quick_profile
+    return quick_profile()
+
+
+@pytest.fixture(scope="session")
+def hw_analytical():
+    from repro.core.hardware import hw1
+    return hw1()
+
+
+@pytest.fixture()
+def rng():
+    return np.random.default_rng(1234)

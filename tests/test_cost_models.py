@@ -1,0 +1,81 @@
+"""Learned cost models (paper Appendix D): fit each family on synthetic
+data drawn from that family and check recovery; fitting runs in JAX."""
+import numpy as np
+import pytest
+
+from repro.core import models
+
+
+def _r2(model, x, y):
+    return models.r2_score(y, model.predict(x))
+
+
+def test_linear_fit_recovers():
+    x = np.logspace(1, 6, 24)
+    y = 3e-9 * x + 2e-7
+    m = models.fit("linear", x, y)
+    assert _r2(m, x, y) > 0.999
+
+
+def test_log_linear_fit_recovers():
+    x = np.logspace(1, 6, 24)
+    y = 5e-8 * np.log(x) + 1e-7
+    m = models.fit("log_linear", x, y)
+    assert _r2(m, x, y) > 0.99
+
+
+def test_nlogn_fit_recovers():
+    x = np.logspace(1, 6, 24)
+    y = 2e-9 * x * np.log(x) + 5e-9 * x
+    m = models.fit("nlogn", x, y)
+    assert _r2(m, x, y) > 0.99
+
+
+def test_sigmoids_fit_recovers_step_positions():
+    """The paper's random-access model: cache steps at known boundaries."""
+    x = np.logspace(2, 8, 60)
+    logx = np.log(x + 1.0)
+    def step(c, x0):
+        return c / (1 + np.exp(-8.0 * (logx - np.log(x0))))
+    y = 1e-9 + step(4e-9, 4e3) + step(2e-8, 2e5) + step(7e-8, 2e7)
+    m = models.fit("sigmoids", x, y)
+    assert _r2(m, x, y) > 0.98
+    # prediction is monotone non-decreasing (a step function)
+    pred = m.predict(x)
+    assert np.all(np.diff(pred) >= -1e-12)
+
+
+def test_knn_interpolates():
+    x = np.logspace(1, 5, 20)
+    y = 1e-8 * np.sqrt(x)
+    m = models.fit("knn", x, y)
+    assert _r2(m, x, y) > 0.95
+
+
+def test_2d_sigmoids_bloom_model():
+    """f(x, m) = S1(x) + (m-1) S2(x) — Table 1 'sum of sum of sigmoids'."""
+    x = np.tile(np.logspace(2, 6, 20), 4)
+    m_in = np.repeat([1, 2, 3, 4], 20)
+    logx = np.log(x + 1.0)
+    base = 1e-8 / (1 + np.exp(-(logx - 8.0)))
+    y = base * m_in
+    fm = models.fit2d_sigmoids(x, m_in, y)
+    pred = models.predict2d(fm, x, m_in)
+    assert models.r2_score(y, pred) > 0.9
+
+
+def test_predictions_are_nonnegative_and_clipped():
+    x = np.logspace(1, 4, 10)
+    y = 1e-9 * x
+    m = models.fit("linear", x, y)
+    assert float(m.predict(np.asarray([1e12]))[0]) <= \
+        float(m.predict(np.asarray([x.max()]))[0]) * 1.001
+    assert np.all(m.predict(x) >= 0.0)
+
+
+def test_json_roundtrip():
+    x = np.logspace(1, 5, 16)
+    y = 2e-9 * x + 1e-8 * np.log(x)
+    m = models.fit("log_linear", x, y)
+    m2 = models.FittedModel.from_json(m.to_json())
+    np.testing.assert_allclose(m.predict(x), m2.predict(x), rtol=1e-6)

@@ -1,0 +1,78 @@
+"""Element library (Figure 30) and data structure specifications."""
+import pytest
+
+from repro.core import elements as el
+from repro.core.elements import DataStructureSpec, Element
+
+
+def test_element_library_matches_figure30():
+    udp = el.unordered_data_page()
+    assert udp.terminal and udp.retains_keys and udp.retains_values
+    assert udp.tag("key_partitioning") == "append"
+
+    odp = el.ordered_data_page()
+    assert odp.sorted_keys and odp.tag("area_links") == "forward"
+    assert odp.get("utilization") == (">=", 0.5)
+
+    hsh = el.hash_element()
+    assert not hsh.retains_keys and not hsh.retains_values
+    assert hsh.get("key_partitioning")[1] == "func"
+    assert hsh.get("sub_block_capacity") == "unrestricted"
+
+    bt = el.btree_internal()
+    assert bt.fanout == 20 and bt.tag("zone_map_filters") == "min"
+    assert bt.get("sub_block_capacity") == "balanced"
+    assert bt.get("recursion") == ("yes", "logn")
+
+    csb = el.csb_internal()
+    assert csb.tag("sub_block_physical_layout") == "BFS"
+
+    fast = el.fast_internal()
+    assert fast.tag("sub_block_physical_location") == "inline"
+    assert fast.tag("sub_block_physical_layout") == "BFS-layer"
+
+    ll = el.linked_list_element()
+    assert ll.tag("immediate_node_links") == "next"
+    assert ll.tag("intra_node_access") == "head_link"
+
+    sl = el.skip_list_element()
+    assert sl.tag("skip_node_links") == "perfect"
+    assert sl.tag("zone_map_filters") == "both"
+
+    trie = el.trie_element()
+    assert trie.tag("key_retention") == "func"
+    assert trie.get("recursion")[0] == "yes"
+
+
+def test_invalid_element_raises():
+    with pytest.raises(ValueError):
+        Element.make("bad", key_retention="maybe")
+    with pytest.raises(ValueError):
+        Element.make("bad", fanout=("terminal", 16),
+                     sub_block_physical_layout="BFS")
+
+
+def test_spec_requires_terminal_last():
+    with pytest.raises(ValueError):
+        DataStructureSpec("x", (el.btree_internal(),))
+    with pytest.raises(ValueError):
+        DataStructureSpec("x", (el.unordered_data_page(),
+                                el.unordered_data_page()))
+
+
+def test_all_paper_specs_construct():
+    import inspect
+    for name, make in el.ALL_PAPER_SPECS.items():
+        sig = inspect.signature(make)
+        spec = make(1000) if "n_puts" in sig.parameters else make()
+        assert spec.terminal.terminal
+        assert "->" in spec.describe() or len(spec.chain) == 1
+
+
+def test_with_values_override():
+    leaf = el.ordered_data_page().with_values(
+        bloom_filters=("on", 4, 1 << 14),
+        filters_memory_layout="scatter")
+    assert leaf.tag("bloom_filters") == "on"
+    # original untouched (immutability)
+    assert el.ordered_data_page().tag("bloom_filters") == "off"

@@ -1,0 +1,173 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret
+mode (deliverable c)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bloom_probe.ops import DEFAULT_COEFFS, bloom_probe
+from repro.kernels.bloom_probe.ref import bloom_probe_ref, build_filter
+from repro.kernels.flash_attention.ops import (flash_attention,
+                                               flash_attention_bshd)
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.hash_probe.ops import DEFAULT_A, hash_probe
+from repro.kernels.hash_probe.ref import build_table, hash_probe_ref
+from repro.kernels.scan_filter.kernel import NOT_FOUND
+from repro.kernels.scan_filter.ops import scan_filter, scan_get
+from repro.kernels.sorted_search.ops import sorted_get, sorted_search
+from repro.kernels.sorted_search.ref import sorted_search_ref
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("b,h,kh,sq,skv,d", [
+    (1, 1, 1, 128, 128, 32),
+    (2, 4, 2, 256, 256, 64),     # GQA group 2
+    (1, 8, 1, 128, 512, 16),     # MQA
+    (2, 4, 4, 200, 300, 24),     # ragged (padding path)
+    (1, 2, 2, 384, 128, 128),    # q longer than kv
+])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(b, h, kh, sq, skv, d, causal, dtype,
+                                     rng):
+    q = jnp.asarray(rng.standard_normal((b, h, sq, d)), dtype)
+    k = jnp.asarray(rng.standard_normal((b, kh, skv, d)), dtype)
+    v = jnp.asarray(rng.standard_normal((b, kh, skv, d)), dtype)
+    got = np.asarray(flash_attention(q, k, v, causal), np.float32)
+    want = np.asarray(attention_ref(q, k, v, causal=causal), np.float32)
+    # causal rows with no visible keys are NaN in the ref (all -inf); the
+    # kernel returns 0 there — compare only defined rows
+    mask = np.isfinite(want)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(got[mask], want[mask], rtol=tol, atol=tol)
+
+
+def test_flash_attention_bshd_layout(rng):
+    q = jnp.asarray(rng.standard_normal((2, 256, 4, 32)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((2, 256, 2, 32)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((2, 256, 2, 32)), jnp.float32)
+    got = flash_attention_bshd(q, k, v, causal=True)
+    want = attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                         v.transpose(0, 2, 1, 3),
+                         causal=True).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_grad_runs(rng):
+    q = jnp.asarray(rng.standard_normal((1, 2, 128, 16)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 2, 128, 16)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 2, 128, 16)), jnp.float32)
+
+    def loss(q, k, v):
+        return flash_attention(q, k, v, True).sum()
+
+    grads = jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
+    ref_grads = jax.grad(
+        lambda q, k, v: attention_ref(q, k, v, causal=True).sum(),
+        argnums=(0, 1, 2))(q, k, v)
+    for g, r in zip(grads, ref_grads):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(r),
+                                   rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# sorted search
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n,q", [(512, 256), (1000, 300), (64, 1000),
+                                 (4096, 512)])
+@pytest.mark.parametrize("dtype", [np.int32, np.int64, np.float32])
+def test_sorted_search_matches_ref(n, q, dtype, rng):
+    keys = np.sort(rng.integers(0, 1 << 20, n)).astype(dtype)
+    queries = rng.integers(-5, 1 << 20, q).astype(dtype)
+    got = sorted_search(jnp.asarray(keys), jnp.asarray(queries))
+    want = sorted_search_ref(jnp.asarray(keys), jnp.asarray(queries))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_sorted_get_point_lookup(rng):
+    keys = np.sort(rng.choice(1 << 16, 700, replace=False)).astype(np.int32)
+    values = (keys * 3 + 1).astype(np.int32)
+    hits = keys[rng.integers(0, len(keys), 100)]
+    found, val = sorted_get(jnp.asarray(keys), jnp.asarray(values),
+                            jnp.asarray(hits))
+    assert bool(np.asarray(found).all())
+    np.testing.assert_array_equal(np.asarray(val), hits * 3 + 1)
+    found, _ = sorted_get(jnp.asarray(keys), jnp.asarray(values),
+                          jnp.asarray(np.asarray([1 << 20], np.int32)))
+    assert not bool(np.asarray(found).any())
+
+
+# ---------------------------------------------------------------------------
+# scan filter
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n,q", [(512, 256), (1500, 100), (128, 770)])
+def test_scan_filter_matches_ref(n, q, rng):
+    from repro.kernels.scan_filter.ref import scan_filter_ref
+    keys = rng.integers(0, 1 << 16, n).astype(np.int32)
+    queries = rng.integers(0, 1 << 16, q).astype(np.int32)
+    lo, hi = queries - 64, queries + 64
+    got = scan_filter(jnp.asarray(keys), jnp.asarray(queries),
+                      jnp.asarray(lo), jnp.asarray(hi))
+    want = scan_filter_ref(jnp.asarray(keys), jnp.asarray(queries),
+                           jnp.asarray(lo), jnp.asarray(hi))
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(want[1]))
+
+
+def test_scan_get_finds_first_duplicate(rng):
+    keys = np.asarray([5, 3, 5, 7, 3, 9] * 100, np.int32)
+    values = np.arange(len(keys), dtype=np.int32)
+    found, val = scan_get(jnp.asarray(keys), jnp.asarray(values),
+                          jnp.asarray(np.asarray([5, 3, 11], np.int32)))
+    assert np.asarray(found).tolist() == [True, True, False]
+    assert np.asarray(val).tolist()[:2] == [0, 1]   # first occurrences
+
+
+# ---------------------------------------------------------------------------
+# hash probe
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("s,cap,n", [(6, 32, 500), (8, 16, 1000),
+                                     (10, 8, 2000)])
+def test_hash_probe_matches_ref(s, cap, n, rng):
+    keys = rng.choice(1 << 20, n, replace=False).astype(np.int64)
+    values = rng.integers(1, 1 << 30, n).astype(np.int32)
+    tk, tv = build_table(keys, values, s, DEFAULT_A, cap)
+    queries = np.concatenate([keys[: n // 2],
+                              rng.integers(1 << 21, 1 << 22, 100)])
+    found, val = hash_probe(jnp.asarray(tk), jnp.asarray(tv),
+                            jnp.asarray(queries.astype(np.int32)), s=s)
+    pos_r, val_r = hash_probe_ref(tk, tv, queries.astype(np.int32),
+                                  DEFAULT_A, s)
+    np.testing.assert_array_equal(np.asarray(found), pos_r != 2147483647)
+    np.testing.assert_array_equal(np.asarray(val), val_r)
+
+
+# ---------------------------------------------------------------------------
+# bloom probe
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("s,k", [(13, 1), (15, 2), (16, 4)])
+def test_bloom_probe_matches_ref(s, k, rng):
+    keys = rng.choice(1 << 24, 2000, replace=False).astype(np.int64)
+    words = build_filter(keys, DEFAULT_COEFFS[:k], s)
+    queries = np.concatenate([keys[:500],
+                              rng.integers(1 << 25, 1 << 26, 500)])
+    got = bloom_probe(jnp.asarray(words),
+                      jnp.asarray(queries.astype(np.int32)), s=s,
+                      num_hashes=k)
+    want = bloom_probe_ref(words, queries.astype(np.int32),
+                           DEFAULT_COEFFS[:k], s)
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_bloom_no_false_negatives(rng):
+    """The defining bloom filter property, end to end through the kernel."""
+    keys = rng.choice(1 << 22, 3000, replace=False).astype(np.int64)
+    words = build_filter(keys, DEFAULT_COEFFS[:3], 16)
+    member = bloom_probe(jnp.asarray(words),
+                         jnp.asarray(keys.astype(np.int32)), s=16,
+                         num_hashes=3)
+    assert bool(np.asarray(member).all())

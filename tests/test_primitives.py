@@ -1,0 +1,104 @@
+"""Layout primitives, invalidation rules, and design-space cardinality
+(paper §2 / Appendix C, Equations 1-4)."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import design_space
+from repro.core.primitives import (INVALIDATION_RULES, PRIMITIVES,
+                                   enumerate_elements, tag_of,
+                                   validate_assignment)
+
+
+def test_all_21_primitives_present():
+    assert len(PRIMITIVES) == 21
+
+
+def test_domains_match_tags():
+    for prim in PRIMITIVES.values():
+        for value in prim.domain:
+            assert prim.validate(value), (prim.name, value)
+
+
+def test_unknown_primitive_rejected():
+    assert validate_assignment({"no_such_primitive": "yes"})
+
+
+def test_out_of_domain_value_rejected():
+    errors = validate_assignment({"key_retention": "maybe"})
+    assert any("outside domain" in e for e in errors)
+
+
+def test_rule_kv_layout_requires_retention():
+    errors = validate_assignment({
+        "key_retention": "no", "value_retention": "no",
+        "key_value_layout": "columnar"})
+    assert any("retention" in e for e in errors)
+
+
+def test_rule_terminal_excludes_child_primitives():
+    errors = validate_assignment({
+        "fanout": ("terminal", 256),
+        "sub_block_physical_layout": "BFS"})
+    assert any("requires fanout != terminal" in e for e in errors)
+
+
+def test_rule_links_location():
+    errors = validate_assignment({
+        "immediate_node_links": "none", "skip_node_links": "none",
+        "links_location": "scatter"})
+    assert any("links" in e for e in errors)
+
+
+def test_enumerate_elements_yields_valid_assignments():
+    names = ("key_retention", "value_retention", "key_value_layout",
+             "fanout")
+    count = 0
+    for values in enumerate_elements(names, max_count=64):
+        assert not validate_assignment(values)
+        count += 1
+    assert count > 0
+
+
+# -- hypothesis: any combination drawn from the primitive domains either
+# validates cleanly or every reported error names a real rule -------------
+@st.composite
+def assignments(draw):
+    names = draw(st.lists(st.sampled_from(sorted(PRIMITIVES)), min_size=1,
+                          max_size=8, unique=True))
+    return {n: draw(st.sampled_from(PRIMITIVES[n].domain)) for n in names}
+
+
+@given(assignments())
+@settings(max_examples=200, deadline=None)
+def test_validation_is_total_and_stable(values):
+    errors = validate_assignment(values)
+    assert errors == validate_assignment(values)  # deterministic
+    for error in errors:
+        assert isinstance(error, str) and error
+
+
+# -- design-space cardinality (paper §2) ----------------------------------
+def test_element_cardinality_matches_paper_order():
+    log10 = math.log10(design_space.element_cardinality())
+    assert 15.0 <= log10 <= 18.0          # paper: ~10^16
+
+
+def test_two_element_structures_match_paper_order():
+    log10 = math.log10(design_space.standard_design_cardinality(2))
+    assert 30.0 <= log10 <= 36.0          # paper: ~10^32
+
+
+def test_three_element_structures_match_paper_order():
+    log10 = math.log10(design_space.standard_design_cardinality(3))
+    assert 45.0 <= log10 <= 54.0          # paper: ~10^48
+
+
+def test_polymorphic_exceeds_1e100_for_1e15_keys():
+    assert design_space.polymorphic_design_cardinality(1e15) > 100.0
+
+
+def test_fixed_library_comparison():
+    # Appendix B: a 5-structure library yields 25 two-element designs
+    assert design_space.fixed_library_cardinality(5, 2) == 25

@@ -1,0 +1,68 @@
+"""Ground-truth data structure implementations (paper §5 baselines):
+behavioural equivalence against a dict oracle, incl. hypothesis sweeps."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import structures as S
+
+
+def _build(cls, rng, n=2000):
+    keys = rng.choice(np.arange(n * 4), size=n, replace=False).astype(np.int64)
+    values = rng.integers(0, 1 << 30, size=n).astype(np.int64)
+    s = cls()
+    s.bulk_load(keys, values)
+    return s, dict(zip(keys.tolist(), values.tolist()))
+
+
+@pytest.mark.parametrize("name", sorted(S.ALL_STRUCTURES))
+def test_get_matches_oracle(name, rng):
+    s, oracle = _build(S.ALL_STRUCTURES[name], rng)
+    keys = list(oracle)
+    for key in keys[:50]:
+        assert s.get(key) == oracle[key], name
+    for miss in range(10**7, 10**7 + 20):
+        assert s.get(miss) is None, name
+
+
+@pytest.mark.parametrize("name", sorted(S.ALL_STRUCTURES))
+def test_range_get_matches_oracle(name, rng):
+    s, oracle = _build(S.ALL_STRUCTURES[name], rng)
+    for lo in (0, 1000, 5000):
+        hi = lo + 1500
+        want = sorted(v for k, v in oracle.items() if lo <= k < hi)
+        got = sorted(s.range_get(lo, hi))
+        assert got == want, name
+
+
+@pytest.mark.parametrize("name", sorted(S.ALL_STRUCTURES))
+def test_update_matches_oracle(name, rng):
+    s, oracle = _build(S.ALL_STRUCTURES[name], rng)
+    keys = list(oracle)[:20]
+    for i, key in enumerate(keys):
+        assert s.update(key, i)
+        assert s.get(key) == i, name
+    assert not s.update(10**9, 1)
+
+
+@given(st.lists(st.integers(min_value=0, max_value=10**6), min_size=1,
+                max_size=300, unique=True),
+       st.sampled_from(sorted(S.ALL_STRUCTURES)))
+@settings(max_examples=40, deadline=None)
+def test_structures_property(keys, name):
+    keys = np.asarray(keys, np.int64)
+    values = keys * 7 + 1
+    s = S.ALL_STRUCTURES[name]()
+    s.bulk_load(keys, values)
+    probe = keys[len(keys) // 2]
+    assert s.get(int(probe)) == int(probe) * 7 + 1
+    lo, hi = int(keys.min()), int(keys.max()) + 1
+    assert sorted(s.range_get(lo, hi)) == sorted(values.tolist())
+
+
+def test_measure_workload_runs(rng):
+    s = S.BPlusTree()
+    keys = rng.permutation(5000).astype(np.int64)
+    values = keys.copy()
+    out = S.measure_workload(s, keys, values, queries=keys[:100])
+    assert out["bulk_load_s"] > 0 and out["per_query_s"] > 0

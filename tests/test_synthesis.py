@@ -1,0 +1,154 @@
+"""Operation & cost synthesis (paper §3): the worked B-tree example, block
+instantiation, skew, and synthesis invariants."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import access, elements as el, synthesis
+from repro.core.synthesis import (CostBreakdown, Workload, instantiate,
+                                  synthesize_bulk_load, synthesize_get,
+                                  synthesize_range_get, synthesize_update)
+
+
+def test_paper_btree_example_exact():
+    """§3 'Example: Cache-aware Cost Synthesis' — fanout 20, page 250,
+    1e5 records, 8B keys/values: the synthesizer must log exactly
+    P(312) B(152) P(6552) B(152) P(1606552) B(2000) P(2000)."""
+    spec = el.spec_btree(fanout=20, page=250)
+    workload = Workload(n_entries=100_000, key_bytes=8, value_bytes=8)
+    cb = synthesize_get(spec, workload)
+    sizes = [(rec.level1, round(rec.size)) for rec in cb.records]
+    assert sizes == [
+        (access.RANDOM_ACCESS, 312),
+        (access.SORTED_SEARCH, 152),
+        (access.RANDOM_ACCESS, 6552),
+        (access.SORTED_SEARCH, 152),
+        (access.RANDOM_ACCESS, 1606552),
+        (access.SORTED_SEARCH, 2000),
+        (access.RANDOM_ACCESS, 2000),
+    ]
+
+
+def test_btree_instance_geometry():
+    spec = el.spec_btree(fanout=20, page=250)
+    inst = instantiate(spec, Workload(n_entries=100_000))
+    # 400 pages, height-2 internal hierarchy (root + 20 nodes)
+    assert inst.terminal.n_nodes == 400
+    assert [lvl.n_nodes for lvl in inst.levels[:-1]] == [1, 20]
+
+
+def test_region_sizes_monotone_down_the_path():
+    spec = el.spec_btree(fanout=20, page=250)
+    inst = instantiate(spec, Workload(n_entries=1_000_000))
+    regions = [lvl.region_bytes for lvl in inst.levels]
+    assert all(a <= b for a, b in zip(regions, regions[1:]))
+
+
+def test_sorted_leaf_uses_sorted_search_unsorted_uses_scan():
+    w = Workload(n_entries=10_000)
+    cb_sorted = synthesize_get(el.spec_sorted_array(10_000), w)
+    assert any(r.level1 == access.SORTED_SEARCH for r in cb_sorted.records)
+    cb_unsorted = synthesize_get(el.spec_array(10_000), w)
+    assert any(r.level1 == access.SCAN for r in cb_unsorted.records)
+    assert not any(r.level1 == access.SORTED_SEARCH
+                   for r in cb_unsorted.records)
+
+
+def test_hash_table_uses_hash_probe():
+    cb = synthesize_get(el.spec_hash_table(), Workload(n_entries=10_000))
+    assert any(r.level1 == access.HASH_PROBE for r in cb.records)
+
+
+def test_bulk_load_sorts_only_sorted_structures():
+    w = Workload(n_entries=10_000)
+    cb = synthesize_bulk_load(el.spec_btree(), w)
+    assert any(r.level1 == access.SORT for r in cb.records)
+    cb = synthesize_bulk_load(el.spec_linked_list(), w)
+    assert not any(r.level1 == access.SORT for r in cb.records)
+
+
+def test_update_is_get_plus_write():
+    w = Workload(n_entries=10_000)
+    get = synthesize_get(el.spec_btree(), w)
+    upd = synthesize_update(el.spec_btree(), w)
+    assert len(upd.records) == len(get.records) + 1
+    assert upd.records[-1].level1 == access.SERIAL_WRITE
+
+
+def test_range_get_scales_with_selectivity(hw_analytical):
+    spec = el.spec_btree()
+    lo = synthesis.cost("range_get", spec,
+                        Workload(n_entries=1_000_000, selectivity=0.001),
+                        hw_analytical)
+    hi = synthesis.cost("range_get", spec,
+                        Workload(n_entries=1_000_000, selectivity=0.1),
+                        hw_analytical)
+    assert hi > lo
+
+
+def test_skew_reduces_cost(hw_analytical):
+    """Fig. 8b: zipfian gets are cheaper (hot paths cached)."""
+    spec = el.spec_btree()
+    uniform = synthesis.cost("get", spec, Workload(n_entries=1_000_000),
+                             hw_analytical)
+    skewed = synthesis.cost(
+        "get", spec, Workload(n_entries=1_000_000, zipf_alpha=1.5),
+        hw_analytical)
+    assert skewed < uniform
+
+
+def test_skew_helps_btree_more_than_csb(hw_analytical):
+    """Fig. 8b: CSB+ improves less under skew — it is already
+    cache-optimized."""
+    w_uni = Workload(n_entries=1_000_000)
+    w_skew = Workload(n_entries=1_000_000, zipf_alpha=1.5)
+    bt_gain = (synthesis.cost("get", el.spec_btree(), w_uni, hw_analytical) /
+               synthesis.cost("get", el.spec_btree(), w_skew, hw_analytical))
+    csb_gain = (synthesis.cost("get", el.spec_csb_tree(), w_uni,
+                               hw_analytical) /
+                synthesis.cost("get", el.spec_csb_tree(), w_skew,
+                               hw_analytical))
+    assert bt_gain >= csb_gain * 0.99
+
+
+def test_csb_cheaper_than_btree(hw_analytical):
+    """Cache-conscious layout reduces traversal cost (Fig. 8a)."""
+    w = Workload(n_entries=1_000_000)
+    csb = synthesis.cost("get", el.spec_csb_tree(), w, hw_analytical)
+    bt = synthesis.cost("get", el.spec_btree(), w, hw_analytical)
+    assert csb <= bt
+
+
+def test_format_matches_appendix_g1_style():
+    cb = synthesize_get(el.spec_btree(fanout=20, page=250),
+                        Workload(n_entries=100_000))
+    text = cb.format()
+    assert text.startswith("P(312)+B(152)+P(6552)")
+
+
+@given(st.integers(min_value=100, max_value=10_000_000))
+@settings(max_examples=30, deadline=None)
+def test_cost_positive_and_monotone_in_data(n):
+    """Synthesized B-tree get cost grows (weakly) with data size."""
+    from repro.core.hardware import hw1
+    hw = hw1()
+    spec = el.spec_btree()
+    small = synthesis.cost("get", spec, Workload(n_entries=n), hw)
+    large = synthesis.cost("get", spec, Workload(n_entries=n * 4), hw)
+    assert small > 0
+    assert large >= small * 0.8  # tree height is a step function; allow 20%
+
+
+@given(st.sampled_from(sorted(el.ALL_PAPER_SPECS)),
+       st.sampled_from(["get", "range_get", "bulk_load", "update"]))
+@settings(max_examples=60, deadline=None)
+def test_every_operation_synthesizes_on_every_spec(name, op):
+    import inspect
+    make = el.ALL_PAPER_SPECS[name]
+    sig = inspect.signature(make)
+    spec = make(10_000) if "n_puts" in sig.parameters else make()
+    cb = synthesis.synthesize_operation(op, spec, Workload(n_entries=10_000))
+    assert cb.records
+    assert all(rec.size >= 1.0 and rec.count > 0 for rec in cb.records)

@@ -1,0 +1,316 @@
+"""Training infrastructure: optimizer, grad accumulation, chunked CE,
+checkpointing, data pipeline, fault tolerance, distcalc."""
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, get_smoke_config
+from repro.configs.base import RunConfig, SHAPES
+from repro.core import distcalc
+from repro.checkpoint.checkpoint import (CheckpointManager, latest_step,
+                                         restore_checkpoint,
+                                         save_checkpoint)
+from repro.data.pipeline import DataPipeline, make_batch, synthetic_batch
+from repro.models import build
+from repro.models import layers as L
+from repro.optim.adamw import (adamw_init, adamw_update, apply_updates,
+                               clip_by_global_norm, cosine_schedule)
+from repro.train import ft
+from repro.train.loop import (chunked_cross_entropy, cross_entropy_loss,
+                              init_state, make_train_step)
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+def test_adamw_minimizes_quadratic():
+    run = RunConfig(learning_rate=0.1, warmup_steps=1, total_steps=200,
+                    weight_decay=0.0)
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = adamw_init(params)
+    for _ in range(150):
+        grads = {"w": 2 * params["w"]}
+        updates, state = adamw_update(grads, state, params, run)
+        params = apply_updates(params, updates)
+    assert float(jnp.abs(params["w"]).max()) < 0.5
+
+
+def test_clip_by_global_norm():
+    grads = {"a": jnp.full((10,), 10.0)}
+    clipped, norm = clip_by_global_norm(grads, 1.0)
+    assert float(norm) == pytest.approx(np.sqrt(1000.0), rel=1e-5)
+    got = float(jnp.sqrt((clipped["a"] ** 2).sum()))
+    assert got == pytest.approx(1.0, rel=1e-4)
+
+
+def test_cosine_schedule_warmup_and_decay():
+    run = RunConfig(learning_rate=1e-3, warmup_steps=10, total_steps=100)
+    lr0 = float(cosine_schedule(jnp.asarray(1), run))
+    lr_peak = float(cosine_schedule(jnp.asarray(10), run))
+    lr_end = float(cosine_schedule(jnp.asarray(100), run))
+    assert lr0 < lr_peak
+    assert lr_end < lr_peak
+    assert lr_end >= 0.09 * run.learning_rate  # 10% floor
+
+
+# ---------------------------------------------------------------------------
+# chunked CE + gradient accumulation equivalences
+# ---------------------------------------------------------------------------
+def test_chunked_ce_matches_naive():
+    cfg = get_smoke_config("qwen2-1.5b")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    b, s = 2, 64
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)
+    labels = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)
+    x, _ = model.forward(params, tokens, hidden=True)
+    naive = cross_entropy_loss(L.unembed(params["embed"], x, cfg), labels)
+    import repro.train.loop as loop
+    old = loop.CE_CHUNK
+    loop.CE_CHUNK = 16
+    try:
+        chunked = chunked_cross_entropy(x, params["embed"], labels, cfg)
+    finally:
+        loop.CE_CHUNK = old
+    np.testing.assert_allclose(float(chunked), float(naive), rtol=1e-5)
+
+
+def test_grad_accumulation_matches_full_batch():
+    cfg = get_smoke_config("qwen2-1.5b")
+    model = build(cfg)
+    state = init_state(model, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (8, 32)),
+                              jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (8, 32)),
+                              jnp.int32)}
+    full = jax.jit(make_train_step(model, RunConfig()))
+    accum = jax.jit(make_train_step(model, RunConfig(microbatch=2)))
+    s1, m1 = full(state, batch)
+    s2, m2 = accum(state, batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                               rtol=1e-4)
+    np.testing.assert_allclose(float(m1["grad_norm"]),
+                               float(m2["grad_norm"]), rtol=1e-3)
+    leaves1 = jax.tree.leaves(s1.params)
+    leaves2 = jax.tree.leaves(s2.params)
+    for a, b in zip(leaves1, leaves2):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=2e-2, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(8.0), "b": {"c": jnp.ones((3, 3), jnp.bfloat16)}}
+    save_checkpoint(str(tmp_path), 7, tree, extra={"loss": 1.5})
+    assert latest_step(str(tmp_path)) == 7
+    step, restored = restore_checkpoint(str(tmp_path), tree)
+    assert step == 7
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.arange(8.0))
+    assert restored["b"]["c"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_atomicity(tmp_path):
+    """A .tmp directory must never be visible as a checkpoint."""
+    os.makedirs(tmp_path / "step_00000003.tmp")
+    assert latest_step(str(tmp_path)) is None
+    save_checkpoint(str(tmp_path), 4, {"x": jnp.zeros(2)})
+    assert latest_step(str(tmp_path)) == 4
+
+
+def test_checkpoint_manager_async_and_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for step in (1, 2, 3, 4):
+        mgr.save(step, {"x": jnp.full((4,), float(step))})
+    mgr.wait()
+    steps = sorted(int(n.split("_")[1]) for n in os.listdir(tmp_path)
+                   if n.startswith("step_"))
+    assert steps == [3, 4]
+    _, restored = restore_checkpoint(str(tmp_path), {"x": jnp.zeros(4)})
+    assert float(restored["x"][0]) == 4.0
+
+
+def test_restart_resumes_training(tmp_path):
+    """Kill-and-restart: restore reproduces the exact state."""
+    cfg = get_smoke_config("qwen2-1.5b")
+    model = build(cfg)
+    state = init_state(model, jax.random.PRNGKey(0))
+    step_fn = jax.jit(make_train_step(model, RunConfig()))
+    batch = {k: jnp.asarray(v) for k, v in {
+        "tokens": np.ones((2, 16), np.int32),
+        "labels": np.ones((2, 16), np.int32)}.items()}
+    state, _ = step_fn(state, batch)
+    save_checkpoint(str(tmp_path), 1, state)
+    # "crash"; restart from disk
+    template = jax.eval_shape(lambda: init_state(model,
+                                                 jax.random.PRNGKey(0)))
+    step, restored = restore_checkpoint(str(tmp_path), template)
+    state2, m2 = step_fn(restored, batch)
+    state1, m1 = step_fn(state, batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                               rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+def test_synthetic_batch_deterministic_and_sharded():
+    full = synthetic_batch(step=3, batch=8, seq_len=16, vocab=100)
+    again = synthetic_batch(step=3, batch=8, seq_len=16, vocab=100)
+    np.testing.assert_array_equal(full["tokens"], again["tokens"])
+    other_step = synthetic_batch(step=4, batch=8, seq_len=16, vocab=100)
+    assert not np.array_equal(full["tokens"], other_step["tokens"])
+    s0 = synthetic_batch(step=3, batch=8, seq_len=16, vocab=100,
+                         shard=0, n_shards=2)
+    s1 = synthetic_batch(step=3, batch=8, seq_len=16, vocab=100,
+                         shard=1, n_shards=2)
+    assert s0["tokens"].shape == (4, 16)
+    assert not np.array_equal(s0["tokens"], s1["tokens"])
+    assert (full["tokens"] < 100).all()
+
+
+def test_pipeline_prefetch_and_restart_safety():
+    cfg = get_smoke_config("qwen2-1.5b")
+    shape = dataclasses.replace(SHAPES["train_4k"], global_batch=2,
+                                seq_len=16)
+    pipe = DataPipeline(cfg, shape, start_step=5)
+    step, batch = next(pipe)
+    pipe.close()
+    assert step == 5
+    np.testing.assert_array_equal(batch["tokens"],
+                                  make_batch(cfg, shape, 5)["tokens"])
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance
+# ---------------------------------------------------------------------------
+def test_straggler_detection():
+    det = ft.StragglerDetector(threshold=2.0)
+    for _ in range(20):
+        for w in ("w0", "w1", "w2", "w3"):
+            det.observe(w, 1.0)
+        det.observe("slow", 5.0)
+    assert det.stragglers() == ["slow"]
+
+
+def test_heartbeat_dead_workers(tmp_path):
+    mon = ft.HeartbeatMonitor(str(tmp_path), timeout_seconds=60)
+    mon.beat("w0")
+    assert mon.dead_workers(["w0", "w1"]) == ["w1"]
+
+
+def test_elastic_remesh_plan():
+    plan = ft.plan_elastic_remesh(available_pods=3, pod_shape=(16, 16),
+                                  global_batch=256, old_pods=4)
+    assert plan.new_pods == 2 and plan.valid()
+    assert plan.mesh_shape == (2, 16, 16)
+    assert plan.per_pod_batch == 128
+    single = ft.plan_elastic_remesh(1, (16, 16), 256, 2)
+    assert single.mesh_shape == (16, 16)
+
+
+def test_ft_manager_restart_decision(tmp_path):
+    mgr = ft.FaultToleranceManager(
+        heartbeat=ft.HeartbeatMonitor(str(tmp_path), timeout_seconds=60),
+        stragglers=ft.StragglerDetector(),
+        checkpoint_dir=str(tmp_path), workers=("w0", "w1"))
+    mgr.on_step("w0", 1.0)
+    assert mgr.should_restart()          # w1 never reported
+    mgr.on_step("w1", 1.0)
+    assert not mgr.should_restart()
+
+
+# ---------------------------------------------------------------------------
+# distributed data calculator
+# ---------------------------------------------------------------------------
+def test_distcalc_invalidation_rules():
+    cfg = get_config("qwen2-1.5b")
+    shape = SHAPES["train_4k"]
+    mesh = distcalc.MeshSpec()
+    bad_tp = distcalc.Strategy(tp=32)
+    assert distcalc.invalid_reasons(cfg, shape, mesh, bad_tp)
+    bad_ep = distcalc.Strategy(tp=1, ep=True)
+    assert any("MoE" in e for e in
+               distcalc.invalid_reasons(cfg, shape, mesh, bad_ep))
+
+
+def test_distcalc_terms_positive_and_fsdp_saves_memory():
+    cfg = get_config("llama3-405b")
+    shape = SHAPES["train_4k"]
+    mesh = distcalc.MeshSpec()
+    fsdp = distcalc.synthesize(cfg, shape, mesh,
+                               distcalc.Strategy(tp=16, fsdp=True, ep=False))
+    dp = distcalc.synthesize(cfg, shape, mesh,
+                             distcalc.Strategy(tp=16, fsdp=False, ep=False))
+    for terms in (fsdp, dp):
+        assert terms.compute_s > 0 and terms.memory_s > 0
+    assert fsdp.hbm_bytes_per_chip < dp.hbm_bytes_per_chip
+
+
+def test_distcalc_autocomplete_returns_fitting_strategy():
+    cfg = get_config("llama3-405b")
+    shape = SHAPES["train_4k"]
+    mesh = distcalc.MeshSpec(pods=2)
+    strat, terms = distcalc.complete_strategy(cfg, shape, mesh)
+    assert distcalc.fits_memory(cfg, shape, mesh, strat)
+    assert terms.step_seconds > 0
+
+
+def test_distcalc_what_if_more_pods_speeds_up_compute_bound():
+    cfg = get_config("qwen1.5-32b")
+    shape = SHAPES["train_4k"]
+    out = distcalc.what_if_mesh(cfg, shape, distcalc.MeshSpec(pods=1),
+                                distcalc.MeshSpec(pods=2))
+    assert out["variant_step_s"] <= out["base_step_s"] * 1.05
+
+
+def test_distcalc_moe_uses_ep():
+    cfg = get_config("phi3.5-moe-42b-a6.6b")
+    shape = SHAPES["train_4k"]
+    strat, _ = distcalc.complete_strategy(cfg, shape, distcalc.MeshSpec())
+    assert strat.ep
+
+
+def test_grad_compression_close_to_fp32():
+    """bf16 gradient reduction tracks the fp32 path within bf16 tolerance."""
+    cfg = get_smoke_config("qwen2-1.5b")
+    model = build(cfg)
+    state = init_state(model, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 32)),
+                              jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 32)),
+                              jnp.int32)}
+    full = jax.jit(make_train_step(model, RunConfig()))
+    comp = jax.jit(make_train_step(model, RunConfig(grad_compression=True)))
+    _, m1 = full(state, batch)
+    _, m2 = comp(state, batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                               rtol=1e-5)
+    np.testing.assert_allclose(float(m1["grad_norm"]),
+                               float(m2["grad_norm"]), rtol=2e-2)
+
+
+def test_bf16_moments_train_step_finite():
+    cfg = get_smoke_config("qwen2-1.5b")
+    model = build(cfg)
+    state = init_state(model, jax.random.PRNGKey(0), jnp.bfloat16)
+    assert jax.tree.leaves(state.opt.mu)[0].dtype == jnp.bfloat16
+    step = jax.jit(make_train_step(model, RunConfig()))
+    batch = {"tokens": jnp.ones((2, 16), jnp.int32),
+             "labels": jnp.ones((2, 16), jnp.int32)}
+    state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert jax.tree.leaves(state.opt.mu)[0].dtype == jnp.bfloat16

@@ -1,0 +1,86 @@
+"""What-if design questions and Algorithm-1 auto-completion (paper §4)."""
+import dataclasses
+
+import pytest
+
+from repro.core import autocomplete, elements as el, whatif
+from repro.core.autocomplete import DomainRegion, complete_design, design_hybrid
+from repro.core.hardware import hw1, hw3
+from repro.core.synthesis import Workload
+
+
+W = Workload(n_entries=1_000_000, n_queries=100)
+
+
+def test_what_if_hardware_faster_machine_wins(hw_analytical):
+    ans = whatif.what_if_hardware(el.spec_btree(), W, hw1(), hw3())
+    assert ans.beneficial          # HW3 is strictly faster in every constant
+    assert ans.elapsed_seconds < 30.0  # "in a matter of seconds" (§5)
+
+
+def test_what_if_bloom_filter_point_queries(hw_analytical):
+    """§5: 'Would it be beneficial to add a bloom filter in all leaves?'
+    For point Gets over a hash table with multi-page buckets, skipping
+    pages via bloom filters must at least not hurt by much; the answer is
+    computed, not guessed — we assert the engine answers quickly and
+    consistently."""
+    base = el.spec_hash_table()
+    varied = whatif.add_bloom_filters(base)
+    ans = whatif.what_if_design(base, varied, W, hw1())
+    assert ans.baseline_seconds > 0 and ans.variant_seconds > 0
+    again = whatif.what_if_design(base, varied, W, hw1())
+    assert ans.beneficial == again.beneficial
+
+
+def test_what_if_workload_skew(hw_analytical):
+    skewed = dataclasses.replace(W, zipf_alpha=1.5)
+    ans = whatif.what_if_workload(el.spec_btree(), W, skewed, hw1())
+    assert ans.beneficial  # skew improves B-tree gets (Fig. 8b)
+
+
+def test_autocomplete_point_read_workload_prefers_index(hw_analytical):
+    """A point-get workload must not complete to a bare linked list."""
+    result = complete_design((), W, hw1(), mix={"get": 100.0}, max_depth=2)
+    names = [e.name for e in result.spec.chain]
+    assert names[-1] in ("ODP", "UDP")
+    assert result.spec.chain[0].name != "LL"
+    assert result.explored > 5
+
+
+def test_autocomplete_respects_partial_prefix(hw_analytical):
+    prefix = (el.hash_element(100),)
+    result = complete_design(prefix, W, hw1(), mix={"get": 100.0},
+                             max_depth=2)
+    assert result.spec.chain[0].name == "Hash"
+
+
+def test_autocomplete_memoization_dedupes_prefixes(hw_analytical):
+    """The paper's cachedSolution: identical (prefix, level) sub-searches
+    are solved once — duplicating candidates must not grow exploration."""
+    pool = autocomplete.default_candidates()
+    r1 = complete_design((), W, hw1(), candidates=pool,
+                         mix={"get": 50.0}, max_depth=2)
+    r2 = complete_design((), W, hw1(), candidates=pool + pool,
+                         mix={"get": 50.0}, max_depth=2)
+    assert r2.explored == r1.explored
+    assert r2.cost_seconds == pytest.approx(r1.cost_seconds, rel=1e-9)
+
+
+def test_autocomplete_range_workload_gets_ordered_terminal(hw_analytical):
+    result = complete_design((), W, hw1(), mix={"range_get": 100.0},
+                             max_depth=2)
+    assert result.spec.terminal.name == "ODP" or \
+        result.spec.terminal.sorted_keys
+
+
+def test_design_hybrid_two_scenarios(hw_analytical):
+    """Fig. 9: mixed point/range/write regions produce per-region designs."""
+    regions = [
+        DomainRegion("reads", 0.2, {"get": 100.0}),
+        DomainRegion("writes", 0.8, {"bulk_load": 1.0, "update": 100.0}),
+    ]
+    design = design_hybrid(W, regions, hw1())
+    assert len(design.regions) == 2
+    assert design.cost_seconds > 0
+    text = design.describe()
+    assert "reads" in text and "writes" in text
