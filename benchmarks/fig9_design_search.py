@@ -21,6 +21,14 @@ from repro.core.synthesis import Workload
 W = Workload(n_entries=1_000_000, n_queries=100)
 
 
+def _hybrid_row(label: str, hybrid, elapsed: float) -> dict:
+    designs = sum(result.explored for _, result in hybrid.regions)
+    return {"scenario": label, "design": hybrid.describe(),
+            "cost_s": hybrid.cost_seconds, "search_seconds": elapsed,
+            "designs_costed": designs,
+            "designs_per_s": designs / max(elapsed, 1e-12)}
+
+
 def run(quick: bool = False) -> None:
     hw = hw3()
     rows = []
@@ -30,10 +38,7 @@ def run(quick: bool = False) -> None:
         DomainRegion("point-reads", 0.2, {"get": 100.0}),
         DomainRegion("writes", 0.8, {"update": 100.0, "bulk_load": 1.0}),
     ], hw)
-    rows.append({"scenario": "1 (reads 20% / writes 80%)",
-                 "design": scenario1.describe(),
-                 "cost_s": scenario1.cost_seconds,
-                 "search_seconds": t()})
+    rows.append(_hybrid_row("1 (reads 20% / writes 80%)", scenario1, t()))
 
     t = timer()
     scenario2 = design_hybrid(W, [
@@ -41,10 +46,7 @@ def run(quick: bool = False) -> None:
         DomainRegion("range-reads", 0.1, {"range_get": 50.0}),
         DomainRegion("writes", 0.8, {"update": 100.0, "bulk_load": 1.0}),
     ], hw)
-    rows.append({"scenario": "2 (+range region)",
-                 "design": scenario2.describe(),
-                 "cost_s": scenario2.cost_seconds,
-                 "search_seconds": t()})
+    rows.append(_hybrid_row("2 (+range region)", scenario2, t()))
     emit("fig9_designs", rows)
 
     # §5 question sequence on a B-tree design

@@ -1,5 +1,15 @@
-"""§Perf hillclimb driver: run tagged dry-run variants for the three
-selected cells and print the before/after roofline deltas.
+"""Hillclimb drivers: design-space search (batched) + dry-run variants.
+
+Two climbers meet here:
+
+1. ``repro.core.autocomplete.design_hillclimb`` — local search over data
+   structure designs (paper §4 territory): mutate fanouts / capacities /
+   element choices and cost the whole neighbor frontier in ONE
+   ``batchcost.cost_many`` call per step.  ``bench_climb``/``run()``
+   benchmark it batched vs scalar (identical climb path,
+   designs-costed-per-second reported; feeds BENCH_search.json).
+
+2. The §Perf dry-run variant climber for the three selected cells:
 
     PYTHONPATH=src python -m benchmarks.hillclimb [--only CELL]
 
@@ -11,15 +21,78 @@ the end (and lands in experiments/bench/hillclimb.json).
 from __future__ import annotations
 
 import argparse
-import glob
 import json
 import os
 import subprocess
 import sys
+from typing import Dict, Optional
 
 from benchmarks.common import ROOT, emit
 
 DRYRUN = os.path.join(ROOT, "experiments", "dryrun")
+
+
+# ---------------------------------------------------------------------------
+# Benchmarking the design-space hill climb (the climber itself lives in
+# repro.core.autocomplete.design_hillclimb)
+# ---------------------------------------------------------------------------
+def bench_climb(workload, hw, mix: Optional[Dict[str, float]] = None,
+                steps: int = 30) -> Dict:
+    """Measure one climb through both costing paths, cold caches each.
+
+    Warms *both* paths first (one-time jax compilations — the batched
+    shape buckets and the scalar shape-(1,) predicts — are process costs,
+    not search costs), then times each path from cold synthesis caches.
+    Asserts the identical climb result.  The single measurement authority
+    for the hillclimb rows of BENCH_search.json and hillclimb_design.
+    """
+    from repro.core import batchcost
+    from repro.core.autocomplete import design_hillclimb
+
+    design_hillclimb(workload, hw, mix, max_steps=steps)
+    design_hillclimb(workload, hw, mix, max_steps=1, batched=False)
+    batchcost.clear_caches()
+    b = design_hillclimb(workload, hw, mix, max_steps=steps)
+    batchcost.clear_caches()
+    s = design_hillclimb(workload, hw, mix, max_steps=steps, batched=False)
+    # cost parity is the hard invariant; structural identity is expected but
+    # an argmin flip between exactly cost-tied neighbors is benign, so note
+    # it rather than failing the whole benchmark run
+    assert abs(b["cost_s"] - s["cost_s"]) <= \
+        1e-9 * max(s["cost_s"], 1e-30), (b, s)
+    if (b["design"], b["fanouts"]) != (s["design"], s["fanouts"]):
+        print(f"note: cost-tied climb results differ structurally: "
+              f"{b['design']} vs {s['design']}")
+    return {"design": b["design"], "cost_s": b["cost_s"],
+            "designs_costed": b["designs_costed"],
+            "batched_s": b["elapsed_s"], "scalar_s": s["elapsed_s"],
+            "batched_designs_per_s": b["designs_per_s"],
+            "scalar_designs_per_s": s["designs_per_s"],
+            "speedup": s["elapsed_s"] / max(b["elapsed_s"], 1e-12)}
+
+
+def run(quick: bool = False) -> None:
+    """Benchmark entry: climb three workloads batched vs scalar."""
+    from repro.core.hardware import hw3
+    from repro.core.synthesis import Workload
+
+    hw = hw3()
+    n = 100_000 if quick else 1_000_000
+    # (the read/write mixed climb is already measured by BENCH_search's
+    # hillclimb row — only the scenarios it does not cover run here)
+    scenarios = [
+        ("point-reads", Workload(n_entries=n), {"get": 100.0}),
+        ("skewed-ranges", Workload(n_entries=n, zipf_alpha=1.2),
+         {"get": 50.0, "range_get": 50.0}),
+    ]
+    steps = 5 if quick else 30
+    rows = []
+    for name, workload, mix in scenarios:
+        row = bench_climb(workload, hw, mix, steps=steps)
+        rows.append({"scenario": name, **{k: row[k] for k in (
+            "design", "cost_s", "designs_costed", "batched_s", "scalar_s",
+            "speedup")}})
+    emit("hillclimb_design", rows)
 
 # (cell-id, arch, shape, [(tag, [flags...]), ...])
 PLANS = [

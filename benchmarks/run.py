@@ -12,8 +12,8 @@ import time
 import traceback
 
 from benchmarks import (design_space, fig6_accuracy, fig7_bulkload_training,
-                        fig8_cache_skew, fig9_design_search, kernels_bench,
-                        roofline)
+                        fig8_cache_skew, fig9_design_search, hillclimb,
+                        kernels_bench, roofline, search_bench)
 
 BENCHES = [
     ("design_space", design_space.run),
@@ -21,6 +21,10 @@ BENCHES = [
     ("fig7_bulkload_training", fig7_bulkload_training.run),
     ("fig8_cache_skew", fig8_cache_skew.run),
     ("fig9_design_search", fig9_design_search.run),
+    # perf trajectory: designs-costed-per-second, scalar vs batched
+    # (emits experiments/bench/BENCH_search.json)
+    ("BENCH_search", search_bench.run),
+    ("hillclimb_design", hillclimb.run),
     ("kernels", kernels_bench.run),
     ("roofline", roofline.run),
 ]
@@ -32,6 +36,9 @@ def main() -> None:
                     help="reduced sizes (CI mode)")
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
+    if args.only and args.only not in {name for name, _ in BENCHES}:
+        ap.error(f"unknown benchmark {args.only!r}; choose from "
+                 f"{[name for name, _ in BENCHES]}")
     failures = []
     for name, fn in BENCHES:
         if args.only and name != args.only:

@@ -1,0 +1,97 @@
+"""BENCH_search: designs-costed-per-second, scalar vs batched (perf CI).
+
+Measures the fig9-style auto-completion search and the design hill climb
+through both costing paths — the scalar per-design ``cost_workload`` loop
+("before") and the batched ``cost_many`` frontier engine ("after") — on
+identical frontiers, asserting the argmin design and total agree, and
+persists the trajectory to experiments/bench/BENCH_search.json so every
+future PR can track search throughput against this one.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from benchmarks.common import emit, timer
+from benchmarks.hillclimb import bench_climb
+
+
+def _bench_complete_design(workload, hw, mix, max_depth: int) -> Dict:
+    from repro.core import batchcost
+    from repro.core.autocomplete import complete_design
+
+    # Warm both paths at full depth: XLA compilation of the per-bucket
+    # predict shapes (batched) and of the scalar shape-(1,) predict path
+    # are one-time process costs, not search costs.  Each timed run then
+    # starts from cold synthesis/compile memos (the jax executable cache
+    # is process-level and survives; our lru caches don't).
+    complete_design((), workload, hw, mix=mix, max_depth=max_depth)
+    complete_design((), workload, hw, mix=mix, max_depth=1, batched=False)
+    batchcost.clear_caches()
+
+    t = timer()
+    batched = complete_design((), workload, hw, mix=mix, max_depth=max_depth)
+    batched_s = t()
+    batchcost.clear_caches()
+    t = timer()
+    scalar = complete_design((), workload, hw, mix=mix, max_depth=max_depth,
+                             batched=False)
+    scalar_s = t()
+    # cost parity is the hard invariant; an argmin flip between exactly
+    # cost-tied candidates would be benign (note it, don't fail the run)
+    assert abs(batched.cost_seconds - scalar.cost_seconds) <= \
+        1e-9 * scalar.cost_seconds
+    if batched.spec.describe() != scalar.spec.describe():
+        print(f"note: cost-tied search results differ structurally: "
+              f"{batched.spec.describe()} vs {scalar.spec.describe()}")
+    return {
+        "search": "complete_design",
+        "design": batched.spec.describe(),
+        "designs": batched.explored,
+        "scalar_s": scalar_s,
+        "batched_s": batched_s,
+        "scalar_designs_per_s": scalar.explored / max(scalar_s, 1e-12),
+        "batched_designs_per_s": batched.explored / max(batched_s, 1e-12),
+        "speedup": scalar_s / max(batched_s, 1e-12),
+    }
+
+
+def _bench_hillclimb(workload, hw, mix, steps: int) -> Dict:
+    row = bench_climb(workload, hw, mix, steps=steps)
+    return {
+        "search": "hillclimb",
+        "design": row["design"],
+        "designs": row["designs_costed"],
+        "scalar_s": row["scalar_s"],
+        "batched_s": row["batched_s"],
+        "scalar_designs_per_s": row["scalar_designs_per_s"],
+        "batched_designs_per_s": row["batched_designs_per_s"],
+        "speedup": row["speedup"],
+    }
+
+
+def run(quick: bool = False) -> None:
+    from repro.core import batchcost
+    from repro.core.hardware import hw3
+    from repro.core.synthesis import Workload
+
+    hw = hw3()
+    n = 100_000 if quick else 1_000_000
+    workload = Workload(n_entries=n, n_queries=100)
+    mix = {"get": 80.0, "update": 20.0}
+
+    batchcost.clear_caches()   # measure from cold synthesis caches
+    rows: List[Dict] = [
+        _bench_complete_design(workload, hw, mix,
+                               max_depth=2 if quick else 3),
+        _bench_hillclimb(workload, hw, mix, steps=5 if quick else 30),
+    ]
+    emit("BENCH_search", rows,
+         keys=["search", "designs", "scalar_s", "batched_s",
+               "scalar_designs_per_s", "batched_designs_per_s", "speedup",
+               "design"])
+    worst = min(r["speedup"] for r in rows)
+    print(f"worst-case batched speedup: {worst:.1f}x")
+
+
+if __name__ == "__main__":
+    run()

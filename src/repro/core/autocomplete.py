@@ -1,21 +1,31 @@
 """Design auto-completion (paper §4, Algorithm 1) and hybrid design search.
 
 ``complete_design`` fills in the missing suffix of a partial element chain,
-ranking candidates by synthesized workload cost, with memoization (the
-paper's ``cachedSolution``).  ``design_hybrid`` reproduces the Fig. 9
-scenarios: the workload is split into domain regions with different
-read/write/range mixes and each region's sub-design is auto-completed
-independently under a shared partitioning root — yielding the paper's
-"hash over {log, B+tree}" style hybrids.
+ranking candidates by synthesized workload cost.  The search is *batched*:
+the candidate frontier is enumerated up front (deduplicated by element-name
+class — the paper's ``cachedSolution`` memoization, which collapses
+duplicate pool entries) and every surviving chain is costed in one
+:func:`repro.core.batchcost.cost_many` call, i.e. one vectorized Level-2
+model evaluation per model instead of one per record per candidate.  Pass
+``batched=False`` to fall back to the scalar per-design path (same
+enumeration, same argmin — used by the before/after search benchmark).
+
+``design_hybrid`` reproduces the Fig. 9 scenarios: the workload is split
+into domain regions with different read/write/range mixes and each
+region's sub-design is auto-completed independently under a shared
+partitioning root — yielding the paper's "hash over {log, B+tree}" style
+hybrids.
 """
 from __future__ import annotations
 
 import dataclasses
-import math
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.core import elements as el
+from repro.core.batchcost import cost_many
 from repro.core.elements import DataStructureSpec, Element
 from repro.core.hardware import HardwareProfile
 from repro.core.synthesis import Workload, cost_workload
@@ -66,62 +76,170 @@ def _meaningful(chain: Sequence[Element]) -> bool:
     return True
 
 
+def _dedup_by_name(pool: Sequence[Element]) -> List[Element]:
+    """Collapse duplicate pool entries (Algorithm 1's cachedSolution keys
+    sub-searches by element-name class, so duplicates add no exploration)."""
+    seen = set()
+    out: List[Element] = []
+    for e in pool:
+        if e.name not in seen:
+            seen.add(e.name)
+            out.append(e)
+    return out
+
+
+def enumerate_completions(partial: Sequence[Element],
+                          candidates: Sequence[Element],
+                          terminals: Sequence[Element],
+                          max_depth: int,
+                          name: str = "auto") -> List[DataStructureSpec]:
+    """All valid full chains reachable from ``partial``, in the depth-first
+    order Algorithm 1 visits them (terminals first at each prefix, then
+    each candidate extension in pool order) — the frontier to be costed."""
+    candidates = _dedup_by_name(candidates)
+    terminals = _dedup_by_name(terminals)
+    frontier: List[DataStructureSpec] = []
+
+    def extend(prefix: Tuple[Element, ...], depth: int) -> None:
+        for term in terminals:
+            chain = prefix + (term,)
+            if not _meaningful(chain):
+                continue
+            try:
+                frontier.append(DataStructureSpec(name, chain))
+            except ValueError:
+                continue
+        if depth < max_depth:
+            for cand in candidates:
+                chain = prefix + (cand,)
+                if not _meaningful(chain):
+                    continue
+                extend(chain, depth + 1)
+
+    extend(tuple(partial), len(tuple(partial)))
+    return frontier
+
+
 def complete_design(partial: Sequence[Element], workload: Workload,
                     hw: HardwareProfile,
                     candidates: Optional[Sequence[Element]] = None,
                     terminals: Optional[Sequence[Element]] = None,
                     mix: Optional[Dict[str, float]] = None,
                     max_depth: int = 3,
-                    name: str = "auto") -> SearchResult:
+                    name: str = "auto",
+                    batched: bool = True) -> SearchResult:
     """Algorithm 1: complete a partial layout spec for (workload, hardware).
 
     ``partial`` is the known prefix of the element chain (may be empty).
     The search extends it with up to ``max_depth`` non-terminal candidates
-    plus one terminal, memoizing (level, prefix-class) costs.
+    plus one terminal.  The whole frontier is costed in one batched call
+    (``batched=False`` re-costs it design-by-design through the scalar
+    ``cost_workload`` path; both return the identical argmin design).
     """
-    candidates = list(candidates or default_candidates())
-    terminals = list(terminals or default_terminals())
-    cache: Dict[Tuple, Tuple[float, Tuple[Element, ...]]] = {}
-    explored = 0
     t0 = time.perf_counter()
-
-    def best_completion(prefix: Tuple[Element, ...], depth: int
-                        ) -> Tuple[float, Optional[Tuple[Element, ...]]]:
-        nonlocal explored
-        key = (tuple(e.name for e in prefix), depth)
-        if key in cache:
-            return cache[key]
-        best: Tuple[float, Optional[Tuple[Element, ...]]] = (math.inf, None)
-        # option 1: terminate here
-        for term in terminals:
-            chain = prefix + (term,)
-            if not _meaningful(chain):
-                continue
-            try:
-                spec = DataStructureSpec(name, chain)
-            except ValueError:
-                continue
-            explored += 1
-            c = cost_workload(spec, workload, hw, mix)
-            if c < best[0]:
-                best = (c, chain)
-        # option 2: extend with one more non-terminal
-        if depth < max_depth:
-            for cand in candidates:
-                chain = prefix + (cand,)
-                if not _meaningful(chain):
-                    continue
-                sub_cost, sub_chain = best_completion(chain, depth + 1)
-                if sub_chain is not None and sub_cost < best[0]:
-                    best = (sub_cost, sub_chain)
-        cache[key] = best
-        return best
-
-    cost_s, chain = best_completion(tuple(partial), len(tuple(partial)))
-    if chain is None:
+    frontier = enumerate_completions(
+        partial, candidates or default_candidates(),
+        terminals or default_terminals(), max_depth, name)
+    if not frontier:
         raise RuntimeError("no valid completion found")
-    return SearchResult(DataStructureSpec(name, chain), cost_s, explored,
+    if batched:
+        totals = cost_many(frontier, workload, hw, mix)
+    else:
+        totals = np.asarray([cost_workload(spec, workload, hw, mix)
+                             for spec in frontier])
+    best = int(np.argmin(totals))  # first minimum — Algorithm 1's strict <
+    return SearchResult(frontier[best], float(totals[best]), len(frontier),
                         time.perf_counter() - t0)
+
+
+# ---------------------------------------------------------------------------
+# Greedy local search (hill climbing) over the design space
+# ---------------------------------------------------------------------------
+def design_neighbors(chain: Tuple[Element, ...],
+                     candidates: Sequence[Element],
+                     terminals: Sequence[Element]
+                     ) -> List[DataStructureSpec]:
+    """One-mutation neighborhood: fanout/capacity doublings and halvings,
+    element swaps, terminal swaps, level drops.  Deterministic order."""
+    neighbors = []
+    for i, e in enumerate(chain):
+        f = e.get("fanout")
+        if isinstance(f, tuple) and f[0] == "fixed":
+            for nf in (max(int(f[1]) // 2, 2), int(f[1]) * 2):
+                if nf != f[1]:
+                    neighbors.append(
+                        chain[:i] + (e.with_values(fanout=("fixed", nf)),) +
+                        chain[i + 1:])
+        elif isinstance(f, tuple) and f[0] == "terminal":
+            for nc in (max(int(f[1]) // 2, 16), min(int(f[1]) * 2, 1 << 16)):
+                if nc != f[1]:
+                    neighbors.append(
+                        chain[:i] +
+                        (e.with_values(fanout=("terminal", nc)),) +
+                        chain[i + 1:])
+    for i in range(len(chain) - 1):
+        for cand in candidates:
+            if cand.name != chain[i].name:
+                neighbors.append(chain[:i] + (cand,) + chain[i + 1:])
+        neighbors.append(chain[:i] + chain[i + 1:])  # drop level i
+    for term in terminals:
+        if term.name != chain[-1].name:
+            neighbors.append(chain[:-1] + (term,))
+
+    valid, seen = [], set()
+    for nb in neighbors:
+        key = tuple((e.name, e.get("fanout")) for e in nb)
+        if key in seen or not _meaningful(nb):
+            continue
+        try:
+            valid.append(DataStructureSpec("climb", nb))
+        except ValueError:
+            continue
+        seen.add(key)
+    return valid
+
+
+def design_hillclimb(workload: Workload, hw: HardwareProfile,
+                     mix: Optional[Dict[str, float]] = None,
+                     start: Optional[DataStructureSpec] = None,
+                     max_steps: int = 30, batched: bool = True) -> Dict:
+    """Greedy local search; each step costs the full neighbor frontier in
+    one batched call (or a scalar loop with ``batched=False`` — the climb
+    path and result are identical).  Returns a result dict."""
+    from repro.core.batchcost import cost_workload_batched
+
+    candidates = default_candidates()
+    terminals = default_terminals()
+    spec = start or el.spec_btree()
+    costed = 1
+    t0 = time.perf_counter()
+    if batched:
+        current = cost_workload_batched(spec, workload, hw, mix)
+    else:
+        current = cost_workload(spec, workload, hw, mix)
+    for _ in range(max_steps):
+        frontier = design_neighbors(spec.chain, candidates, terminals)
+        if not frontier:
+            break
+        costed += len(frontier)
+        if batched:
+            totals = cost_many(frontier, workload, hw, mix)
+        else:
+            totals = np.asarray([cost_workload(s, workload, hw, mix)
+                                 for s in frontier])
+        best = int(np.argmin(totals))
+        # accept only improvements beyond the documented batched/scalar
+        # agreement tolerance (1e-9 relative), so both paths take the
+        # identical climb regardless of summation-order float noise
+        if totals[best] >= current * (1.0 - 1e-9):
+            break
+        spec, current = frontier[best], float(totals[best])
+    elapsed = time.perf_counter() - t0
+    return {"design": spec.describe(),
+            "fanouts": [e.get("fanout") for e in spec.chain],
+            "cost_s": current, "designs_costed": costed,
+            "elapsed_s": elapsed,
+            "designs_per_s": costed / max(elapsed, 1e-12)}
 
 
 # ---------------------------------------------------------------------------
@@ -154,9 +272,11 @@ def design_hybrid(workload: Workload, regions: Sequence[DomainRegion],
                   hw: HardwareProfile,
                   candidates: Optional[Sequence[Element]] = None,
                   root: Optional[Element] = None,
-                  max_depth: int = 2) -> HybridDesign:
+                  max_depth: int = 2,
+                  batched: bool = True) -> HybridDesign:
     """Reproduce the paper's Fig. 9 search: per-region auto-completion under
-    a shared partitioning root, costed on each region's own sub-workload."""
+    a shared partitioning root, costed on each region's own sub-workload.
+    Each region's frontier is evaluated in one batched cost_many call."""
     t0 = time.perf_counter()
     root = root or el.hash_element(100)
     results: List[Tuple[DomainRegion, SearchResult]] = []
@@ -168,7 +288,8 @@ def design_hybrid(workload: Workload, regions: Sequence[DomainRegion],
         result = complete_design((), sub_workload, hw,
                                  candidates=candidates, mix=region.mix,
                                  max_depth=max_depth,
-                                 name=f"hybrid-{region.name}")
+                                 name=f"hybrid-{region.name}",
+                                 batched=batched)
         results.append((region, result))
         total += result.cost_seconds
     # root routing cost: one probe per operation through the partitioner

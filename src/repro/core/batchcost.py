@@ -1,0 +1,220 @@
+"""Batch cost-synthesis engine: cost whole candidate frontiers per call.
+
+The Data Calculator's promise (paper §4, Algorithm 1) is answering what-if
+design questions in seconds by *synthesizing* cost.  The scalar path costs
+one design at a time — ``AccessRecord.cost`` dispatches one
+``predict_scalar`` per record, so a search over N candidates pays
+N x records x models worth of per-call model-evaluation overhead.
+
+This module compiles each synthesized :class:`CostBreakdown` into parallel
+numpy arrays (Level-2 model id, size argument, weighted count), groups the
+records of *all* candidates by model, and evaluates each Level-2 model's
+already-vectorized :meth:`FittedModel.predict` exactly once per call —
+turning a frontier evaluation into ~14 vectorized predictions regardless
+of how many designs are on the frontier.
+
+Public API
+----------
+``cost_many(specs, workload, hw, mix)``
+    Totals for a frontier of specs under one workload/mix — the batched
+    equivalent of ``[cost_workload(s, workload, hw, mix) for s in specs]``
+    (matching it to float tolerance; argmin-compatible).
+``compiled_operation(op, spec, workload)``
+    The cached compiled form of one operation's breakdown; synthesis runs
+    once per (op, chain fingerprint, workload) and is reused across search
+    calls, regions, and hardware profiles.
+``clear_caches()``
+    Drop all compile/instantiate memos (tests, element-library edits).
+
+Caching layers (all keyed on hashable, frozen inputs):
+
+1. ``instantiate`` is memoized in :mod:`repro.core.synthesis` on
+   (element chain, workload) — population is simulated once per structure.
+2. The per-(n_nodes, zipf_alpha) skew weight arrays of
+   ``_level_popularity`` are memoized there too.
+3. The compiled (model-id, size, count) arrays per (op, chain, workload)
+   are memoized here; hardware is *not* part of the key, so re-costing the
+   same frontier on new hardware (the paper's what-if hardware questions)
+   touches no synthesis code at all.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.elements import DataStructureSpec, Element
+from repro.core.hardware import HardwareProfile
+from repro.core.synthesis import (CostBreakdown, Workload,
+                                  clear_synthesis_caches,
+                                  synthesize_operation)
+
+# ---------------------------------------------------------------------------
+# Level-2 model-name interning: compiled records refer to models by id
+# ---------------------------------------------------------------------------
+_MODEL_IDS: Dict[str, int] = {}
+_MODEL_NAMES: List[str] = []
+
+
+def _model_id(name: str) -> int:
+    mid = _MODEL_IDS.get(name)
+    if mid is None:
+        mid = len(_MODEL_NAMES)
+        _MODEL_IDS[name] = mid
+        _MODEL_NAMES.append(name)
+    return mid
+
+
+@dataclasses.dataclass(frozen=True)
+class CompiledBreakdown:
+    """A CostBreakdown flattened into parallel arrays (one row per record)."""
+
+    model_ids: np.ndarray    # int32  [R] — interned Level-2 model ids
+    sizes: np.ndarray        # float64 [R] — primitive size arguments
+    counts: np.ndarray       # float64 [R] — record weights
+
+    @property
+    def n_records(self) -> int:
+        return len(self.sizes)
+
+    def total(self, hw: HardwareProfile) -> float:
+        """Scalar-equivalent total, one predict per distinct model."""
+        out = 0.0
+        for mid in np.unique(self.model_ids):
+            mask = self.model_ids == mid
+            y = _predict_padded(hw.model(_MODEL_NAMES[mid]), self.sizes[mask])
+            out += float(np.dot(self.counts[mask], y))
+        return out
+
+
+#: largest padded predict shape; bigger inputs evaluate in _MAX_BUCKET chunks
+_MAX_BUCKET = 4096
+
+
+def _predict_padded(model, sizes: np.ndarray) -> np.ndarray:
+    """model.predict with the input padded to a power-of-two length.
+
+    Frontier sizes vary call to call; un-jitted jax ops compile per shape,
+    so raw variable-length predicts would recompile XLA kernels on almost
+    every search.  Bucketing lengths to powers of two — capped at
+    ``_MAX_BUCKET``, with larger inputs evaluated in full chunks — bounds
+    the shape set to ~9 shapes per model (compile once, reuse forever).
+    Padding slots carry x=1.0 and are sliced off — per-record outputs are
+    unchanged because every model evaluates records elementwise /
+    row-independently.
+    """
+    n = len(sizes)
+    if n == 0:
+        return np.zeros(0, dtype=np.float64)
+    if n > _MAX_BUCKET:
+        return np.concatenate([
+            _predict_padded(model, sizes[i:i + _MAX_BUCKET])
+            for i in range(0, n, _MAX_BUCKET)])
+    bucket = max(1 << (n - 1).bit_length(), 16)
+    if bucket == n:
+        padded = sizes
+    else:
+        padded = np.ones(bucket, dtype=sizes.dtype)
+        padded[:n] = sizes
+    return np.asarray(model.predict(padded)[:n], dtype=np.float64)
+
+
+def compile_breakdown(cb: CostBreakdown) -> CompiledBreakdown:
+    n = len(cb.records)
+    model_ids = np.empty(n, dtype=np.int32)
+    sizes = np.empty(n, dtype=np.float64)
+    counts = np.empty(n, dtype=np.float64)
+    for i, rec in enumerate(cb.records):
+        model_ids[i] = _model_id(rec.level2)
+        sizes[i] = rec.size
+        counts[i] = rec.count
+    model_ids.setflags(write=False)
+    sizes.setflags(write=False)
+    counts.setflags(write=False)
+    return CompiledBreakdown(model_ids, sizes, counts)
+
+
+@functools.lru_cache(maxsize=65536)
+def _compiled_operation(op: str, chain: Tuple[Element, ...],
+                        workload: Workload) -> CompiledBreakdown:
+    spec = DataStructureSpec("batch", chain)
+    return compile_breakdown(synthesize_operation(op, spec, workload))
+
+
+def compiled_operation(op: str, spec: DataStructureSpec,
+                       workload: Workload) -> CompiledBreakdown:
+    """Synthesize + compile one operation, memoized on (op, chain, workload)."""
+    return _compiled_operation(op, spec.chain, workload)
+
+
+def clear_caches() -> None:
+    _compiled_operation.cache_clear()
+    clear_synthesis_caches()
+
+
+def cache_info() -> Dict[str, Tuple]:
+    from repro.core.synthesis import _instantiate_levels, _zipf_collision_mass
+    return {"compiled_operation": _compiled_operation.cache_info(),
+            "instantiate": _instantiate_levels.cache_info(),
+            "zipf_mass": _zipf_collision_mass.cache_info()}
+
+
+# ---------------------------------------------------------------------------
+# Frontier evaluation
+# ---------------------------------------------------------------------------
+def cost_many(specs: Sequence[DataStructureSpec], workload: Workload,
+              hw: HardwareProfile,
+              mix: Optional[Dict[str, float]] = None) -> np.ndarray:
+    """Workload cost for every spec in one grouped evaluation.
+
+    Equivalent to ``[cost_workload(s, workload, hw, mix) for s in specs]``
+    but with one ``FittedModel.predict`` call per distinct Level-2 model
+    across the *entire* frontier.  Per-record predictions are identical to
+    the scalar path (same model code, same float32 inputs); only the
+    summation order differs, so totals agree to float64 accumulation
+    tolerance (~1e-12 relative) and argmins coincide.
+    """
+    mix = mix or {"get": float(workload.n_queries)}
+    n = len(specs)
+    if n == 0:
+        return np.zeros(0, dtype=np.float64)
+
+    ids_parts: List[np.ndarray] = []
+    sizes_parts: List[np.ndarray] = []
+    weight_parts: List[np.ndarray] = []
+    seg_parts: List[np.ndarray] = []
+    for i, spec in enumerate(specs):
+        for op, op_weight in mix.items():
+            comp = compiled_operation(op, spec, workload)
+            ids_parts.append(comp.model_ids)
+            sizes_parts.append(comp.sizes)
+            weight_parts.append(comp.counts * float(op_weight))
+            seg_parts.append(np.full(comp.n_records, i, dtype=np.int64))
+
+    ids = np.concatenate(ids_parts)
+    sizes = np.concatenate(sizes_parts)
+    weights = np.concatenate(weight_parts)
+    segments = np.concatenate(seg_parts)
+
+    totals = np.zeros(n, dtype=np.float64)
+    for mid in np.unique(ids):
+        mask = ids == mid
+        y = _predict_padded(hw.model(_MODEL_NAMES[mid]), sizes[mask])
+        contrib = weights[mask] * y
+        totals += np.bincount(segments[mask], weights=contrib, minlength=n)
+    return totals
+
+
+def cost_one(op: str, spec: DataStructureSpec, workload: Workload,
+             hw: HardwareProfile) -> float:
+    """Batched-path cost of a single operation (compiled + memoized)."""
+    return compiled_operation(op, spec, workload).total(hw)
+
+
+def cost_workload_batched(spec: DataStructureSpec, workload: Workload,
+                          hw: HardwareProfile,
+                          mix: Optional[Dict[str, float]] = None) -> float:
+    """Drop-in batched equivalent of :func:`repro.core.synthesis.cost_workload`."""
+    return float(cost_many([spec], workload, hw, mix)[0])

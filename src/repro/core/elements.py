@@ -24,6 +24,12 @@ class Element:
     name: str
     values: Tuple[Tuple[str, Value], ...]  # sorted (primitive, value) pairs
 
+    def __post_init__(self) -> None:
+        # primitive -> value index: get()/tag() are the synthesizer's hottest
+        # calls (dozens per costed design); not a dataclass field, so eq/hash
+        # still compare (name, values) only
+        object.__setattr__(self, "_lookup", dict(self.values))
+
     @staticmethod
     def make(name: str, **values: Value) -> "Element":
         errors = validate_assignment(values)
@@ -32,10 +38,7 @@ class Element:
         return Element(name, tuple(sorted(values.items())))
 
     def get(self, primitive: str, default: Value = None) -> Value:
-        for key, value in self.values:
-            if key == primitive:
-                return value
-        return default
+        return self._lookup.get(primitive, default)
 
     def tag(self, primitive: str, default: str = "none") -> str:
         value = self.get(primitive)

@@ -181,25 +181,46 @@ def _fit_sigmoids_gd(logx: Array, y: Array, init: Dict[str, Array],
 # ---------------------------------------------------------------------------
 # Fitted model wrapper
 # ---------------------------------------------------------------------------
+# NOTE: predict stays *eager* on purpose.  Jitting the per-kind computation
+# looks tempting, but XLA fuses/vectorizes differently per input shape, so
+# a record evaluated alone (scalar path, shape (1,)) and inside a frontier
+# batch drift by float32 ulps — breaking the batched engine's 1e-9
+# scalar-equivalence contract (see tests/test_batchcost.py).  Eager per-op
+# execution is shape-stable per element.
+
 @dataclasses.dataclass
 class FittedModel:
-    """A trained Level-2 cost model: latency_seconds = predict(x)."""
+    """A trained Level-2 cost model: latency_seconds = predict(x).
+
+    ``predict`` is vectorized over x; the batch cost-synthesis engine
+    (:mod:`repro.core.batchcost`) leans on this to evaluate every record of
+    a whole candidate frontier in one call per Level-2 model.  Parameter
+    arrays are converted to device arrays once and cached (safe for the
+    immutable kinds; ``sigmoids2d`` mutates ``_m`` via :func:`predict2d`
+    and stays uncached).
+    """
 
     kind: str                       # linear|log_linear|log_loglog|nlogn|sigmoids|knn
     params: Dict[str, np.ndarray]
     x_range: Tuple[float, float] = (1.0, 1e9)
+    _device_params: Optional[Dict[str, Array]] = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    def _jnp_params(self) -> Dict[str, Array]:
+        if self._device_params is None:
+            self._device_params = {k: jnp.asarray(v)
+                                   for k, v in self.params.items()}
+        return self._device_params
 
     def predict(self, x) -> np.ndarray:
         x = np.atleast_1d(np.asarray(x, dtype=np.float32))
         x = np.clip(x, self.x_range[0], self.x_range[1])
         if self.kind in _BASES:
-            w = jnp.asarray(self.params["w"])
-            y0 = jnp.asarray(self.params["y0"])
-            out = _predict_basis((w, y0), jnp.asarray(x), self.kind)
+            p = self._jnp_params()
+            out = _predict_basis((p["w"], p["y0"]), jnp.asarray(x), self.kind)
         elif self.kind == "sigmoids":
-            out = _sigmoid_predict(
-                {k: jnp.asarray(v) for k, v in self.params.items()},
-                jnp.log(jnp.asarray(x) + 1.0))
+            out = _sigmoid_predict(self._jnp_params(),
+                                   jnp.log(jnp.asarray(x) + 1.0))
         elif self.kind == "sigmoids2d":
             # f(x, m) = S1(x) + (m - 1) * S2(x)   (sum of sum of sigmoids)
             m = np.atleast_1d(np.asarray(self.params["_m"], dtype=np.float32))

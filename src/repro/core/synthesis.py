@@ -18,6 +18,7 @@ region size of repeated accesses with w = 1/(p * sid).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -159,7 +160,31 @@ def _node_bytes(element: Element, fanout: int, workload: Workload) -> float:
 
 def instantiate(spec: DataStructureSpec, workload: Workload
                 ) -> StructureInstance:
-    """Simulate populating the structure: blocks -> node counts and sizes."""
+    """Simulate populating the structure: blocks -> node counts and sizes.
+
+    Memoized on (element chain, workload): the chain is the structural
+    fingerprint (the spec *name* does not affect population), so the four
+    ``synthesize_*`` operations and every candidate in a batched design
+    search share one simulation instead of re-running it per call.  A new
+    workload is a new key — the cache invalidates by construction.  The
+    returned LevelInfos are copies: callers may tweak them (what-if
+    experiments) without poisoning the cache.
+    """
+    levels = _instantiate_levels(spec.chain, workload)
+    return StructureInstance(spec, workload,
+                             [dataclasses.replace(l) for l in levels])
+
+
+def clear_synthesis_caches() -> None:
+    """Drop the instantiate / skew-weight memos (tests, profile reloads)."""
+    _instantiate_levels.cache_clear()
+    _zipf_collision_mass.cache_clear()
+
+
+@functools.lru_cache(maxsize=8192)
+def _instantiate_levels(chain: Tuple[Element, ...], workload: Workload
+                        ) -> Tuple[LevelInfo, ...]:
+    spec = DataStructureSpec("instantiate", chain)
     levels: List[LevelInfo] = []
     n = max(workload.n_entries, 1)
     terminal = spec.terminal
@@ -222,7 +247,7 @@ def instantiate(spec: DataStructureSpec, workload: Workload
             fanout = level.element.fanout or 2
             group = fanout * level.node_bytes
             level.region_bytes = min(cumulative, max(group, level.node_bytes))
-    return StructureInstance(spec, workload, levels)
+    return tuple(levels)
 
 
 # ---------------------------------------------------------------------------
@@ -248,6 +273,17 @@ def _zipf_top_mass(alpha: float, n_items: int, rank: int = 1) -> float:
     return float(weights[rank - 1] / weights.sum())
 
 
+@functools.lru_cache(maxsize=4096)
+def _zipf_collision_mass(n_items: int, alpha: float) -> float:
+    """sum_r mass_r^2 under Zipf(alpha) — memoized: a design search asks for
+    the same (n_nodes, alpha) pair for every candidate sharing a level
+    geometry, and the 4096-element weight array is costly to rebuild."""
+    ranks = np.arange(1, n_items + 1, dtype=np.float64)
+    weights = ranks ** (-alpha)
+    weights /= weights.sum()
+    return float((weights ** 2).sum())
+
+
 def _level_popularity(level: LevelInfo, workload: Workload) -> float:
     """Expected popularity of the node a query visits at this level."""
     n = max(level.n_nodes, 1)
@@ -255,10 +291,7 @@ def _level_popularity(level: LevelInfo, workload: Workload) -> float:
         return 1.0 / n
     # under skew a query visits the popular node with its zipf mass; use the
     # mean mass of the visited node = sum_r mass_r^2 (collision probability)
-    ranks = np.arange(1, min(n, 4096) + 1, dtype=np.float64)
-    weights = ranks ** (-workload.zipf_alpha)
-    weights /= weights.sum()
-    return float((weights ** 2).sum())
+    return _zipf_collision_mass(min(n, 4096), workload.zipf_alpha)
 
 
 def _random_access(cb: CostBreakdown, level: LevelInfo, workload: Workload,

@@ -14,9 +14,13 @@ from __future__ import annotations
 
 import functools
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.runtime import resolve_interpret
 
 
 def _bloom_kernel(words_ref, queries_ref, coeffs_ref, hits_ref, *,
@@ -48,7 +52,7 @@ def _bloom_kernel(words_ref, queries_ref, coeffs_ref, hits_ref, *,
 def bloom_probe_kernel(words: jax.Array, queries: jax.Array,
                        coeffs: jax.Array, *, s: int,
                        block_q: int = 256, block_w: int = 256,
-                       interpret: bool = True) -> jax.Array:
+                       interpret: Optional[bool] = None) -> jax.Array:
     """words: [W] uint32 filter (W = 2^s / 32); queries: [Q];
     coeffs: [k] uint32 odd hash multipliers.
 
@@ -68,5 +72,5 @@ def bloom_probe_kernel(words: jax.Array, queries: jax.Array,
         ],
         out_specs=pl.BlockSpec((block_q, k), lambda qi, wj: (qi, 0)),
         out_shape=jax.ShapeDtypeStruct((q, k), jnp.int32),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(words, queries, coeffs)

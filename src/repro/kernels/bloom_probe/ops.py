@@ -2,10 +2,13 @@
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.kernels.runtime import resolve_interpret
 
 #: deterministic odd multipliers (the paper draws them randomly per run)
 DEFAULT_COEFFS = np.array([0x9E3779B1, 0x85EBCA77, 0xC2B2AE3D, 0x27D4EB2F,
@@ -23,9 +26,10 @@ def _pad1(x: jax.Array, mult: int, value) -> jax.Array:
                                              "block_w", "interpret"))
 def bloom_probe(words: jax.Array, queries: jax.Array, s: int,
                 num_hashes: int = 2, block_q: int = 256, block_w: int = 256,
-                interpret: bool = True) -> jax.Array:
+                interpret: Optional[bool] = None) -> jax.Array:
     """Membership mask for ``queries`` against a 2^s-bit bloom filter."""
     from repro.kernels.bloom_probe.kernel import bloom_probe_kernel
+    interpret = resolve_interpret(interpret)
     q = queries.shape[0]
     w = words.shape[0]
     block_w = min(block_w, w)

@@ -23,6 +23,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.runtime import resolve_interpret
 from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
@@ -83,7 +85,7 @@ def flash_attention_kernel(q: jax.Array, k: jax.Array, v: jax.Array, *,
                            causal: bool = True,
                            block_q: int = 128, block_kv: int = 128,
                            sm_scale: Optional[float] = None,
-                           interpret: bool = True) -> jax.Array:
+                           interpret: Optional[bool] = None) -> jax.Array:
     """q: [B, H, Sq, D]; k/v: [B, KH, Skv, D] with H % KH == 0.
 
     Returns [B, H, Sq, D].  Sq/Skv must divide by the block sizes (ops.py
@@ -124,6 +126,6 @@ def flash_attention_kernel(q: jax.Array, k: jax.Array, v: jax.Array, *,
             pltpu.VMEM((block_q,), jnp.float32),     # m (running max)
             pltpu.VMEM((block_q,), jnp.float32),     # l (running sum)
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(qf, kf, vf)
     return out.reshape(b, h, sq, d)

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.kernels.flash_attention.kernel import flash_attention_kernel
 from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.runtime import resolve_interpret
 
 
 def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
@@ -29,7 +30,7 @@ def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                     causal: bool = True, block_q: int = 128,
-                    block_kv: int = 128, interpret: bool = True
+                    block_kv: int = 128, interpret: Optional[bool] = None
                     ) -> jax.Array:
     """Flash attention, [B, H, S, D] layout (see ops_bshd for model layout).
 
@@ -42,6 +43,7 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
 
 
 def _forward(q, k, v, causal, block_q, block_kv, interpret):
+    interpret = resolve_interpret(interpret)
     sq, skv = q.shape[2], k.shape[2]
     qp = _pad_to(q, 2, block_q)
     kp = _pad_to(k, 2, block_kv)
@@ -72,7 +74,7 @@ flash_attention.defvjp(_fwd, _bwd)
 
 
 def flash_attention_bshd(q: jax.Array, k: jax.Array, v: jax.Array,
-                         causal: bool = True, interpret: bool = True
+                         causal: bool = True, interpret: Optional[bool] = None
                          ) -> jax.Array:
     """Model-stack layout: q [B, S, H, D]; k/v [B, S, KH, D]."""
     out = flash_attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),

@@ -20,9 +20,13 @@ from __future__ import annotations
 
 import functools
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.runtime import resolve_interpret
 
 NOT_FOUND = 2147483647  # int32 max; plain int so kernels don't capture it
 
@@ -65,7 +69,7 @@ def _probe_kernel(tkeys_ref, tvals_ref, queries_ref, pos_ref, val_ref, *,
 def hash_probe_kernel(table_keys: jax.Array, table_values: jax.Array,
                       queries: jax.Array, *, a: int, s: int,
                       block_q: int = 256, block_nb: int = 64,
-                      interpret: bool = True):
+                      interpret: Optional[bool] = None):
     """table_keys/values: [NB, CAP] bucket-major (NB = 2^s; empty slots hold
     a sentinel key that never matches); queries: [Q].
 
@@ -93,5 +97,5 @@ def hash_probe_kernel(table_keys: jax.Array, table_values: jax.Array,
             jax.ShapeDtypeStruct((q,), jnp.int32),
             jax.ShapeDtypeStruct((q,), table_values.dtype),
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(table_keys, table_values, queries)

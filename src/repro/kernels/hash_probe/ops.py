@@ -2,11 +2,13 @@
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels.hash_probe.kernel import NOT_FOUND, hash_probe_kernel
+from repro.kernels.runtime import resolve_interpret
 
 #: default multiply-shift coefficient (odd, from a fixed PRNG draw — the
 #: paper draws a randomly per run; determinism helps tests)
@@ -25,8 +27,9 @@ def _pad1(x: jax.Array, mult: int, value) -> jax.Array:
 def hash_probe(table_keys: jax.Array, table_values: jax.Array,
                queries: jax.Array, s: int, a: int = DEFAULT_A,
                block_q: int = 256, block_nb: int = 64,
-               interpret: bool = True):
+               interpret: Optional[bool] = None):
     """(found mask, values) for point probes against a bucketized table."""
+    interpret = resolve_interpret(interpret)
     q = queries.shape[0]
     nb = table_keys.shape[0]
     block_nb = min(block_nb, nb)

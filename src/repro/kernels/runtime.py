@@ -1,0 +1,31 @@
+"""Backend selection for the Pallas kernels.
+
+The kernel wrappers historically hardcoded ``interpret=True`` (the Pallas
+interpreter runs anywhere, so CPU CI stayed deterministic) — which also
+meant a real TPU silently ran the interpreter.  ``default_interpret``
+auto-detects: compile to Mosaic only when a TPU backend is attached,
+interpret otherwise.  Every wrapper takes ``interpret: Optional[bool]``
+with ``None`` meaning "resolve via this module"; passing an explicit bool
+still forces either mode (tests pin ``interpret=True`` where they must be
+deterministic on CPU).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+
+@functools.lru_cache(maxsize=None)
+def default_interpret() -> bool:
+    """True (interpret) unless a real TPU backend is attached."""
+    try:
+        return jax.default_backend() != "tpu"
+    except Exception:  # no backend at all -> interpreter is the only option
+        return True
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """Map the wrappers' ``interpret=None`` default to the detected mode."""
+    return default_interpret() if interpret is None else bool(interpret)

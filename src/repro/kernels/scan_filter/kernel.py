@@ -16,9 +16,13 @@ from __future__ import annotations
 
 import functools
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.runtime import resolve_interpret
 
 NOT_FOUND = 2147483647  # int32 max; plain int so kernels don't capture it
 
@@ -51,7 +55,7 @@ def _scan_kernel(keys_ref, queries_ref, lo_ref, hi_ref, pos_ref, cnt_ref, *,
 def scan_filter_kernel(keys: jax.Array, queries: jax.Array,
                        lo: jax.Array, hi: jax.Array, *,
                        block_q: int = 256, block_k: int = 512,
-                       interpret: bool = True):
+                       interpret: Optional[bool] = None):
     """keys: [N] unsorted; queries/lo/hi: [Q].
 
     Returns (pos, count): pos[q] = first index with keys[i] == queries[q]
@@ -77,5 +81,5 @@ def scan_filter_kernel(keys: jax.Array, queries: jax.Array,
             jax.ShapeDtypeStruct((q,), jnp.int32),
             jax.ShapeDtypeStruct((q,), jnp.int32),
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(keys, queries, lo, hi)

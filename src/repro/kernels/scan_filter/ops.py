@@ -2,10 +2,12 @@
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.runtime import resolve_interpret
 from repro.kernels.scan_filter.kernel import NOT_FOUND, scan_filter_kernel
 
 
@@ -21,8 +23,9 @@ def _pad1(x: jax.Array, mult: int, value) -> jax.Array:
 def scan_filter(keys: jax.Array, queries: jax.Array,
                 lo: jax.Array, hi: jax.Array,
                 block_q: int = 256, block_k: int = 512,
-                interpret: bool = True):
+                interpret: Optional[bool] = None):
     """(first-match pos | NOT_FOUND, range count) over an unsorted node."""
+    interpret = resolve_interpret(interpret)
     n, q = keys.shape[0], queries.shape[0]
     if jnp.issubdtype(keys.dtype, jnp.floating):
         big = jnp.inf
@@ -41,7 +44,7 @@ def scan_filter(keys: jax.Array, queries: jax.Array,
 
 
 def scan_get(keys: jax.Array, values: jax.Array, queries: jax.Array,
-             interpret: bool = True):
+             interpret: Optional[bool] = None):
     """Point Get over an unsorted node (the paper's UDP terminal)."""
     pos, _ = scan_filter(keys, queries, queries, queries,
                          interpret=interpret)

@@ -19,9 +19,13 @@ from __future__ import annotations
 
 import functools
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.runtime import resolve_interpret
 
 
 def _search_kernel(keys_ref, queries_ref, o_ref, *, block_k: int):
@@ -40,7 +44,7 @@ def _search_kernel(keys_ref, queries_ref, o_ref, *, block_k: int):
 
 def sorted_search_kernel(keys: jax.Array, queries: jax.Array, *,
                          block_q: int = 256, block_k: int = 512,
-                         interpret: bool = True) -> jax.Array:
+                         interpret: Optional[bool] = None) -> jax.Array:
     """keys: [N] sorted ascending; queries: [Q].
 
     Returns rank[q] = #{i : keys[i] <= q} — the searchsorted-right index.
@@ -60,5 +64,5 @@ def sorted_search_kernel(keys: jax.Array, queries: jax.Array, *,
         ],
         out_specs=pl.BlockSpec((block_q,), lambda qi, kj: (qi,)),
         out_shape=jax.ShapeDtypeStruct((q,), jnp.int32),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(keys, queries)

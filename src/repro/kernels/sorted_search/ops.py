@@ -6,10 +6,12 @@ point lookup on top (the Data Calculator's Get over an ODP terminal node).
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.runtime import resolve_interpret
 from repro.kernels.sorted_search.kernel import sorted_search_kernel
 
 
@@ -25,12 +27,13 @@ def _pad1(x: jax.Array, mult: int, value) -> jax.Array:
                                              "interpret"))
 def sorted_search(keys: jax.Array, queries: jax.Array,
                   block_q: int = 256, block_k: int = 512,
-                  interpret: bool = True) -> jax.Array:
+                  interpret: Optional[bool] = None) -> jax.Array:
     """searchsorted(keys, queries, side='right') via the Pallas kernel.
 
     keys must be sorted ascending.  Padding keys are +inf-like (dtype max),
     so they never count toward a rank; padded queries are sliced away.
     """
+    interpret = resolve_interpret(interpret)
     n, q = keys.shape[0], queries.shape[0]
     if jnp.issubdtype(keys.dtype, jnp.floating):
         big = jnp.inf
@@ -46,7 +49,7 @@ def sorted_search(keys: jax.Array, queries: jax.Array,
 
 
 def sorted_get(keys: jax.Array, values: jax.Array, queries: jax.Array,
-               interpret: bool = True):
+               interpret: Optional[bool] = None):
     """Point Get over a sorted columnar node: (found mask, values).
 
     The Data Calculator's ``SortedSearch(ColumnStore) + RandomAccess(value)``

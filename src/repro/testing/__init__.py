@@ -1,0 +1,1 @@
+"""Test-support utilities (kept importable from the installed tree)."""

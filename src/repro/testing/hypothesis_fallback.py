@@ -1,0 +1,124 @@
+"""Minimal stand-in for ``hypothesis`` on containers without it installed.
+
+The tier-1 suite uses a small slice of hypothesis: ``@given`` over
+``integers`` / ``lists`` / ``sampled_from`` / ``@composite`` strategies
+with ``@settings(max_examples=..., deadline=None)``.  This module
+implements exactly that slice with deterministic pseudo-random draws so
+the property tests still execute (as seeded random sweeps) when the real
+library is unavailable.  Import pattern used by the tests:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from repro.testing.hypothesis_fallback import (
+            given, settings, strategies as st)
+
+No shrinking, no example database, no reproduction strings — failures
+print the drawn arguments instead.
+"""
+from __future__ import annotations
+
+import random
+import types
+from typing import Any, Callable, List, Optional, Sequence
+
+_SEED = 961748927  # fixed prime: deterministic across runs and workers
+
+
+class Strategy:
+    """A value generator: draw(rng) -> example."""
+
+    def __init__(self, draw: Callable[[random.Random], Any]):
+        self._draw = draw
+
+    def draw(self, rng: random.Random) -> Any:
+        return self._draw(rng)
+
+
+def integers(min_value: Optional[int] = None,
+             max_value: Optional[int] = None) -> Strategy:
+    lo = 0 if min_value is None else int(min_value)
+    hi = lo + 1_000_000 if max_value is None else int(max_value)
+    return Strategy(lambda rng: rng.randint(lo, hi))
+
+
+def sampled_from(elements: Sequence[Any]) -> Strategy:
+    pool = list(elements)
+    if not pool:
+        raise ValueError("sampled_from requires a non-empty sequence")
+    return Strategy(lambda rng: pool[rng.randrange(len(pool))])
+
+
+def lists(elements: Strategy, min_size: int = 0,
+          max_size: Optional[int] = None, unique: bool = False) -> Strategy:
+    cap = min_size + 10 if max_size is None else max_size
+
+    def draw(rng: random.Random) -> List[Any]:
+        target = rng.randint(min_size, cap)
+        out: List[Any] = []
+        seen = set()
+        attempts = 0
+        while len(out) < target and attempts < 20 * (target + 1):
+            attempts += 1
+            value = elements.draw(rng)
+            if unique:
+                if value in seen:
+                    continue
+                seen.add(value)
+            out.append(value)
+        if len(out) < min_size:  # mirror hypothesis: unsatisfiable strategy
+            raise ValueError(
+                f"could not draw {min_size} unique elements "
+                f"(got {len(out)}); element domain too small?")
+        return out
+
+    return Strategy(draw)
+
+
+def composite(fn: Callable[..., Any]) -> Callable[..., Strategy]:
+    """``@composite``: fn(draw, *args) -> value becomes a strategy factory."""
+    def builder(*args: Any, **kwargs: Any) -> Strategy:
+        def draw_value(rng: random.Random) -> Any:
+            return fn(lambda strat: strat.draw(rng), *args, **kwargs)
+        return Strategy(draw_value)
+    builder.__name__ = getattr(fn, "__name__", "composite")
+    return builder
+
+
+def settings(max_examples: int = 20, deadline: Any = None,
+             **_ignored: Any) -> Callable:
+    def deco(fn: Callable) -> Callable:
+        fn._fallback_settings = {"max_examples": max_examples}
+        return fn
+    return deco
+
+
+def given(*strategy_args: Strategy) -> Callable:
+    def deco(fn: Callable) -> Callable:
+        max_examples = getattr(fn, "_fallback_settings",
+                               {}).get("max_examples", 20)
+
+        # deliberately *not* functools.wraps: pytest must see the (*args,
+        # **kwargs) signature, or it would treat the strategy-filled
+        # parameters of the wrapped function as fixtures to resolve.
+        def wrapper(*args: Any, **kwargs: Any) -> None:
+            rng = random.Random(_SEED)
+            for example in range(max_examples):
+                drawn = [s.draw(rng) for s in strategy_args]
+                try:
+                    fn(*args, *drawn, **kwargs)
+                except Exception:
+                    print(f"falsifying example #{example}: {drawn!r}")
+                    raise
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+    return deco
+
+
+#: the tests import ``strategies as st`` — mirror hypothesis's layout
+strategies = types.SimpleNamespace(
+    integers=integers, lists=lists, sampled_from=sampled_from,
+    composite=composite)

@@ -1,0 +1,167 @@
+"""Batch cost-synthesis engine: scalar equivalence, memo invalidation,
+and batched-search parity (the PR's tentpole acceptance checks)."""
+import dataclasses
+import inspect
+
+import numpy as np
+import pytest
+
+from repro.core import batchcost, elements as el, synthesis
+from repro.core.autocomplete import (complete_design, default_candidates,
+                                     design_hillclimb)
+from repro.core.batchcost import (compiled_operation, cost_many,
+                                  cost_workload_batched)
+from repro.core.synthesis import Workload, cost_workload, instantiate
+
+
+def _grid_specs():
+    specs = []
+    for name, make in sorted(el.ALL_PAPER_SPECS.items()):
+        sig = inspect.signature(make)
+        specs.append(make(10_000) if "n_puts" in sig.parameters else make())
+    return specs
+
+
+GRID_WORKLOADS = [
+    Workload(n_entries=10_000),                          # uniform
+    Workload(n_entries=250_000, zipf_alpha=1.5),         # skewed
+    Workload(n_entries=1_000_000, selectivity=0.01),     # wide ranges
+]
+GRID_MIXES = [
+    None,
+    {"get": 100.0},
+    {"get": 50.0, "range_get": 25.0, "update": 25.0, "bulk_load": 1.0},
+]
+
+
+@pytest.mark.parametrize("workload", GRID_WORKLOADS,
+                         ids=["uniform", "zipf", "ranges"])
+@pytest.mark.parametrize("mix", GRID_MIXES, ids=["default", "get", "mixed"])
+def test_cost_many_matches_scalar_grid(workload, mix, hw_analytical):
+    """Batched totals == scalar cost_workload to 1e-9 relative on the full
+    paper spec library x workload x mix grid."""
+    specs = _grid_specs()
+    batched = cost_many(specs, workload, hw_analytical, mix)
+    scalar = np.array([cost_workload(s, workload, hw_analytical, mix)
+                       for s in specs])
+    assert batched.shape == (len(specs),)
+    np.testing.assert_allclose(batched, scalar, rtol=1e-9)
+
+
+def test_cost_workload_batched_single_spec(hw_analytical):
+    w = Workload(n_entries=500_000)
+    spec = el.spec_btree()
+    assert cost_workload_batched(spec, w, hw_analytical) == pytest.approx(
+        cost_workload(spec, w, hw_analytical), rel=1e-9)
+
+
+def test_instantiate_memoized_and_invalidates_on_workload_change():
+    from repro.core.synthesis import _instantiate_levels
+    spec = el.spec_btree(fanout=20, page=250)
+    w1 = Workload(n_entries=100_000)
+    w2 = Workload(n_entries=100_000, zipf_alpha=1.5)
+    w3 = Workload(n_entries=400_000)
+    synthesis.clear_synthesis_caches()
+    i1a = instantiate(spec, w1)
+    misses = _instantiate_levels.cache_info().misses
+    i1b = instantiate(spec, w1)
+    # same workload -> served from the memo, not re-simulated
+    assert _instantiate_levels.cache_info().misses == misses
+    assert _instantiate_levels.cache_info().hits >= 1
+    # ... but as caller-owned copies: mutations must not poison the cache
+    i1b.levels[0].region_bytes *= 100.0
+    assert instantiate(spec, w1).levels[0].region_bytes == \
+        i1a.levels[0].region_bytes
+    # workload change -> fresh simulation (zipf is part of the key even
+    # though it does not alter geometry; n_entries does alter it)
+    assert _instantiate_levels.cache_info().misses == misses
+    instantiate(spec, w2)
+    assert _instantiate_levels.cache_info().misses == misses + 1
+    assert instantiate(spec, w3).terminal.n_nodes != i1a.terminal.n_nodes
+
+
+def test_instantiate_name_insensitive():
+    """Chains are the fingerprint; the spec *name* must not split the cache
+    (searches relabel identical chains per region)."""
+    from repro.core.synthesis import _instantiate_levels
+    w = Workload(n_entries=100_000)
+    instantiate(el.spec_btree(), w)
+    misses = _instantiate_levels.cache_info().misses
+    chain = el.spec_btree().chain
+    instantiate(el.DataStructureSpec("renamed", chain), w)
+    assert _instantiate_levels.cache_info().misses == misses
+
+
+def test_compiled_operation_cached_and_workload_keyed():
+    spec = el.spec_hash_table()
+    w1 = Workload(n_entries=50_000)
+    w2 = Workload(n_entries=50_000, n_queries=1000)
+    c1 = compiled_operation("get", spec, w1)
+    assert compiled_operation("get", spec, w1) is c1
+    assert compiled_operation("get", spec, w2) is not c1
+
+
+def test_compiled_breakdown_matches_breakdown_total(hw_analytical):
+    w = Workload(n_entries=200_000)
+    for op in ("get", "range_get", "update", "bulk_load"):
+        cb = synthesis.synthesize_operation(op, el.spec_btree(), w)
+        comp = batchcost.compile_breakdown(cb)
+        assert comp.n_records == len(cb.records)
+        assert comp.total(hw_analytical) == pytest.approx(
+            cb.total(hw_analytical), rel=1e-9)
+
+
+def test_batched_search_equals_scalar_search(hw_analytical):
+    """complete_design(batched=True) returns the identical argmin design
+    and cost as the scalar per-design path."""
+    w = Workload(n_entries=1_000_000)
+    mix = {"get": 80.0, "update": 20.0}
+    rb = complete_design((), w, hw_analytical, mix=mix, max_depth=2)
+    rs = complete_design((), w, hw_analytical, mix=mix, max_depth=2,
+                         batched=False)
+    assert rb.spec.describe() == rs.spec.describe()
+    assert rb.explored == rs.explored
+    assert rb.cost_seconds == pytest.approx(rs.cost_seconds, rel=1e-9)
+
+
+def test_batched_search_respects_prefix_and_pool_duplicates(hw_analytical):
+    w = Workload(n_entries=1_000_000)
+    pool = default_candidates()
+    r1 = complete_design((el.hash_element(100),), w, hw_analytical,
+                         candidates=pool, mix={"get": 50.0}, max_depth=2)
+    r2 = complete_design((el.hash_element(100),), w, hw_analytical,
+                         candidates=pool + pool, mix={"get": 50.0},
+                         max_depth=2)
+    assert r1.spec.chain[0].name == "Hash"
+    assert r2.explored == r1.explored
+    assert r2.cost_seconds == pytest.approx(r1.cost_seconds, rel=1e-9)
+
+
+def test_design_hillclimb_batched_equals_scalar(hw_analytical):
+    """The greedy climb takes the identical path through both cost paths
+    and improves (or matches) its starting design."""
+    w = Workload(n_entries=200_000)
+    mix = {"get": 60.0, "update": 40.0}
+    start_cost = cost_workload(el.spec_btree(), w, hw_analytical, mix)
+    b = design_hillclimb(w, hw_analytical, mix, max_steps=10)
+    s = design_hillclimb(w, hw_analytical, mix, max_steps=10, batched=False)
+    assert (b["design"], b["fanouts"]) == (s["design"], s["fanouts"])
+    assert b["cost_s"] == pytest.approx(s["cost_s"], rel=1e-9)
+    assert b["cost_s"] <= start_cost
+    assert b["designs_costed"] > 1
+
+
+def test_cost_many_empty_frontier(hw_analytical):
+    out = cost_many([], Workload(n_entries=1000), hw_analytical)
+    assert out.shape == (0,)
+
+
+def test_cost_many_trained_profile_equivalence(cpu_profile):
+    """Equivalence also holds on a *trained* (non-analytical) profile, which
+    exercises the knn/sigmoid model kinds end to end."""
+    w = Workload(n_entries=100_000, zipf_alpha=0.8)
+    specs = [el.spec_btree(), el.spec_hash_table(), el.spec_skip_list()]
+    batched = cost_many(specs, w, cpu_profile, {"get": 10.0, "update": 5.0})
+    scalar = [cost_workload(s, w, cpu_profile, {"get": 10.0, "update": 5.0})
+              for s in specs]
+    np.testing.assert_allclose(batched, scalar, rtol=1e-9)

@@ -3,7 +3,12 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # clean container: deterministic fallback sweeps
+    from repro.testing.hypothesis_fallback import (
+        given, settings, strategies as st)
 
 from repro.core import design_space
 from repro.core.primitives import (INVALIDATION_RULES, PRIMITIVES,

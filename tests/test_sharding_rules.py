@@ -11,12 +11,19 @@ from repro.parallel import ctx
 from repro.parallel.sharding import FSDP_MIN_ELEMS, spec_for_param
 
 
+def _abstract_mesh(sizes, names):
+    try:  # jax >= 0.4.35: AbstractMesh(((name, size), ...))
+        return AbstractMesh(tuple(zip(names, sizes)))
+    except TypeError:  # older jax: AbstractMesh(sizes, names)
+        return AbstractMesh(sizes, names)
+
+
 def mesh_single():
-    return AbstractMesh((16, 16), ("data", "model"))
+    return _abstract_mesh((16, 16), ("data", "model"))
 
 
 def mesh_multi():
-    return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    return _abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 @pytest.mark.parametrize("mesh_fn", [mesh_single, mesh_multi])

@@ -2,7 +2,12 @@
 behavioural equivalence against a dict oracle, incl. hypothesis sweeps."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # clean container: deterministic fallback sweeps
+    from repro.testing.hypothesis_fallback import (
+        given, settings, strategies as st)
 
 from repro.core import structures as S
 

@@ -4,7 +4,12 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # clean container: deterministic fallback sweeps
+    from repro.testing.hypothesis_fallback import (
+        given, settings, strategies as st)
 
 from repro.core import access, elements as el, synthesis
 from repro.core.synthesis import (CostBreakdown, Workload, instantiate,
