@@ -34,6 +34,40 @@ def emit(name: str, rows: Sequence[Dict], keys: Optional[List[str]] = None
     os.makedirs(BENCH_DIR, exist_ok=True)
     with open(os.path.join(BENCH_DIR, f"{name}.json"), "w") as fh:
         json.dump(list(rows), fh, indent=1, default=str)
+    _print_table(name, rows, keys)
+
+
+def emit_trajectory(name: str, label: str, rows: Sequence[Dict],
+                    keys: Optional[List[str]] = None) -> None:
+    """*Append* one labelled entry to experiments/bench/<name>.json.
+
+    Unlike :func:`emit` (which overwrites), the trajectory file is a list
+    of ``{"entry", "label", "date", "rows"}`` records that accumulates
+    across PRs, so perf history survives re-runs.  A legacy bare-rows file
+    (the pre-trajectory format) is migrated into entry 0.
+    """
+    os.makedirs(BENCH_DIR, exist_ok=True)
+    path = os.path.join(BENCH_DIR, f"{name}.json")
+    history: List[Dict] = []
+    if os.path.exists(path):
+        with open(path) as fh:
+            existing = json.load(fh)
+        if existing and isinstance(existing[0], dict) and \
+                "rows" not in existing[0]:
+            history = [{"entry": 0, "label": "pre-trajectory",
+                        "rows": existing}]
+        else:
+            history = existing
+    history.append({"entry": len(history), "label": label,
+                    "date": time.strftime("%Y-%m-%d %H:%M:%S"),
+                    "rows": list(rows)})
+    with open(path, "w") as fh:
+        json.dump(history, fh, indent=1, default=str)
+    _print_table(f"{name} [entry {len(history) - 1}: {label}]", rows, keys)
+
+
+def _print_table(name: str, rows: Sequence[Dict],
+                 keys: Optional[List[str]] = None) -> None:
     if not rows:
         print(f"[{name}] (no rows)")
         return

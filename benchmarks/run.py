@@ -21,8 +21,8 @@ BENCHES = [
     ("fig7_bulkload_training", fig7_bulkload_training.run),
     ("fig8_cache_skew", fig8_cache_skew.run),
     ("fig9_design_search", fig9_design_search.run),
-    # perf trajectory: designs-costed-per-second, scalar vs batched
-    # (emits experiments/bench/BENCH_search.json)
+    # perf trajectory: designs-costed-per-second, scalar vs grouped vs
+    # fused (appends an entry to experiments/bench/BENCH_search.json)
     ("BENCH_search", search_bench.run),
     ("hillclimb_design", hillclimb.run),
     ("kernels", kernels_bench.run),

@@ -5,8 +5,10 @@ ranking candidates by synthesized workload cost.  The search is *batched*:
 the candidate frontier is enumerated up front (deduplicated by element-name
 class — the paper's ``cachedSolution`` memoization, which collapses
 duplicate pool entries) and every surviving chain is costed in one
-:func:`repro.core.batchcost.cost_many` call, i.e. one vectorized Level-2
-model evaluation per model instead of one per record per candidate.  Pass
+:func:`repro.core.batchcost.cost_many` call — by default the *fused*
+device-resident engine (one jitted JAX call per frontier,
+:mod:`repro.core.devicecost`); ``engine="grouped"`` selects the PR-1
+grouped-numpy oracle (one vectorized prediction per Level-2 model).  Pass
 ``batched=False`` to fall back to the scalar per-design path (same
 enumeration, same argmin — used by the before/after search benchmark).
 
@@ -127,14 +129,17 @@ def complete_design(partial: Sequence[Element], workload: Workload,
                     mix: Optional[Dict[str, float]] = None,
                     max_depth: int = 3,
                     name: str = "auto",
-                    batched: bool = True) -> SearchResult:
+                    batched: bool = True,
+                    engine: str = "fused") -> SearchResult:
     """Algorithm 1: complete a partial layout spec for (workload, hardware).
 
     ``partial`` is the known prefix of the element chain (may be empty).
     The search extends it with up to ``max_depth`` non-terminal candidates
-    plus one terminal.  The whole frontier is costed in one batched call
+    plus one terminal.  The whole frontier is costed in one batched call —
+    fused by default, ``engine="grouped"`` for the PR-1 oracle
     (``batched=False`` re-costs it design-by-design through the scalar
-    ``cost_workload`` path; both return the identical argmin design).
+    ``cost_workload`` path; all paths return the identical argmin design,
+    to 1e-9 totals for grouped/scalar and 1e-6 for fused).
     """
     t0 = time.perf_counter()
     frontier = enumerate_completions(
@@ -143,7 +148,7 @@ def complete_design(partial: Sequence[Element], workload: Workload,
     if not frontier:
         raise RuntimeError("no valid completion found")
     if batched:
-        totals = cost_many(frontier, workload, hw, mix)
+        totals = cost_many(frontier, workload, hw, mix, engine=engine)
     else:
         totals = np.asarray([cost_workload(spec, workload, hw, mix)
                              for spec in frontier])
@@ -202,7 +207,8 @@ def design_neighbors(chain: Tuple[Element, ...],
 def design_hillclimb(workload: Workload, hw: HardwareProfile,
                      mix: Optional[Dict[str, float]] = None,
                      start: Optional[DataStructureSpec] = None,
-                     max_steps: int = 30, batched: bool = True) -> Dict:
+                     max_steps: int = 30, batched: bool = True,
+                     engine: str = "fused") -> Dict:
     """Greedy local search; each step costs the full neighbor frontier in
     one batched call (or a scalar loop with ``batched=False`` — the climb
     path and result are identical).  Returns a result dict."""
@@ -214,7 +220,8 @@ def design_hillclimb(workload: Workload, hw: HardwareProfile,
     costed = 1
     t0 = time.perf_counter()
     if batched:
-        current = cost_workload_batched(spec, workload, hw, mix)
+        current = cost_workload_batched(spec, workload, hw, mix,
+                                        engine=engine)
     else:
         current = cost_workload(spec, workload, hw, mix)
     for _ in range(max_steps):
@@ -223,15 +230,15 @@ def design_hillclimb(workload: Workload, hw: HardwareProfile,
             break
         costed += len(frontier)
         if batched:
-            totals = cost_many(frontier, workload, hw, mix)
+            totals = cost_many(frontier, workload, hw, mix, engine=engine)
         else:
             totals = np.asarray([cost_workload(s, workload, hw, mix)
                                  for s in frontier])
         best = int(np.argmin(totals))
-        # accept only improvements beyond the documented batched/scalar
-        # agreement tolerance (1e-9 relative), so both paths take the
-        # identical climb regardless of summation-order float noise
-        if totals[best] >= current * (1.0 - 1e-9):
+        # accept only improvements beyond the documented fused/scalar
+        # agreement tolerance (1e-6 relative), so every costing path takes
+        # the identical climb regardless of float-noise-level differences
+        if totals[best] >= current * (1.0 - 1e-6):
             break
         spec, current = frontier[best], float(totals[best])
     elapsed = time.perf_counter() - t0
@@ -273,7 +280,8 @@ def design_hybrid(workload: Workload, regions: Sequence[DomainRegion],
                   candidates: Optional[Sequence[Element]] = None,
                   root: Optional[Element] = None,
                   max_depth: int = 2,
-                  batched: bool = True) -> HybridDesign:
+                  batched: bool = True,
+                  engine: str = "fused") -> HybridDesign:
     """Reproduce the paper's Fig. 9 search: per-region auto-completion under
     a shared partitioning root, costed on each region's own sub-workload.
     Each region's frontier is evaluated in one batched cost_many call."""
@@ -289,7 +297,7 @@ def design_hybrid(workload: Workload, regions: Sequence[DomainRegion],
                                  candidates=candidates, mix=region.mix,
                                  max_depth=max_depth,
                                  name=f"hybrid-{region.name}",
-                                 batched=batched)
+                                 batched=batched, engine=engine)
         results.append((region, result))
         total += result.cost_seconds
     # root routing cost: one probe per operation through the partitioner

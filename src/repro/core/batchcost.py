@@ -7,18 +7,30 @@ one design at a time — ``AccessRecord.cost`` dispatches one
 N x records x models worth of per-call model-evaluation overhead.
 
 This module compiles each synthesized :class:`CostBreakdown` into parallel
-numpy arrays (Level-2 model id, size argument, weighted count), groups the
-records of *all* candidates by model, and evaluates each Level-2 model's
-already-vectorized :meth:`FittedModel.predict` exactly once per call —
-turning a frontier evaluation into ~14 vectorized predictions regardless
-of how many designs are on the frontier.
+numpy arrays (Level-2 model id, size argument, weighted count) and scores
+whole frontiers through one of two engines:
+
+* ``engine="fused"`` (default): the packed frontier arrays go to
+  :func:`repro.core.devicecost.score_frontier` — **one** jitted JAX call
+  evaluating every record against device-resident parameter banks and
+  reducing with a single ``segment_sum`` (sharded across devices for big
+  frontiers).
+* ``engine="grouped"``: the PR-1 reference oracle — group records of all
+  candidates by model and evaluate each Level-2 model's vectorized
+  :meth:`FittedModel.predict` once per call (~14 predictions per
+  frontier).  It matches the scalar path to 1e-9 relative; the fused
+  engine matches it to 1e-6 (see devicecost's module docstring).
 
 Public API
 ----------
-``cost_many(specs, workload, hw, mix)``
+``cost_many(specs, workload, hw, mix, engine="fused")``
     Totals for a frontier of specs under one workload/mix — the batched
     equivalent of ``[cost_workload(s, workload, hw, mix) for s in specs]``
     (matching it to float tolerance; argmin-compatible).
+``pack_frontier(specs, workload, mix)``
+    The hardware-independent packed arrays of a frontier; score the same
+    :class:`PackedFrontier` against many profiles (what-if hardware) with
+    zero re-synthesis and zero recompilation.
 ``compiled_operation(op, spec, workload)``
     The cached compiled form of one operation's breakdown; synthesis runs
     once per (op, chain fingerprint, workload) and is reused across search
@@ -33,38 +45,26 @@ Caching layers (all keyed on hashable, frozen inputs):
 2. The per-(n_nodes, zipf_alpha) skew weight arrays of
    ``_level_popularity`` are memoized there too.
 3. The compiled (model-id, size, count) arrays per (op, chain, workload)
-   are memoized here; hardware is *not* part of the key, so re-costing the
-   same frontier on new hardware (the paper's what-if hardware questions)
-   touches no synthesis code at all.
+   are memoized here, and the per-spec mix-weighted concatenation per
+   (chain, workload, mix); hardware is *not* part of either key, so
+   re-costing the same frontier on new hardware (the paper's what-if
+   hardware questions) touches no synthesis code at all.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core import devicecost
+from repro.core.devicecost import _MODEL_NAMES, model_id as _model_id
 from repro.core.elements import DataStructureSpec, Element
 from repro.core.hardware import HardwareProfile
 from repro.core.synthesis import (CostBreakdown, Workload,
                                   clear_synthesis_caches,
                                   synthesize_operation)
-
-# ---------------------------------------------------------------------------
-# Level-2 model-name interning: compiled records refer to models by id
-# ---------------------------------------------------------------------------
-_MODEL_IDS: Dict[str, int] = {}
-_MODEL_NAMES: List[str] = []
-
-
-def _model_id(name: str) -> int:
-    mid = _MODEL_IDS.get(name)
-    if mid is None:
-        mid = len(_MODEL_NAMES)
-        _MODEL_IDS[name] = mid
-        _MODEL_NAMES.append(name)
-    return mid
 
 
 @dataclasses.dataclass(frozen=True)
@@ -151,14 +151,111 @@ def compiled_operation(op: str, spec: DataStructureSpec,
 
 def clear_caches() -> None:
     _compiled_operation.cache_clear()
+    _packed_spec.cache_clear()
     clear_synthesis_caches()
 
 
 def cache_info() -> Dict[str, Tuple]:
     from repro.core.synthesis import _instantiate_levels, _zipf_collision_mass
     return {"compiled_operation": _compiled_operation.cache_info(),
+            "packed_spec": _packed_spec.cache_info(),
             "instantiate": _instantiate_levels.cache_info(),
             "zipf_mass": _zipf_collision_mass.cache_info()}
+
+
+# ---------------------------------------------------------------------------
+# Frontier packing (hardware-independent)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class PackedFrontier:
+    """A whole frontier flattened to parallel record arrays.
+
+    Hardware never enters the packing — score the same object against any
+    number of profiles (``score(hw)``); with the fused engine that is a
+    pure device parameter-table swap.
+    """
+
+    ids: np.ndarray            # int32   [R] — interned Level-2 model ids
+    sizes: np.ndarray          # float64 [R] — primitive size arguments
+    weights: np.ndarray        # float64 [R] — count x op-mix weight
+    #: design index per TILE-record tile, sorted ascending; each design's
+    #: record block is padded to a TILE multiple (pad rows carry weight 0)
+    tile_segments: np.ndarray  # int64 [R // TILE]
+    n_segments: int
+
+    @property
+    def segments(self) -> np.ndarray:
+        """Per-record design indices (expanded from the tile layout)."""
+        return np.repeat(self.tile_segments, devicecost.TILE)
+
+    def score(self, hw: HardwareProfile, engine: str = "fused",
+              shard: Optional[bool] = None) -> np.ndarray:
+        """Per-design totals under ``hw`` via the selected engine."""
+        if engine == "fused":
+            return devicecost.score_frontier(
+                self.ids, self.sizes, self.weights, self.tile_segments,
+                self.n_segments, hw, shard=shard)
+        if engine != "grouped":
+            raise ValueError(f"unknown engine: {engine!r}")
+        segments = self.segments
+        totals = np.zeros(self.n_segments, dtype=np.float64)
+        for mid in np.unique(self.ids):
+            mask = self.ids == mid
+            y = _predict_padded(hw.model(_MODEL_NAMES[mid]),
+                                self.sizes[mask])
+            contrib = self.weights[mask] * y
+            totals += np.bincount(segments[mask], weights=contrib,
+                                  minlength=self.n_segments)
+        return totals
+
+
+@functools.lru_cache(maxsize=65536)
+def _packed_spec(chain: Tuple[Element, ...], workload: Workload,
+                 mix_items: Tuple[Tuple[str, float], ...]
+                 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """One spec's mix-weighted (ids, sizes, weights), concatenated over the
+    operation mix and padded to a TILE multiple (pad rows carry weight 0,
+    contributing exactly nothing) — the memo that turns repeated frontier
+    packing into one cache hit per (chain, workload, mix)."""
+    parts = [_compiled_operation(op, chain, workload) for op, _ in mix_items]
+    n = sum(c.n_records for c in parts)
+    padded = -n % devicecost.TILE
+    # pad rows reuse the block's own first model id: an arbitrary id (e.g.
+    # 0) could name a model another profile interned, tripping the scoring
+    # engines' model-availability checks on records that weigh nothing
+    real_ids = np.concatenate([c.model_ids for c in parts]) if parts else \
+        np.zeros(0, np.int32)
+    pad_id = real_ids[0] if n else 0
+    ids = np.concatenate([real_ids, np.full(padded, pad_id, np.int32)])
+    sizes = np.concatenate([c.sizes for c in parts] +
+                           [np.ones(padded, np.float64)])
+    weights = np.concatenate([c.counts * float(w)
+                              for c, (_, w) in zip(parts, mix_items)] +
+                             [np.zeros(padded, np.float64)])
+    for arr in (ids, sizes, weights):
+        arr.setflags(write=False)
+    return ids, sizes, weights
+
+
+def pack_frontier(specs: Sequence[DataStructureSpec], workload: Workload,
+                  mix: Optional[Dict[str, float]] = None) -> PackedFrontier:
+    """Flatten a frontier into parallel record arrays (no hardware)."""
+    mix = mix or {"get": float(workload.n_queries)}
+    mix_items = tuple(mix.items())
+    per_spec = [_packed_spec(spec.chain, workload, mix_items)
+                for spec in specs]
+    if not per_spec:
+        empty = np.zeros(0)
+        return PackedFrontier(empty.astype(np.int32), empty, empty,
+                              empty.astype(np.int64), 0)
+    tile_segments = np.repeat(
+        np.arange(len(per_spec), dtype=np.int64),
+        [len(ids) // devicecost.TILE for ids, _, _ in per_spec])
+    return PackedFrontier(
+        np.concatenate([p[0] for p in per_spec]),
+        np.concatenate([p[1] for p in per_spec]),
+        np.concatenate([p[2] for p in per_spec]),
+        tile_segments, len(per_spec))
 
 
 # ---------------------------------------------------------------------------
@@ -166,45 +263,20 @@ def cache_info() -> Dict[str, Tuple]:
 # ---------------------------------------------------------------------------
 def cost_many(specs: Sequence[DataStructureSpec], workload: Workload,
               hw: HardwareProfile,
-              mix: Optional[Dict[str, float]] = None) -> np.ndarray:
-    """Workload cost for every spec in one grouped evaluation.
+              mix: Optional[Dict[str, float]] = None,
+              engine: str = "fused") -> np.ndarray:
+    """Workload cost for every spec in one batched evaluation.
 
-    Equivalent to ``[cost_workload(s, workload, hw, mix) for s in specs]``
-    but with one ``FittedModel.predict`` call per distinct Level-2 model
-    across the *entire* frontier.  Per-record predictions are identical to
-    the scalar path (same model code, same float32 inputs); only the
-    summation order differs, so totals agree to float64 accumulation
-    tolerance (~1e-12 relative) and argmins coincide.
+    Equivalent to ``[cost_workload(s, workload, hw, mix) for s in specs]``.
+    The default fused engine scores the packed frontier in one jitted JAX
+    call (totals within 1e-6 relative of the scalar path — float32 banked
+    evaluation, see :mod:`repro.core.devicecost`); ``engine="grouped"``
+    keeps the PR-1 per-model grouped oracle, whose per-record predictions
+    are bit-identical to the scalar path (same model code, same float32
+    inputs) so totals agree to float64 accumulation tolerance (~1e-12
+    relative) and argmins coincide exactly.
     """
-    mix = mix or {"get": float(workload.n_queries)}
-    n = len(specs)
-    if n == 0:
-        return np.zeros(0, dtype=np.float64)
-
-    ids_parts: List[np.ndarray] = []
-    sizes_parts: List[np.ndarray] = []
-    weight_parts: List[np.ndarray] = []
-    seg_parts: List[np.ndarray] = []
-    for i, spec in enumerate(specs):
-        for op, op_weight in mix.items():
-            comp = compiled_operation(op, spec, workload)
-            ids_parts.append(comp.model_ids)
-            sizes_parts.append(comp.sizes)
-            weight_parts.append(comp.counts * float(op_weight))
-            seg_parts.append(np.full(comp.n_records, i, dtype=np.int64))
-
-    ids = np.concatenate(ids_parts)
-    sizes = np.concatenate(sizes_parts)
-    weights = np.concatenate(weight_parts)
-    segments = np.concatenate(seg_parts)
-
-    totals = np.zeros(n, dtype=np.float64)
-    for mid in np.unique(ids):
-        mask = ids == mid
-        y = _predict_padded(hw.model(_MODEL_NAMES[mid]), sizes[mask])
-        contrib = weights[mask] * y
-        totals += np.bincount(segments[mask], weights=contrib, minlength=n)
-    return totals
+    return pack_frontier(specs, workload, mix).score(hw, engine=engine)
 
 
 def cost_one(op: str, spec: DataStructureSpec, workload: Workload,
@@ -215,6 +287,7 @@ def cost_one(op: str, spec: DataStructureSpec, workload: Workload,
 
 def cost_workload_batched(spec: DataStructureSpec, workload: Workload,
                           hw: HardwareProfile,
-                          mix: Optional[Dict[str, float]] = None) -> float:
+                          mix: Optional[Dict[str, float]] = None,
+                          engine: str = "fused") -> float:
     """Drop-in batched equivalent of :func:`repro.core.synthesis.cost_workload`."""
-    return float(cost_many([spec], workload, hw, mix)[0])
+    return float(cost_many([spec], workload, hw, mix, engine=engine)[0])

@@ -1,0 +1,366 @@
+"""Fused device-resident frontier scoring: one jitted call per frontier.
+
+PR 1's grouped engine (:mod:`repro.core.batchcost`) already evaluates a
+whole candidate frontier with one vectorized ``FittedModel.predict`` per
+Level-2 model — but that is still a Python loop over ~14 models with a
+host<->device round trip each.  This module removes the loop: an entire
+:class:`~repro.core.hardware.HardwareProfile` is packed once into
+device-resident *parameter banks*, and a frontier — parallel
+``(model_id, size, weight, segment)`` arrays — is scored by a single
+jitted function that
+
+1. gathers each record's parameters from per-kind stacked banks
+   (kind-masked, so every record evaluates all three families and selects
+   the right one — branch-free and fully vectorized);
+2. reduces records to per-design totals with a dense ``TILE``-wide
+   pre-reduction followed by one ``segment_sum``.
+
+Banks cover the whole model zoo:
+
+* the **linear-basis family** (linear / log_linear / log_loglog / nlogn)
+  collapses into one canonical 4-feature basis ``[x, ln x, ln ln x,
+  x ln x]`` with per-model weight rows (absent features carry weight 0);
+* **sigmoids** (and **sigmoids2d**, whose plain-predict is its m=1 slice
+  S1) stack into ``[M, K]`` amplitude/slope/center banks, zero-padded;
+* **knn** joins via a fixed k=4 ``top_k`` over inverse log-distance
+  weights with sentinel-masked padding (see ``models._knn_predict``).
+
+Shapes are bucketed exactly like ``batchcost._predict_padded`` — records
+and segment counts pad to powers of two (chunked at ``_MAX_FUSED_RECORDS``)
+— so XLA compiles a bounded shape set.  Bank widths are fixed per process,
+which makes a what-if-hardware question a pure parameter-table swap: a new
+profile builds new banks of identical shape and reuses the compiled
+executable with **zero recompilation** (asserted via :func:`trace_count`).
+Large frontiers shard across local devices with ``pmap`` over contiguous
+segment ranges.
+
+Totals agree with the grouped PR-1 oracle to <=1e-6 relative (XLA fuses
+the banked computation differently than the per-kind eager predicts, and
+the segment reduction runs in float32) — relaxed from the 1e-9
+scalar/grouped contract, see ``tests/test_batchcost.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hardware import HardwareProfile
+from repro.core.models import _BASES, KNN_SENTINEL
+
+# ---------------------------------------------------------------------------
+# Level-2 model-name interning: frontier records refer to models by id.
+# Owned here (the table rows are aligned to it); batchcost re-exports.
+# ---------------------------------------------------------------------------
+_MODEL_IDS: Dict[str, int] = {}
+_MODEL_NAMES: List[str] = []
+
+
+def model_id(name: str) -> int:
+    mid = _MODEL_IDS.get(name)
+    if mid is None:
+        mid = len(_MODEL_NAMES)
+        _MODEL_IDS[name] = mid
+        _MODEL_NAMES.append(name)
+    return mid
+
+
+def model_name(mid: int) -> str:
+    return _MODEL_NAMES[mid]
+
+
+KIND_LINEAR, KIND_SIGMOID, KIND_KNN = 0, 1, 2
+
+#: canonical feature positions of each basis' weight vector, in order —
+#: e.g. nlogn's basis is [x ln x, x], landing at canonical slots (3, 0)
+_CANONICAL_SLOTS = {
+    "linear": (0,),
+    "log_linear": (0, 1),
+    "log_loglog": (0, 1, 2),
+    "nlogn": (3, 0),
+}
+
+#: fixed per-process bank widths; profiles needing more grow to the next
+#: power of two (a width change recompiles once, then stays fixed)
+_SIG_SLOTS = 4
+_KNN_SLOTS = 16
+
+#: largest fused record-chunk; bigger frontiers accumulate over chunks
+_MAX_FUSED_RECORDS = 1 << 18
+
+#: records per reduction tile: packing pads every design's record block to
+#: a multiple of TILE (pad rows carry weight 0), so an in-register dense
+#: reshape-sum shrinks the scatter by 8x before the single segment_sum —
+#: XLA's scatter-add is serial on CPU and the frontier reduction would
+#: otherwise dominate the fused call
+TILE = 8
+
+
+def _pow2(n: int, floor: int) -> int:
+    return max(1 << max(n - 1, 0).bit_length(), floor)
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceTable:
+    """One profile's parameter banks, resident on device.
+
+    ``banks`` is the jit-traced pytree; the remaining fields are host-side
+    metadata (row validity, interning watermark) used to validate frontiers
+    and to decide when a table must be rebuilt.
+    """
+
+    profile_name: str
+    banks: Dict[str, jax.Array]   # kinds/lin_*/sig_*/knn_*/xlo/xhi, [M,...]
+    avail: np.ndarray             # bool [M] — rows backed by a fitted model
+    n_interned: int               # len(_MODEL_NAMES) at build time
+    sig_slots: int
+    knn_slots: int
+    has_knn: bool                 # static jit flag: skip top_k when False
+    models_ref: int               # id() of the models dict banked here
+
+    @property
+    def n_rows(self) -> int:
+        return int(self.banks["kinds"].shape[0])
+
+
+def build_table(hw: HardwareProfile, *, sig_slots: int = _SIG_SLOTS,
+                knn_slots: int = _KNN_SLOTS) -> DeviceTable:
+    """Pack every fitted model of ``hw`` into stacked device banks."""
+    for name in hw.models:
+        model_id(name)          # rows must exist for every profile model
+    needed_sig = max([sig_slots] + [
+        len(np.atleast_1d(m.params[key]))
+        for m in hw.models.values() for key in ("c", "s1_c")
+        if key in m.params])
+    needed_knn = max([knn_slots] + [
+        len(np.atleast_1d(m.params["x"]))
+        for m in hw.models.values() if m.kind == "knn"])
+    sig_slots = _pow2(needed_sig, sig_slots)
+    knn_slots = _pow2(needed_knn, knn_slots)
+
+    m_rows = _pow2(len(_MODEL_NAMES), 16)
+    kinds = np.zeros(m_rows, np.int32)
+    lin_w = np.zeros((m_rows, 4), np.float32)
+    lin_y0 = np.zeros(m_rows, np.float32)
+    sig_c = np.zeros((m_rows, sig_slots), np.float32)
+    sig_k = np.ones((m_rows, sig_slots), np.float32)
+    sig_x0 = np.zeros((m_rows, sig_slots), np.float32)
+    sig_y0 = np.zeros(m_rows, np.float32)
+    knn_lx = np.full((m_rows, knn_slots), KNN_SENTINEL, np.float32)
+    knn_y = np.zeros((m_rows, knn_slots), np.float32)
+    xlo = np.ones(m_rows, np.float32)
+    xhi = np.ones(m_rows, np.float32)
+    avail = np.zeros(m_rows, bool)
+
+    for name, model in hw.models.items():
+        row = _MODEL_IDS[name]
+        avail[row] = True
+        xlo[row], xhi[row] = model.x_range
+        p = model.params
+        if model.kind in _BASES:
+            for w_val, slot in zip(np.atleast_1d(p["w"]),
+                                   _CANONICAL_SLOTS[model.kind]):
+                lin_w[row, slot] = w_val
+            lin_y0[row] = p["y0"]
+        elif model.kind in ("sigmoids", "sigmoids2d"):
+            prefix = "s1_" if model.kind == "sigmoids2d" else ""
+            kinds[row] = KIND_SIGMOID
+            n_sig = len(np.atleast_1d(p[prefix + "c"]))
+            sig_c[row, :n_sig] = p[prefix + "c"]
+            sig_k[row, :n_sig] = p[prefix + "k"]
+            sig_x0[row, :n_sig] = p[prefix + "x0"]
+            sig_y0[row] = p[prefix + "y0"]
+        elif model.kind == "knn":
+            kinds[row] = KIND_KNN
+            n_pts = len(p["x"])
+            knn_lx[row, :n_pts] = np.log(
+                np.asarray(p["x"], np.float32) + 1.0)
+            knn_y[row, :n_pts] = p["y"]
+        else:
+            raise ValueError(f"unbankable model kind: {model.kind}")
+
+    banks = {k: jnp.asarray(v) for k, v in {
+        "kinds": kinds, "lin_w": lin_w, "lin_y0": lin_y0,
+        "sig_c": sig_c, "sig_k": sig_k, "sig_x0": sig_x0, "sig_y0": sig_y0,
+        "knn_lx": knn_lx, "knn_y": knn_y, "xlo": xlo, "xhi": xhi}.items()}
+    return DeviceTable(hw.name, banks, avail, len(_MODEL_NAMES),
+                       sig_slots, knn_slots,
+                       has_knn=bool((kinds[avail] == KIND_KNN).any()),
+                       models_ref=id(hw.models))
+
+
+def device_table(hw: HardwareProfile) -> DeviceTable:
+    """The (cached) device table of a profile, rebuilt when stale.
+
+    A table goes stale when the global model-name interning has grown past
+    its watermark, or when the profile's models dict is no longer the one
+    that was banked (a profile derived from another must never score with
+    its parent's banks); bank *shapes* stay fixed until a power-of-two
+    boundary crosses, so rebuilds almost never recompile the scorer — and
+    two profiles of the same model zoo always share compiled executables.
+    """
+    table = hw._device_table
+    if table is None or table.n_interned != len(_MODEL_NAMES) or \
+            table.models_ref != id(hw.models):
+        table = build_table(hw)
+        hw._device_table = table
+    return table
+
+
+# ---------------------------------------------------------------------------
+# The fused scorer
+# ---------------------------------------------------------------------------
+#: traced-function entry counter — increments only while jax (re)traces the
+#: kernel, i.e. exactly once per compiled (shape, static-arg) signature.
+#: Tests probe it to assert what-if-hardware swaps trigger no recompilation.
+_TRACE_COUNT = [0]
+
+
+def trace_count() -> int:
+    return _TRACE_COUNT[0]
+
+
+def _score_kernel(banks: Dict[str, jax.Array], ids: jax.Array,
+                  sizes: jax.Array, weights: jax.Array,
+                  segments: jax.Array, n_segments: int,
+                  with_knn: bool) -> jax.Array:
+    _TRACE_COUNT[0] += 1
+    x = jnp.clip(sizes, banks["xlo"][ids], banks["xhi"][ids])
+    lx = jnp.log(x + 1.0)
+
+    feats = jnp.stack([x, lx, jnp.log(lx + 1.0), x * lx], axis=-1)
+    lin = (feats * banks["lin_w"][ids]).sum(-1) + banks["lin_y0"][ids]
+
+    sig = (jax.nn.sigmoid(banks["sig_k"][ids] *
+                          (lx[:, None] - banks["sig_x0"][ids])) *
+           banks["sig_c"][ids]).sum(-1) + banks["sig_y0"][ids]
+
+    kind = banks["kinds"][ids]
+    y = jnp.where(kind == KIND_SIGMOID, sig, lin)
+    if with_knn:   # static: profiles without knn models skip the top_k
+        klx = banks["knn_lx"][ids]
+        d = jnp.abs(lx[:, None] - klx) + 1e-6
+        w = jnp.where(klx >= KNN_SENTINEL * 0.5, 0.0, 1.0 / d)
+        wk, idx = jax.lax.top_k(w, 4)
+        yk = jnp.take_along_axis(banks["knn_y"][ids], idx, axis=1)
+        knn = (wk * yk).sum(-1) / jnp.maximum(wk.sum(-1), 1e-30)
+        y = jnp.where(kind == KIND_KNN, knn, y)
+    y = jnp.maximum(y, 0.0)
+    # tile-aligned design blocks: dense pre-reduction, then one scatter
+    tiles = (weights * y).reshape(-1, TILE).sum(-1)
+    return jax.ops.segment_sum(tiles, segments, num_segments=n_segments,
+                               indices_are_sorted=True)
+
+
+_score_jit = jax.jit(_score_kernel, static_argnums=(5, 6))
+
+
+@functools.lru_cache(maxsize=64)
+def _score_pmap(n_segments: int, with_knn: bool):
+    return jax.pmap(
+        functools.partial(_score_kernel, n_segments=n_segments,
+                          with_knn=with_knn),
+        in_axes=(None, 0, 0, 0, 0))
+
+
+def _pad_records(ids: np.ndarray, sizes: np.ndarray, weights: np.ndarray,
+                 tile_segments: np.ndarray, bucket: int
+                 ) -> Tuple[np.ndarray, ...]:
+    """Pad a tile-aligned record block to ``bucket`` rows (and its tile
+    segments to ``bucket // TILE``); pad rows carry weight 0 so they
+    contribute exactly nothing.  Pad segments repeat the *last* real
+    segment id — appending 0 would break the sorted order that the
+    kernel's ``indices_are_sorted`` scatter hint promises."""
+    n = len(ids)
+    if n == bucket:
+        return (ids.astype(np.int32), sizes.astype(np.float32),
+                weights.astype(np.float32), tile_segments.astype(np.int32))
+    pad = bucket - n
+    seg_pad = bucket // TILE - len(tile_segments)
+    seg_fill = tile_segments[-1] if len(tile_segments) else 0
+    return (np.concatenate([ids, np.zeros(pad, ids.dtype)]).astype(np.int32),
+            np.concatenate([sizes, np.ones(pad, sizes.dtype)]
+                           ).astype(np.float32),
+            np.concatenate([weights, np.zeros(pad, weights.dtype)]
+                           ).astype(np.float32),
+            np.concatenate([tile_segments,
+                            np.full(seg_pad, seg_fill,
+                                    tile_segments.dtype)]
+                           ).astype(np.int32))
+
+
+def _check_frontier(table: DeviceTable, ids: np.ndarray) -> None:
+    if len(ids) and not table.avail[ids].all():
+        missing = sorted({_MODEL_NAMES[m] for m in np.unique(ids)
+                          if not table.avail[m]})
+        raise KeyError(f"profile {table.profile_name!r} has no fitted "
+                       f"model for: {missing}")
+
+
+def score_frontier(ids: np.ndarray, sizes: np.ndarray, weights: np.ndarray,
+                   tile_segments: np.ndarray, n_segments: int,
+                   hw: HardwareProfile,
+                   shard: Optional[bool] = None) -> np.ndarray:
+    """Per-design totals for packed frontier records, in one fused call.
+
+    Records must be TILE-aligned per design and ``tile_segments`` sorted
+    ascending — exactly the layout
+    :func:`repro.core.batchcost.pack_frontier` emits.  ``shard=None``
+    auto-shards across local devices when more than one is present;
+    ``shard=True`` forces the pmap path (works on a single device too),
+    ``shard=False`` forces the single-device jit path.
+    """
+    if n_segments == 0:
+        return np.zeros(0, np.float64)
+    table = device_table(hw)
+    _check_frontier(table, ids)
+    n_pad = _pow2(n_segments, 16)
+    if shard is None:
+        shard = len(jax.local_devices()) > 1 and len(ids) >= 1024
+    if shard:
+        return _score_sharded(table, ids, sizes, weights, tile_segments,
+                              n_segments)
+    totals = np.zeros(n_pad, np.float64)
+    for lo in range(0, max(len(ids), 1), _MAX_FUSED_RECORDS):
+        chunk = slice(lo, lo + _MAX_FUSED_RECORDS)
+        tile_chunk = slice(lo // TILE, (lo + _MAX_FUSED_RECORDS) // TILE)
+        bucket = _pow2(len(ids[chunk]), 16)
+        out = _score_jit(table.banks,
+                         *_pad_records(ids[chunk], sizes[chunk],
+                                       weights[chunk],
+                                       tile_segments[tile_chunk],
+                                       bucket), n_pad, table.has_knn)
+        totals += np.asarray(out, np.float64)
+    return totals[:n_segments]
+
+
+def _score_sharded(table: DeviceTable, ids: np.ndarray, sizes: np.ndarray,
+                   weights: np.ndarray, tile_segments: np.ndarray,
+                   n_segments: int) -> np.ndarray:
+    """pmap the scorer over contiguous segment ranges, one per device."""
+    devices = jax.local_devices()
+    n_dev = max(min(len(devices), n_segments), 1)
+    # segment-aligned tile boundaries with ~balanced segment counts; design
+    # blocks are tile-aligned by construction, so tile cuts never split one
+    seg_cuts = [round(n_segments * d / n_dev) for d in range(n_dev + 1)]
+    tile_cuts = np.searchsorted(tile_segments, seg_cuts, side="left")
+    rec_bucket = _pow2(int(max(np.diff(tile_cuts), default=1)) * TILE, 16)
+    seg_pad = _pow2(int(max(np.diff(seg_cuts), default=1)), 16)
+    shards = []
+    for d in range(n_dev):
+        t0, t1 = tile_cuts[d], tile_cuts[d + 1]
+        r0, r1 = t0 * TILE, t1 * TILE
+        shards.append(_pad_records(ids[r0:r1], sizes[r0:r1],
+                                   weights[r0:r1],
+                                   tile_segments[t0:t1] - seg_cuts[d],
+                                   rec_bucket))
+    stacked = [np.stack([s[i] for s in shards]) for i in range(4)]
+    out = np.asarray(
+        _score_pmap(seg_pad, table.has_knn)(table.banks, *stacked),
+        np.float64)
+    return np.concatenate([
+        out[d, :seg_cuts[d + 1] - seg_cuts[d]] for d in range(n_dev)])

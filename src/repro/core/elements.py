@@ -29,6 +29,10 @@ class Element:
         # calls (dozens per costed design); not a dataclass field, so eq/hash
         # still compare (name, values) only
         object.__setattr__(self, "_lookup", dict(self.values))
+        # frontier packing hashes every element chain on each memo lookup
+        # (thousands of designs per batched call) — hash the nested value
+        # tuples once, not per lookup
+        object.__setattr__(self, "_hash", hash((self.name, self.values)))
 
     @staticmethod
     def make(name: str, **values: Value) -> "Element":
@@ -79,6 +83,12 @@ class Element:
         values = dict(self.values)
         values.update(overrides)
         return Element.make(self.name, **values)
+
+
+# the dataclass-generated __hash__ re-hashes the nested values tuples on
+# every call; serve the precomputed one instead (assigned post-decoration —
+# frozen dataclasses install their own __hash__ over a class-body override)
+Element.__hash__ = lambda self: self._hash  # type: ignore[method-assign]
 
 
 # ---------------------------------------------------------------------------

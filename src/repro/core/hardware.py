@@ -28,6 +28,15 @@ class HardwareProfile:
     constants: Dict[str, float] = dataclasses.field(default_factory=dict)
     key_bytes: int = 8
     value_bytes: int = 8
+    #: lazily-built device-resident parameter banks for the fused frontier
+    #: scorer (:func:`repro.core.devicecost.device_table`); excluded from
+    #: eq/repr and never persisted — what-if hardware questions swap this
+    #: table into an already-compiled scorer with zero recompilation.
+    #: ``init=False`` so ``dataclasses.replace``-derived profiles never
+    #: inherit another model zoo's banks (devicecost re-checks the models
+    #: identity anyway before trusting a cached table)
+    _device_table: Optional[object] = dataclasses.field(
+        default=None, init=False, repr=False, compare=False)
 
     def model(self, level2_name: str) -> FittedModel:
         return self.models[level2_name]

@@ -179,14 +179,42 @@ def _fit_sigmoids_gd(logx: Array, y: Array, init: Dict[str, Array],
 
 
 # ---------------------------------------------------------------------------
+# Weighted k-NN (log-space), jittable with a fixed k=4 top-k
+# ---------------------------------------------------------------------------
+#: log-space marker for padded k-NN bank slots (device tables pad every
+#: model's support to a common width; slots at/beyond this distance carry
+#: zero weight, so a model with n real points reduces to k = min(4, n))
+KNN_SENTINEL = 1e9
+
+
+@jax.jit
+def _knn_predict(lxs: Array, ys: Array, lx: Array) -> Array:
+    """Inverse-log-distance weighted 4-NN, pure and jittable.
+
+    ``top_k`` runs over the *weights* (monotone in -distance), so padded
+    sentinel slots — weight exactly 0 — can win a top-4 slot only when
+    fewer than 4 real neighbors exist, in which case they contribute 0 to
+    both the numerator and the denominator: the fixed k=4 shape serves
+    every support size without masking logic in the caller.
+    """
+    d = jnp.abs(lx[:, None] - lxs[None, :]) + 1e-6
+    w = jnp.where(lxs[None, :] >= KNN_SENTINEL * 0.5, 0.0, 1.0 / d)
+    wk, idx = jax.lax.top_k(w, 4)
+    yk = jnp.take_along_axis(
+        jnp.broadcast_to(ys[None, :], w.shape), idx, axis=1)
+    return (wk * yk).sum(axis=1) / jnp.maximum(wk.sum(axis=1), 1e-30)
+
+
+# ---------------------------------------------------------------------------
 # Fitted model wrapper
 # ---------------------------------------------------------------------------
-# NOTE: predict stays *eager* on purpose.  Jitting the per-kind computation
-# looks tempting, but XLA fuses/vectorizes differently per input shape, so
-# a record evaluated alone (scalar path, shape (1,)) and inside a frontier
-# batch drift by float32 ulps — breaking the batched engine's 1e-9
-# scalar-equivalence contract (see tests/test_batchcost.py).  Eager per-op
-# execution is shape-stable per element.
+# NOTE (supersedes the PR-1 "predict stays eager" note): per-record scalar
+# evaluation and the grouped batched engine still share this eager predict —
+# that is what keeps their 1e-9 scalar-equivalence contract exact.  The
+# *fused* device-resident engine (repro.core.devicecost) instead evaluates
+# every kind through stacked parameter banks inside one jitted call; XLA
+# fuses that computation differently, so it documents a relaxed 1e-6
+# relative agreement with this path (see tests/test_batchcost.py).
 
 @dataclasses.dataclass
 class FittedModel:
@@ -195,9 +223,9 @@ class FittedModel:
     ``predict`` is vectorized over x; the batch cost-synthesis engine
     (:mod:`repro.core.batchcost`) leans on this to evaluate every record of
     a whole candidate frontier in one call per Level-2 model.  Parameter
-    arrays are converted to device arrays once and cached (safe for the
-    immutable kinds; ``sigmoids2d`` mutates ``_m`` via :func:`predict2d`
-    and stays uncached).
+    arrays are converted to device arrays once and cached — every kind is
+    immutable, including ``sigmoids2d``, whose second argument now flows
+    through the pure :func:`predict2d` instead of a mutated param.
     """
 
     kind: str                       # linear|log_linear|log_loglog|nlogn|sigmoids|knn
@@ -208,8 +236,10 @@ class FittedModel:
 
     def _jnp_params(self) -> Dict[str, Array]:
         if self._device_params is None:
-            self._device_params = {k: jnp.asarray(v)
-                                   for k, v in self.params.items()}
+            dp = {k: jnp.asarray(v) for k, v in self.params.items()}
+            if self.kind == "knn":
+                dp["_logx"] = jnp.log(dp["x"] + 1.0)
+            self._device_params = dp
         return self._device_params
 
     def predict(self, x) -> np.ndarray:
@@ -222,20 +252,22 @@ class FittedModel:
             out = _sigmoid_predict(self._jnp_params(),
                                    jnp.log(jnp.asarray(x) + 1.0))
         elif self.kind == "sigmoids2d":
-            # f(x, m) = S1(x) + (m - 1) * S2(x)   (sum of sum of sigmoids)
-            m = np.atleast_1d(np.asarray(self.params["_m"], dtype=np.float32))
-            s1 = _sigmoid_predict(
-                {k: jnp.asarray(self.params["s1_" + k]) for k in
-                 ("c", "k", "x0", "y0")}, jnp.log(jnp.asarray(x) + 1.0))
-            s2 = _sigmoid_predict(
-                {k: jnp.asarray(self.params["s2_" + k]) for k in
-                 ("c", "k", "x0", "y0")}, jnp.log(jnp.asarray(x) + 1.0))
-            out = s1 + (jnp.asarray(m) - 1.0) * s2
+            # f(x, m) = S1(x) + (m - 1) * S2(x); the m axis enters only via
+            # the pure predict2d — plain predict is the m=1 slice, S1(x)
+            p = self._jnp_params()
+            out = _sigmoid_predict(
+                {k: p["s1_" + k] for k in ("c", "k", "x0", "y0")},
+                jnp.log(jnp.asarray(x) + 1.0))
         elif self.kind == "knn":
             xs = self.params["x"]
             ys = self.params["y"]
             lx = np.log(x + 1.0)
             lxs = np.log(xs + 1.0)
+            if len(xs) >= 4:
+                p = self._jnp_params()
+                out = _knn_predict(p["_logx"], p["y"], jnp.asarray(lx))
+                return np.maximum(np.asarray(out), 0.0)
+            # numpy fallback: fewer support points than the fixed top-k
             d = np.abs(lx[:, None] - lxs[None, :]) + 1e-6
             k = min(4, len(xs))
             idx = np.argpartition(d, k - 1, axis=1)[:, :k]
@@ -309,7 +341,7 @@ def fit2d_sigmoids(x: np.ndarray, m: np.ndarray, y: np.ndarray,
             "k": np.ones(num_sigmoids, np.float32),
             "x0": np.zeros(num_sigmoids, np.float32),
             "y0": np.zeros((), np.float32)})
-    params = {"_m": np.asarray([1.0], np.float32)}
+    params = {}
     for key in ("c", "k", "x0", "y0"):
         params["s1_" + key] = s1.params[key]
         params["s2_" + key] = s2.params[key]
@@ -319,9 +351,19 @@ def fit2d_sigmoids(x: np.ndarray, m: np.ndarray, y: np.ndarray,
 
 
 def predict2d(model: FittedModel, x, m) -> np.ndarray:
+    """f(x, m) = S1(x) + (m - 1) S2(x), pure in (model, x, m)."""
     assert model.kind == "sigmoids2d"
-    model.params["_m"] = np.asarray(np.atleast_1d(m), dtype=np.float32)
-    return model.predict(x)
+    x = np.atleast_1d(np.asarray(x, dtype=np.float32))
+    x = np.clip(x, model.x_range[0], model.x_range[1])
+    m = np.atleast_1d(np.asarray(m, dtype=np.float32))
+    p = model._jnp_params()
+    logx = jnp.log(jnp.asarray(x) + 1.0)
+    s1 = _sigmoid_predict(
+        {k: p["s1_" + k] for k in ("c", "k", "x0", "y0")}, logx)
+    s2 = _sigmoid_predict(
+        {k: p["s2_" + k] for k in ("c", "k", "x0", "y0")}, logx)
+    out = s1 + (jnp.asarray(m) - 1.0) * s2
+    return np.maximum(np.asarray(out), 0.0)
 
 
 def r2_score(y_true: np.ndarray, y_pred: np.ndarray) -> float:

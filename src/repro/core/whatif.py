@@ -8,15 +8,23 @@ design / hardware / workload, e.g.:
 * "What if the workload becomes skewed?"
 
 Every question is two cost-synthesis invocations (baseline + variation)
-over the same inputs, so answers arrive in milliseconds–seconds.
+over the same inputs, so answers arrive in milliseconds–seconds.  All
+three run on the batched/fused engine (:mod:`repro.core.batchcost` /
+:mod:`repro.core.devicecost`): a design question costs baseline and
+variant as one two-design frontier, and a hardware question scores the
+*same* packed frontier against both profiles — a pure device
+parameter-table swap with zero re-synthesis and zero recompilation.
+Pass ``engine="scalar"`` to fall back to the per-record scalar path
+(``cost_workload``) — the parity oracle for tests.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, Optional
+from typing import Dict, Optional
 
-from repro.core.elements import DataStructureSpec, Element
+from repro.core.batchcost import cost_many, pack_frontier
+from repro.core.elements import DataStructureSpec
 from repro.core.hardware import HardwareProfile
 from repro.core.synthesis import Workload, cost_workload
 
@@ -43,43 +51,66 @@ class WhatIfAnswer:
                 f" {self.speedup:.2f}x, answered in {self.elapsed_seconds:.2f}s)")
 
 
-def _ask(question: str, base_cost: Callable[[], float],
-         var_cost: Callable[[], float]) -> WhatIfAnswer:
-    t0 = time.perf_counter()
-    base = base_cost()
-    var = var_cost()
-    return WhatIfAnswer(question, base, var, time.perf_counter() - t0)
-
-
 def what_if_design(spec: DataStructureSpec, variant: DataStructureSpec,
                    workload: Workload, hw: HardwareProfile,
-                   mix: Optional[Dict[str, float]] = None) -> WhatIfAnswer:
-    """Same workload + hardware, different design (Fig. 2 leftmost input)."""
-    return _ask(
+                   mix: Optional[Dict[str, float]] = None,
+                   engine: str = "fused") -> WhatIfAnswer:
+    """Same workload + hardware, different design (Fig. 2 leftmost input).
+
+    Baseline and variant are one two-design frontier — a single fused
+    scoring call answers the question.
+    """
+    t0 = time.perf_counter()
+    if engine == "scalar":
+        base = cost_workload(spec, workload, hw, mix)
+        var = cost_workload(variant, workload, hw, mix)
+    else:
+        base, var = cost_many([spec, variant], workload, hw, mix,
+                              engine=engine)
+    return WhatIfAnswer(
         f"design {spec.describe()} -> {variant.describe()}",
-        lambda: cost_workload(spec, workload, hw, mix),
-        lambda: cost_workload(variant, workload, hw, mix))
+        float(base), float(var), time.perf_counter() - t0)
 
 
 def what_if_hardware(spec: DataStructureSpec, workload: Workload,
                      hw: HardwareProfile, new_hw: HardwareProfile,
-                     mix: Optional[Dict[str, float]] = None) -> WhatIfAnswer:
-    """Test new hardware without deploying to it (paper §4/§5)."""
-    return _ask(
+                     mix: Optional[Dict[str, float]] = None,
+                     engine: str = "fused") -> WhatIfAnswer:
+    """Test new hardware without deploying to it (paper §4/§5).
+
+    The design is packed once; each profile only swaps its device
+    parameter table into the already-compiled fused scorer.
+    """
+    t0 = time.perf_counter()
+    if engine == "scalar":
+        base = cost_workload(spec, workload, hw, mix)
+        var = cost_workload(spec, workload, new_hw, mix)
+    else:
+        packed = pack_frontier([spec], workload, mix)
+        base = packed.score(hw, engine=engine)[0]
+        var = packed.score(new_hw, engine=engine)[0]
+    return WhatIfAnswer(
         f"hardware {hw.name} -> {new_hw.name}",
-        lambda: cost_workload(spec, workload, hw, mix),
-        lambda: cost_workload(spec, workload, new_hw, mix))
+        float(base), float(var), time.perf_counter() - t0)
 
 
 def what_if_workload(spec: DataStructureSpec, workload: Workload,
                      new_workload: Workload, hw: HardwareProfile,
-                     mix: Optional[Dict[str, float]] = None) -> WhatIfAnswer:
+                     mix: Optional[Dict[str, float]] = None,
+                     engine: str = "fused") -> WhatIfAnswer:
     """E.g. "what if queries skew to 0.01% of the key space?"."""
-    return _ask(
+    t0 = time.perf_counter()
+    if engine == "scalar":
+        base = cost_workload(spec, workload, hw, mix)
+        var = cost_workload(spec, new_workload, hw, mix)
+    else:
+        base = float(cost_many([spec], workload, hw, mix, engine=engine)[0])
+        var = float(cost_many([spec], new_workload, hw, mix,
+                              engine=engine)[0])
+    return WhatIfAnswer(
         f"workload n={workload.n_entries},zipf={workload.zipf_alpha} -> "
         f"n={new_workload.n_entries},zipf={new_workload.zipf_alpha}",
-        lambda: cost_workload(spec, workload, hw, mix),
-        lambda: cost_workload(spec, new_workload, hw, mix))
+        float(base), float(var), time.perf_counter() - t0)
 
 
 def add_bloom_filters(spec: DataStructureSpec, num_hashes: int = 4,

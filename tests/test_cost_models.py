@@ -64,6 +64,63 @@ def test_2d_sigmoids_bloom_model():
     assert models.r2_score(y, pred) > 0.9
 
 
+def test_predict2d_is_pure():
+    """predict2d(model, x, m) must not mutate the model: parameter state
+    would break device-param caching and thread-safety (the fused engine
+    banks every model once per profile)."""
+    x = np.tile(np.logspace(2, 6, 20), 4)
+    m_in = np.repeat([1, 2, 3, 4], 20)
+    y = (1e-8 / (1 + np.exp(-(np.log(x + 1.0) - 8.0)))) * m_in
+    fm = models.fit2d_sigmoids(x, m_in, y)
+    params_before = {k: v.copy() for k, v in fm.params.items()}
+    base = fm.predict(x).copy()           # the m=1 slice, S1(x)
+    p4 = models.predict2d(fm, x, np.full_like(x, 4.0))
+    p1 = models.predict2d(fm, x, np.ones_like(x))
+    assert set(fm.params) == set(params_before)       # no state smuggled in
+    for k, v in fm.params.items():
+        np.testing.assert_array_equal(v, params_before[k])
+    np.testing.assert_allclose(p1, base, rtol=1e-6)   # m=1 == plain predict
+    assert (p4 >= p1 - 1e-12).all() and p4.max() > p1.max()
+    # interleaving m values must not change earlier answers (statefulness
+    # regression: the old _m param made call order observable)
+    np.testing.assert_array_equal(
+        models.predict2d(fm, x, np.full_like(x, 4.0)), p4)
+
+
+def test_knn_numpy_fallback_below_four_points():
+    """len(xs) < 4 cannot feed the fixed k=4 top-k: the numpy path with
+    k=min(4, n) serves those models, matching a hand inverse-log-distance
+    interpolation."""
+    xs = np.array([10.0, 100.0, 1000.0])
+    ys = np.array([1e-8, 2e-8, 4e-8])
+    m = models.fit("knn", xs, ys)
+    q = np.array([30.0, 500.0])
+    d = np.abs(np.log(q.astype(np.float32) + 1.0)[:, None] -
+               np.log(xs.astype(np.float32) + 1.0)[None, :]) + 1e-6
+    w = 1.0 / d
+    expected = (w * ys).sum(1) / w.sum(1)
+    np.testing.assert_allclose(m.predict(q), expected, rtol=1e-6)
+    # interior support points reproduce their own y (distance ~ 0 wins)
+    np.testing.assert_allclose(m.predict(xs[1:2]), ys[1:2], rtol=1e-3)
+
+
+def test_knn_jax_path_matches_numpy_reference():
+    """n >= 4 runs the jitted fixed-k top-k; it must agree with the plain
+    numpy argpartition formulation it replaced."""
+    rng = np.random.default_rng(7)
+    xs = np.logspace(1, 6, 24)
+    ys = (1e-8 * np.sqrt(xs) * (1 + 0.05 * rng.standard_normal(24)))
+    m = models.fit("knn", xs, ys)
+    q = np.logspace(1.2, 5.8, 50).astype(np.float32)
+    lx = np.log(q + 1.0)
+    lxs = np.log(xs.astype(np.float32) + 1.0)
+    d = np.abs(lx[:, None] - lxs[None, :]) + 1e-6
+    idx = np.argpartition(d, 3, axis=1)[:, :4]
+    wk = 1.0 / np.take_along_axis(d, idx, axis=1)
+    expected = (wk * ys[idx]).sum(1) / wk.sum(1)
+    np.testing.assert_allclose(m.predict(q), expected, rtol=1e-5)
+
+
 def test_predictions_are_nonnegative_and_clipped():
     x = np.logspace(1, 4, 10)
     y = 1e-9 * x

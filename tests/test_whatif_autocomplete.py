@@ -38,6 +38,33 @@ def test_what_if_workload_skew(hw_analytical):
     assert ans.beneficial  # skew improves B-tree gets (Fig. 8b)
 
 
+def test_whatif_fused_parity_with_scalar(hw_analytical):
+    """All three what-if kinds ride the batched/fused path by default;
+    their answers must match the scalar cost_workload oracle to the fused
+    engine's documented 1e-6 tolerance, verdicts included."""
+    spec = el.spec_btree()
+    mix = {"get": 80.0, "update": 20.0}
+    skewed = dataclasses.replace(W, zipf_alpha=1.2)
+    questions = [
+        lambda engine: whatif.what_if_design(
+            spec, whatif.add_bloom_filters(el.spec_hash_table()), W, hw1(),
+            mix, engine=engine),
+        lambda engine: whatif.what_if_hardware(
+            spec, W, hw1(), hw3(), mix, engine=engine),
+        lambda engine: whatif.what_if_workload(
+            spec, W, skewed, hw1(), mix, engine=engine),
+    ]
+    for ask in questions:
+        fused = ask("fused")
+        scalar = ask("scalar")
+        assert fused.baseline_seconds == pytest.approx(
+            scalar.baseline_seconds, rel=1e-6)
+        assert fused.variant_seconds == pytest.approx(
+            scalar.variant_seconds, rel=1e-6)
+        assert fused.beneficial == scalar.beneficial
+        assert fused.question == scalar.question
+
+
 def test_autocomplete_point_read_workload_prefers_index(hw_analytical):
     """A point-get workload must not complete to a bare linked list."""
     result = complete_design((), W, hw1(), mix={"get": 100.0}, max_depth=2)
