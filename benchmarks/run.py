@@ -1,8 +1,12 @@
 """Benchmark driver: one module per paper table/figure + the TPU roofline.
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+    PYTHONPATH=src python -m benchmarks.run --smoke
 
-Artifacts land in experiments/bench/<name>.json; tables print to stdout.
+``--smoke`` is the fast validation path: it runs the search-engine parity
+checks at tiny sizes, writes **no** artifacts and appends nothing to the
+BENCH_search trajectory — CI-friendly, seconds not minutes.  The full
+trajectory run stays one command (no flags).
 """
 from __future__ import annotations
 
@@ -34,8 +38,17 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="reduced sizes (CI mode)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast parity-only pass: tiny sizes, no artifacts,"
+                         " no trajectory append")
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
+    if args.smoke:
+        print("### benchmark: BENCH_search (smoke)", flush=True)
+        t0 = time.perf_counter()
+        search_bench.run(smoke=True)
+        print(f"### smoke done in {time.perf_counter() - t0:.1f}s")
+        return
     if args.only and args.only not in {name for name, _ in BENCHES}:
         ap.error(f"unknown benchmark {args.only!r}; choose from "
                  f"{[name for name, _ in BENCHES]}")

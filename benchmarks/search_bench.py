@@ -1,23 +1,31 @@
 """BENCH_search: designs-costed-per-second across costing engines (perf CI).
 
-Measures three searches through every costing path — the scalar per-design
-``cost_workload`` loop, the PR-1 grouped ``cost_many`` engine, and the PR-2
-fused device-resident engine (:mod:`repro.core.devicecost`):
+Measures four searches through every costing path — the scalar per-design
+``cost_workload`` loop, the PR-1 grouped ``cost_many`` engine, the PR-2
+fused device-resident engine (:mod:`repro.core.devicecost`), and the PR-3
+template-vectorized packer (:mod:`repro.core.templatecost`):
 
-1. fig9-style auto-completion search (cold synthesis caches per run);
+1. fig9-style auto-completion search, cold caches per run *and*
+   steady-state (warm enumeration/segment/frontier memos — the what-if
+   serving regime), against a verbatim reconstruction of the PR-2
+   per-design packing loop as the frozen end-to-end baseline;
 2. the design hill climb (cold caches per run);
-3. steady-state scoring of a >=4096-design frontier — warm caches, the
-   what-if-serving regime — against a verbatim reconstruction of the PR-1
-   ``cost_many`` as the fixed baseline, so the recorded speedup stays
-   comparable even as the in-tree grouped engine keeps improving.
+3. frontier *packing* throughput (designs/sec through ``pack_frontier``,
+   construction only — no scoring), so the construction/scoring split of
+   the Amdahl gap stays visible across future PRs;
+4. steady-state scoring of a >=4096-design frontier against a verbatim
+   reconstruction of the PR-1 ``cost_many`` as the fixed baseline.
 
 Each run *appends* one labelled entry to
 experiments/bench/BENCH_search.json (a trajectory accumulating across PRs
 — the PR-1 rows are migrated to entry 0), so future PRs can track search
-throughput against both PR 1 and this PR.
+throughput against PR 1, PR 2 and this PR.  ``run(smoke=True)`` executes
+the same parity checks at tiny sizes without appending to the trajectory
+or asserting perf bars (the ``benchmarks/run.py --smoke`` fast path).
 """
 from __future__ import annotations
 
+import functools
 import time
 from typing import Dict, List
 
@@ -26,8 +34,11 @@ import numpy as np
 from benchmarks.common import emit_trajectory, timer
 from benchmarks.hillclimb import bench_climb
 
-#: the tentpole acceptance bar: fused frontier scoring vs PR-1 cost_many
+#: the PR-2 acceptance bar: fused frontier scoring vs PR-1 cost_many
 TARGET_SPEEDUP = 3.0
+#: the PR-3 acceptance bar: end-to-end auto-completion (cold and steady
+#: state) and frontier packing vs the reconstructed PR-2 pipeline
+E2E_TARGET_SPEEDUP = 3.0
 
 
 def _pr1_cost_many(specs, workload, hw, mix) -> np.ndarray:
@@ -69,6 +80,66 @@ def _steady_state(fn, reps: int = 7) -> float:
         fn()
         times.append(time.perf_counter() - t0)
     return min(times)
+
+
+# ---------------------------------------------------------------------------
+# PR-2 frontier construction (commit be0802c), reconstructed verbatim: the
+# per-design scalar-synthesis packing loop behind the old pack_frontier.
+# Frozen here as the end-to-end baseline for the PR-3 trajectory speedups.
+# ---------------------------------------------------------------------------
+@functools.lru_cache(maxsize=65536)
+def _pr2_packed_spec(chain, workload, mix_items):
+    from repro.core import devicecost
+    from repro.core.batchcost import _compiled_operation
+    parts = [_compiled_operation(op, chain, workload) for op, _ in mix_items]
+    n = sum(c.n_records for c in parts)
+    padded = -n % devicecost.TILE
+    real_ids = np.concatenate([c.model_ids for c in parts]) if parts else \
+        np.zeros(0, np.int32)
+    pad_id = real_ids[0] if n else 0
+    ids = np.concatenate([real_ids, np.full(padded, pad_id, np.int32)])
+    sizes = np.concatenate([c.sizes for c in parts] +
+                           [np.ones(padded, np.float64)])
+    weights = np.concatenate([c.counts * float(w)
+                              for c, (_, w) in zip(parts, mix_items)] +
+                             [np.zeros(padded, np.float64)])
+    return ids, sizes, weights
+
+
+def _pr2_pack_frontier(specs, workload, mix):
+    from repro.core import devicecost
+    from repro.core.batchcost import PackedFrontier
+    mix = mix or {"get": float(workload.n_queries)}
+    mix_items = tuple(mix.items())
+    per_spec = [_pr2_packed_spec(spec.chain, workload, mix_items)
+                for spec in specs]
+    tile_segments = np.repeat(
+        np.arange(len(per_spec), dtype=np.int64),
+        [len(ids) // devicecost.TILE for ids, _, _ in per_spec])
+    return PackedFrontier(
+        np.concatenate([p[0] for p in per_spec]),
+        np.concatenate([p[1] for p in per_spec]),
+        np.concatenate([p[2] for p in per_spec]),
+        tile_segments, len(per_spec))
+
+
+def _pr2_clear_caches() -> None:
+    from repro.core import batchcost
+    batchcost.clear_caches()
+    _pr2_packed_spec.cache_clear()
+
+
+def _pr2_complete_design(workload, hw, mix, max_depth):
+    """End-to-end PR-2 auto-completion: fresh enumeration (PR 2 had no
+    enumeration memo) + per-design packing + fused scoring."""
+    from repro.core.autocomplete import (default_candidates,
+                                        default_terminals,
+                                        enumerate_completions)
+    frontier = enumerate_completions((), default_candidates(),
+                                     default_terminals(), max_depth, "auto")
+    totals = _pr2_pack_frontier(frontier, workload, mix).score(hw)
+    best = int(np.argmin(totals))
+    return frontier[best], float(totals[best]), len(frontier)
 
 
 def _bench_frontier_scoring(workload, hw, mix, min_designs: int) -> Dict:
@@ -130,6 +201,7 @@ def _bench_complete_design(workload, hw, mix, max_depth: int) -> Dict:
     complete_design((), workload, hw, mix=mix, max_depth=max_depth,
                     engine="grouped")
     complete_design((), workload, hw, mix=mix, max_depth=1, batched=False)
+    _pr2_complete_design(workload, hw, mix, max_depth)
     results, times = {}, {}
     for label, kwargs in (("fused", {}), ("grouped", {"engine": "grouped"}),
                           ("scalar", {"batched": False})):
@@ -145,6 +217,21 @@ def _bench_complete_design(workload, hw, mix, max_depth: int) -> Dict:
             elapsed = t()
             best = elapsed if best is None else min(best, elapsed)
         times[label] = best
+    pr2_cold = None
+    for _ in range(3):
+        _pr2_clear_caches()
+        t = timer()
+        pr2_spec, pr2_cost, pr2_explored = _pr2_complete_design(
+            workload, hw, mix, max_depth)
+        elapsed = t()
+        pr2_cold = elapsed if pr2_cold is None else min(pr2_cold, elapsed)
+    # steady state: warm enumeration/segment/frontier memos (the what-if
+    # serving regime) vs the warm PR-2 loop (its only memo is per-spec)
+    fused_steady = _steady_state(
+        lambda: complete_design((), workload, hw, mix=mix,
+                                max_depth=max_depth))
+    pr2_steady = _steady_state(
+        lambda: _pr2_complete_design(workload, hw, mix, max_depth))
     # cost parity is the hard invariant; an argmin flip between exactly
     # cost-tied candidates would be benign (note it, don't fail the run)
     assert abs(results["grouped"].cost_seconds -
@@ -153,6 +240,9 @@ def _bench_complete_design(workload, hw, mix, max_depth: int) -> Dict:
     assert abs(results["fused"].cost_seconds -
                results["scalar"].cost_seconds) <= \
         1e-6 * results["scalar"].cost_seconds
+    assert abs(pr2_cost - results["fused"].cost_seconds) <= \
+        1e-6 * results["fused"].cost_seconds
+    assert pr2_explored == results["fused"].explored
     if results["fused"].spec.describe() != results["scalar"].spec.describe():
         print(f"note: cost-tied search results differ structurally: "
               f"{results['fused'].spec.describe()} vs "
@@ -165,12 +255,71 @@ def _bench_complete_design(workload, hw, mix, max_depth: int) -> Dict:
         "scalar_s": times["scalar"],
         "grouped_s": times["grouped"],
         "fused_s": times["fused"],
+        "fused_steady_s": fused_steady,
+        "pr2_e2e_s": pr2_cold,
+        "pr2_steady_s": pr2_steady,
         "scalar_designs_per_s": explored / max(times["scalar"], 1e-12),
         "fused_designs_per_s": explored / max(times["fused"], 1e-12),
+        "steady_designs_per_s": explored / max(fused_steady, 1e-12),
         "speedup_fused_vs_pr1": times["grouped"] / max(times["fused"],
                                                        1e-12),
         "speedup_fused_vs_scalar": times["scalar"] / max(times["fused"],
                                                          1e-12),
+        "speedup_e2e_cold_vs_pr2": pr2_cold / max(times["fused"], 1e-12),
+        "speedup_e2e_steady_vs_pr2": pr2_steady / max(fused_steady, 1e-12),
+    }
+
+
+def _bench_frontier_packing(workload, hw, mix, min_designs: int) -> Dict:
+    """Construction-only throughput: designs/sec through ``pack_frontier``
+    (no scoring), template-vectorized vs the reconstructed PR-2 per-design
+    loop — keeps the packing/scoring split of the Amdahl gap visible."""
+    from repro.core import batchcost
+    from repro.core.autocomplete import (default_candidates,
+                                        default_terminals,
+                                        enumerate_completions)
+
+    frontier = enumerate_completions((), default_candidates(),
+                                     default_terminals(), 4, "bench")
+    while len(frontier) < min_designs:
+        frontier = frontier + frontier
+    n = len(frontier)
+
+    packed = batchcost.pack_frontier(frontier, workload, mix)
+    pr2 = _pr2_pack_frontier(frontier, workload, mix)
+    assert packed.n_segments == pr2.n_segments
+    new_totals = packed.score(hw, engine="grouped")
+    pr2_totals = pr2.score(hw, engine="grouped")
+    np.testing.assert_allclose(new_totals, pr2_totals, rtol=1e-9)
+    assert int(np.argmin(new_totals)) == int(np.argmin(pr2_totals))
+
+    pack_cold = None
+    for _ in range(3):
+        batchcost.clear_caches()
+        t = timer()
+        batchcost.pack_frontier(frontier, workload, mix)
+        elapsed = t()
+        pack_cold = elapsed if pack_cold is None else min(pack_cold, elapsed)
+    pack_warm = _steady_state(
+        lambda: batchcost.pack_frontier(frontier, workload, mix))
+    pr2_cold = None
+    for _ in range(3):
+        _pr2_clear_caches()
+        t = timer()
+        _pr2_pack_frontier(frontier, workload, mix)
+        elapsed = t()
+        pr2_cold = elapsed if pr2_cold is None else min(pr2_cold, elapsed)
+    return {
+        "search": "frontier_packing",
+        "designs": n,
+        "records": len(packed.ids),
+        "fused_s": pack_cold,
+        "pr2_e2e_s": pr2_cold,
+        "pack_cold_s": pack_cold,
+        "pack_warm_s": pack_warm,
+        "pack_designs_per_s": n / max(pack_cold, 1e-12),
+        "pr2_pack_designs_per_s": n / max(pr2_cold, 1e-12),
+        "speedup_pack_vs_pr2": pr2_cold / max(pack_cold, 1e-12),
     }
 
 
@@ -190,12 +339,14 @@ def _bench_hillclimb(workload, hw, mix, steps: int) -> Dict:
     }
 
 
-def run(quick: bool = False) -> None:
+def run(quick: bool = False, smoke: bool = False) -> None:
+    from benchmarks.common import _print_table
     from repro.core import batchcost
     from repro.core.hardware import hw3
     from repro.core.synthesis import Workload
 
     hw = hw3()
+    quick = quick or smoke
     n = 100_000 if quick else 1_000_000
     workload = Workload(n_entries=n, n_queries=100)
     mix = {"get": 80.0, "update": 20.0}
@@ -205,14 +356,24 @@ def run(quick: bool = False) -> None:
         _bench_complete_design(workload, hw, mix,
                                max_depth=2 if quick else 3),
         _bench_hillclimb(workload, hw, mix, steps=5 if quick else 30),
+        _bench_frontier_packing(workload, hw, mix,
+                                min_designs=256 if quick else 4096),
         _bench_frontier_scoring(workload, hw, mix,
                                 min_designs=1024 if quick else 4096),
     ]
-    emit_trajectory(
-        "BENCH_search", "PR2 fused device-resident frontier scoring", rows,
-        keys=["search", "designs", "scalar_s", "grouped_s", "fused_s",
-              "fused_score_s", "fused_designs_per_s",
-              "speedup_fused_vs_pr1", "design"])
+    keys = ["search", "designs", "scalar_s", "grouped_s", "fused_s",
+            "fused_steady_s", "fused_score_s", "pack_cold_s", "pr2_e2e_s",
+            "fused_designs_per_s", "pack_designs_per_s",
+            "speedup_fused_vs_pr1", "speedup_e2e_cold_vs_pr2",
+            "speedup_e2e_steady_vs_pr2", "design"]
+    if smoke:
+        # parity-only pass: no trajectory append, no perf bars (tiny
+        # sizes make wall-clock ratios meaningless)
+        _print_table("BENCH_search [smoke — not persisted]", rows, keys)
+        print("smoke parity checks passed")
+        return
+    # perf bars come BEFORE the trajectory append: a regressed run must
+    # fail without permanently writing its entry into the cross-PR file
     scoring = rows[-1]
     print(f"fused scoring vs PR-1 cost_many: "
           f"{scoring['speedup_fused_scoring_vs_pr1']:.1f}x "
@@ -220,6 +381,29 @@ def run(quick: bool = False) -> None:
           f"{scoring['designs']} designs")
     assert scoring["speedup_fused_scoring_vs_pr1"] >= TARGET_SPEEDUP, \
         "fused frontier scoring regressed below the PR-2 acceptance bar"
+    e2e = rows[0]
+    print(f"auto-completion vs PR-2 pipeline: "
+          f"{e2e['speedup_e2e_cold_vs_pr2']:.1f}x cold / "
+          f"{e2e['speedup_e2e_steady_vs_pr2']:.1f}x steady "
+          f"(target >= {E2E_TARGET_SPEEDUP:.0f}x) on "
+          f"{e2e['designs']} designs")
+    assert e2e["speedup_e2e_cold_vs_pr2"] >= E2E_TARGET_SPEEDUP, \
+        "cold end-to-end search regressed below the PR-3 acceptance bar"
+    assert e2e["speedup_e2e_steady_vs_pr2"] >= E2E_TARGET_SPEEDUP, \
+        "steady-state search regressed below the PR-3 acceptance bar"
+    packing = rows[2]
+    print(f"frontier packing vs PR-2 loop: "
+          f"{packing['speedup_pack_vs_pr2']:.1f}x cold on "
+          f"{packing['designs']} designs")
+    # the acceptance bar is end-to-end (above); the packing-only ratio
+    # (3.1-3.8x measured) gets a looser floor so run-to-run allocator
+    # noise on the 200k-record frontier can't flake the perf CI
+    assert packing["speedup_pack_vs_pr2"] >= 2.5, \
+        "template-vectorized packing regressed below the PR-3 bar"
+    emit_trajectory(
+        "BENCH_search",
+        "PR3 template-vectorized synthesis + incremental frontier packing",
+        rows, keys=keys)
 
 
 if __name__ == "__main__":

@@ -30,35 +30,54 @@ Public API
 ``pack_frontier(specs, workload, mix)``
     The hardware-independent packed arrays of a frontier; score the same
     :class:`PackedFrontier` against many profiles (what-if hardware) with
-    zero re-synthesis and zero recompilation.
+    zero re-synthesis and zero recompilation.  Construction is
+    **template-vectorized** (:mod:`repro.core.templatecost`): chains never
+    seen before are grouped by structural template and synthesized as
+    batched numpy column ops — no per-design Python walk — while chains
+    packed earlier splice their cached per-spec segments straight in
+    (*incremental packing*; a re-packed identical frontier is one cache
+    hit).
+``concat_frontiers(parts)``
+    Splice already-packed frontiers into one — hill-climb/beam rounds and
+    ``whatif`` baseline+variant pairs compose retained frontiers instead
+    of re-packing every design.
 ``compiled_operation(op, spec, workload)``
-    The cached compiled form of one operation's breakdown; synthesis runs
-    once per (op, chain fingerprint, workload) and is reused across search
-    calls, regions, and hardware profiles.
+    The cached compiled form of one operation's breakdown through the
+    *scalar* expert system — the per-design oracle the vectorized packer
+    is tested against (and the ``cost_one`` fast path).
 ``clear_caches()``
-    Drop all compile/instantiate memos (tests, element-library edits).
+    Drop every memo in the synthesis/packing stack (tests,
+    element-library edits) — including the template, segment and frontier
+    caches, and any cache registered via :func:`register_cache`.
 
-Caching layers (all keyed on hashable, frozen inputs):
+Caching layers (all keyed on hashable, frozen inputs — hardware is *not*
+part of any key, so re-costing a frontier on new hardware touches no
+synthesis code at all):
 
-1. ``instantiate`` is memoized in :mod:`repro.core.synthesis` on
-   (element chain, workload) — population is simulated once per structure.
-2. The per-(n_nodes, zipf_alpha) skew weight arrays of
-   ``_level_popularity`` are memoized there too.
-3. The compiled (model-id, size, count) arrays per (op, chain, workload)
-   are memoized here, and the per-spec mix-weighted concatenation per
-   (chain, workload, mix); hardware is *not* part of either key, so
-   re-costing the same frontier on new hardware (the paper's what-if
-   hardware questions) touches no synthesis code at all.
+1. ``chain_geometry`` in :mod:`repro.core.templatecost` — the block
+   division simulation per (element chain, workload), and the scalar
+   ``instantiate`` twin in :mod:`repro.core.synthesis`.
+2. The per-(n_nodes, zipf_alpha) skew weights and per-template
+   ``symbolic_breakdown`` schemas, memoized in synthesis.
+3. The *segment cache* here: each spec's mix-weighted, tile-padded
+   (ids, sizes, weights) arrays per (chain, workload, mix) — populated in
+   batch by the vectorized packer, reused record-for-record by later
+   frontiers containing the same chain.
+4. The *frontier cache*: whole packed frontiers per (chains, workload,
+   mix) — the steady-state what-if-serving hit path.
+5. ``compiled_operation`` per (op, chain, workload) — scalar-oracle path
+   only.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import devicecost
+from repro.core import devicecost, templatecost
 from repro.core.devicecost import _MODEL_NAMES, model_id as _model_id
 from repro.core.elements import DataStructureSpec, Element
 from repro.core.hardware import HardwareProfile
@@ -149,18 +168,91 @@ def compiled_operation(op: str, spec: DataStructureSpec,
     return _compiled_operation(op, spec.chain, workload)
 
 
+CacheInfo = collections.namedtuple("CacheInfo",
+                                   "hits misses maxsize currsize")
+
+
+class _DictCache:
+    """An insertable memo with lru_cache-style hit/miss accounting.
+
+    ``functools.lru_cache`` cannot be *populated* from outside, but the
+    vectorized packer computes many entries per call and must store them
+    all; this keeps the same observable counters so cache tests treat
+    every layer uniformly.  ``maxsize`` evicts the least-recently-used
+    entry (hits refresh recency — a burst of small what-if frontiers
+    must not push the retained steady-state search frontier out).
+    """
+
+    def __init__(self, maxsize: Optional[int] = None) -> None:
+        self._data: "collections.OrderedDict" = collections.OrderedDict()
+        self._maxsize = maxsize
+        self._hits = 0
+        self._misses = 0
+
+    def get(self, key):
+        entry = self._data.get(key)
+        if entry is None:
+            self._misses += 1
+        else:
+            self._hits += 1
+            self._data.move_to_end(key)
+        return entry
+
+    def put(self, key, value) -> None:
+        self._data[key] = value
+        if self._maxsize is not None and len(self._data) > self._maxsize:
+            self._data.popitem(last=False)
+
+    def clear(self) -> None:
+        self._data.clear()
+        self._hits = self._misses = 0
+
+    def info(self) -> CacheInfo:
+        return CacheInfo(self._hits, self._misses, self._maxsize,
+                         len(self._data))
+
+
+#: per-spec packed segments — (chain, workload, mix) -> (ids, sizes, weights)
+_segment_cache = _DictCache(maxsize=65536)
+#: whole packed frontiers — (chains, workload, mix) -> PackedFrontier
+_frontier_cache = _DictCache(maxsize=16)
+
+#: caches owned by other modules (e.g. autocomplete's frontier
+#: enumeration memo) that must drain with ours: name -> (info_fn, clear_fn)
+_EXTERNAL_CACHES: Dict[str, Tuple[Callable, Callable]] = {}
+
+
+def register_cache(name: str, info_fn: Callable[[], Tuple],
+                   clear_fn: Callable[[], None]) -> None:
+    """Hook an external memo into :func:`clear_caches`/:func:`cache_info`
+    (keeps 'clear everything' a single call as the cache stack grows)."""
+    _EXTERNAL_CACHES[name] = (info_fn, clear_fn)
+
+
 def clear_caches() -> None:
     _compiled_operation.cache_clear()
-    _packed_spec.cache_clear()
+    _segment_cache.clear()
+    _frontier_cache.clear()
+    templatecost.clear_template_caches()
     clear_synthesis_caches()
+    for _, clear_fn in _EXTERNAL_CACHES.values():
+        clear_fn()
 
 
 def cache_info() -> Dict[str, Tuple]:
-    from repro.core.synthesis import _instantiate_levels, _zipf_collision_mass
-    return {"compiled_operation": _compiled_operation.cache_info(),
-            "packed_spec": _packed_spec.cache_info(),
+    from repro.core.synthesis import (_instantiate_levels,
+                                      _zipf_collision_mass,
+                                      symbolic_breakdown)
+    info = {"compiled_operation": _compiled_operation.cache_info(),
+            "packed_spec": _segment_cache.info(),
+            "frontier": _frontier_cache.info(),
             "instantiate": _instantiate_levels.cache_info(),
-            "zipf_mass": _zipf_collision_mass.cache_info()}
+            "zipf_mass": _zipf_collision_mass.cache_info(),
+            "symbolic_breakdown": symbolic_breakdown.cache_info()}
+    info.update(templatecost.cache_info())
+    for name, (info_fn, _) in _EXTERNAL_CACHES.items():
+        info[name] = info_fn()
+    return info
 
 
 # ---------------------------------------------------------------------------
@@ -188,12 +280,30 @@ class PackedFrontier:
         """Per-record design indices (expanded from the tile layout)."""
         return np.repeat(self.tile_segments, devicecost.TILE)
 
+    def _fused_arrays(self) -> Tuple[np.ndarray, ...]:
+        """Device-dtype views for the fused scorer, converted once.
+
+        Steady-state what-if serving scores the same retained frontier
+        over and over; caching the float32/int32 conversions here (the
+        instance is frozen — the memo rides its ``__dict__``) keeps each
+        repeat score a pure device call instead of three array copies.
+        """
+        cached = self.__dict__.get("_f32")
+        if cached is None:
+            cached = (np.asarray(self.ids, np.int32),
+                      np.asarray(self.sizes, np.float32),
+                      np.asarray(self.weights, np.float32),
+                      np.asarray(self.tile_segments, np.int32))
+            object.__setattr__(self, "_f32", cached)
+        return cached
+
     def score(self, hw: HardwareProfile, engine: str = "fused",
               shard: Optional[bool] = None) -> np.ndarray:
         """Per-design totals under ``hw`` via the selected engine."""
         if engine == "fused":
+            ids, sizes, weights, tiles = self._fused_arrays()
             return devicecost.score_frontier(
-                self.ids, self.sizes, self.weights, self.tile_segments,
+                ids, sizes, weights, tiles,
                 self.n_segments, hw, shard=shard)
         if engine != "grouped":
             raise ValueError(f"unknown engine: {engine!r}")
@@ -209,41 +319,8 @@ class PackedFrontier:
         return totals
 
 
-@functools.lru_cache(maxsize=65536)
-def _packed_spec(chain: Tuple[Element, ...], workload: Workload,
-                 mix_items: Tuple[Tuple[str, float], ...]
-                 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-    """One spec's mix-weighted (ids, sizes, weights), concatenated over the
-    operation mix and padded to a TILE multiple (pad rows carry weight 0,
-    contributing exactly nothing) — the memo that turns repeated frontier
-    packing into one cache hit per (chain, workload, mix)."""
-    parts = [_compiled_operation(op, chain, workload) for op, _ in mix_items]
-    n = sum(c.n_records for c in parts)
-    padded = -n % devicecost.TILE
-    # pad rows reuse the block's own first model id: an arbitrary id (e.g.
-    # 0) could name a model another profile interned, tripping the scoring
-    # engines' model-availability checks on records that weigh nothing
-    real_ids = np.concatenate([c.model_ids for c in parts]) if parts else \
-        np.zeros(0, np.int32)
-    pad_id = real_ids[0] if n else 0
-    ids = np.concatenate([real_ids, np.full(padded, pad_id, np.int32)])
-    sizes = np.concatenate([c.sizes for c in parts] +
-                           [np.ones(padded, np.float64)])
-    weights = np.concatenate([c.counts * float(w)
-                              for c, (_, w) in zip(parts, mix_items)] +
-                             [np.zeros(padded, np.float64)])
-    for arr in (ids, sizes, weights):
-        arr.setflags(write=False)
-    return ids, sizes, weights
-
-
-def pack_frontier(specs: Sequence[DataStructureSpec], workload: Workload,
-                  mix: Optional[Dict[str, float]] = None) -> PackedFrontier:
-    """Flatten a frontier into parallel record arrays (no hardware)."""
-    mix = mix or {"get": float(workload.n_queries)}
-    mix_items = tuple(mix.items())
-    per_spec = [_packed_spec(spec.chain, workload, mix_items)
-                for spec in specs]
+def _assemble_frontier(per_spec: List[Tuple[np.ndarray, ...]]
+                       ) -> PackedFrontier:
     if not per_spec:
         empty = np.zeros(0)
         return PackedFrontier(empty.astype(np.int32), empty, empty,
@@ -256,6 +333,71 @@ def pack_frontier(specs: Sequence[DataStructureSpec], workload: Workload,
         np.concatenate([p[1] for p in per_spec]),
         np.concatenate([p[2] for p in per_spec]),
         tile_segments, len(per_spec))
+
+
+def pack_frontier(specs: Sequence[DataStructureSpec], workload: Workload,
+                  mix: Optional[Dict[str, float]] = None) -> PackedFrontier:
+    """Flatten a frontier into parallel record arrays (no hardware).
+
+    Incremental by construction: per-spec segments live in the segment
+    cache keyed on the chain hash, so only never-seen chains reach the
+    template-vectorized synthesizer (:func:`templatecost.pack_specs` —
+    batched numpy ops, no per-design Python); everything else splices its
+    retained segment back in.  A frontier packed with identical (chains,
+    workload, mix) is returned whole from the frontier cache — the
+    steady-state what-if-serving path.
+    """
+    mix = mix or {"get": float(workload.n_queries)}
+    mix_items = tuple(mix.items())
+    if not specs:
+        return _assemble_frontier([])
+    chains = tuple(spec.chain for spec in specs)
+    frontier_key = (chains, workload, mix_items)
+    packed = _frontier_cache.get(frontier_key)
+    if packed is not None:
+        return packed
+    per_spec: List[Optional[Tuple[np.ndarray, ...]]] = []
+    missing: Dict[Tuple[Element, ...], List[int]] = {}
+    for i, chain in enumerate(chains):
+        seg = _segment_cache.get((chain, workload, mix_items))
+        per_spec.append(seg)
+        if seg is None:
+            missing.setdefault(chain, []).append(i)
+    if missing:
+        new_chains = list(missing)
+        for chain, seg in zip(new_chains, templatecost.pack_specs(
+                new_chains, workload, mix_items)):
+            _segment_cache.put((chain, workload, mix_items), seg)
+            for i in missing[chain]:
+                per_spec[i] = seg
+    packed = _assemble_frontier(per_spec)
+    _frontier_cache.put(frontier_key, packed)
+    return packed
+
+
+def concat_frontiers(parts: Sequence[PackedFrontier]) -> PackedFrontier:
+    """Splice packed frontiers into one (designs keep their order).
+
+    The composition primitive behind incremental search: hill-climb/beam
+    rounds pack only newly-mutated designs and splice them onto retained
+    frontiers, and ``whatif.what_if_design`` scores baseline+variant as
+    one spliced two-design frontier.  Scoring the result is identical to
+    packing the concatenated spec list from scratch — segments are
+    reused byte-for-byte, only the design numbering shifts.
+    """
+    parts = [p for p in parts if p.n_segments]
+    if not parts:
+        return _assemble_frontier([])
+    if len(parts) == 1:
+        return parts[0]
+    offsets = np.cumsum([0] + [p.n_segments for p in parts[:-1]])
+    return PackedFrontier(
+        np.concatenate([p.ids for p in parts]),
+        np.concatenate([p.sizes for p in parts]),
+        np.concatenate([p.weights for p in parts]),
+        np.concatenate([p.tile_segments + off
+                        for p, off in zip(parts, offsets)]),
+        sum(p.n_segments for p in parts))
 
 
 # ---------------------------------------------------------------------------

@@ -274,11 +274,17 @@ def _pad_records(ids: np.ndarray, sizes: np.ndarray, weights: np.ndarray,
     segments to ``bucket // TILE``); pad rows carry weight 0 so they
     contribute exactly nothing.  Pad segments repeat the *last* real
     segment id — appending 0 would break the sorted order that the
-    kernel's ``indices_are_sorted`` scatter hint promises."""
+    kernel's ``indices_are_sorted`` scatter hint promises.
+
+    Dtype conversions are copy-free when the input already matches —
+    ``PackedFrontier`` hands the steady-state scoring path cached
+    device-dtype views, so a retained frontier that lands exactly on its
+    bucket reaches the jit call with zero host-side array copies."""
     n = len(ids)
     if n == bucket:
-        return (ids.astype(np.int32), sizes.astype(np.float32),
-                weights.astype(np.float32), tile_segments.astype(np.int32))
+        return (np.asarray(ids, np.int32), np.asarray(sizes, np.float32),
+                np.asarray(weights, np.float32),
+                np.asarray(tile_segments, np.int32))
     pad = bucket - n
     seg_pad = bucket // TILE - len(tile_segments)
     seg_fill = tile_segments[-1] if len(tile_segments) else 0

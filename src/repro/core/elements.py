@@ -33,6 +33,12 @@ class Element:
         # (thousands of designs per batched call) — hash the nested value
         # tuples once, not per lookup
         object.__setattr__(self, "_hash", hash((self.name, self.values)))
+        # synthesis statics slot: repro.core.templatecost resolves every
+        # tag/model the synthesizer reads into one record, lazily, and pins
+        # it here so the vectorized geometry pass pays a single attribute
+        # read per level instead of dozens of tag() dict lookups (equal
+        # elements share one record via templatecost's by-value registry)
+        object.__setattr__(self, "_tc_statics", None)
 
     @staticmethod
     def make(name: str, **values: Value) -> "Element":

@@ -14,6 +14,17 @@ the synthesizer:
 
 Workload skew follows §3: node popularity p = count/total reweights the
 region size of repeated accesses with w = 1/(p * sid).
+
+This scalar expert system is the repo's **1e-9 oracle**.  The hot path —
+packing whole search frontiers — runs through the template-vectorized
+twin in :mod:`repro.core.templatecost`: chains are grouped by *structural
+template* (the per-level :func:`element_class` sequence plus the
+terminal's emission flags) and this module emits each template's record
+schema **once** (:func:`symbolic_breakdown`); templatecost then evaluates
+all per-chain numeric sizes/counts as batched numpy column ops.  The
+vectorized skew weights (:func:`skew_multipliers`) live here so the skew
+model has a single home.  Record-level parity between the two paths is
+asserted in ``tests/test_templatecost.py``.
 """
 from __future__ import annotations
 
@@ -176,9 +187,11 @@ def instantiate(spec: DataStructureSpec, workload: Workload
 
 
 def clear_synthesis_caches() -> None:
-    """Drop the instantiate / skew-weight memos (tests, profile reloads)."""
+    """Drop the instantiate / skew-weight / schema memos (tests, profile
+    reloads)."""
     _instantiate_levels.cache_clear()
     _zipf_collision_mass.cache_clear()
+    symbolic_breakdown.cache_clear()
 
 
 @functools.lru_cache(maxsize=8192)
@@ -292,6 +305,31 @@ def _level_popularity(level: LevelInfo, workload: Workload) -> float:
     # under skew a query visits the popular node with its zipf mass; use the
     # mean mass of the visited node = sum_r mass_r^2 (collision probability)
     return _zipf_collision_mass(min(n, 4096), workload.zipf_alpha)
+
+
+def skew_multipliers(n_nodes: np.ndarray, workload: Workload) -> np.ndarray:
+    """Vectorized twin of ``_skew_region_multiplier(_level_popularity(..))``.
+
+    Takes the per-record node counts of the levels being accessed and
+    returns the §3 skew region multipliers as one array — the zipf
+    collision masses are served from the same ``_zipf_collision_mass``
+    memo the scalar path uses, so the two paths share one weight table.
+    Matches the scalar composition to float tolerance (same op sequence;
+    ``np.log`` vs ``math.log`` differ by at most ~1 ulp).
+    """
+    n_nodes = np.asarray(n_nodes, dtype=np.float64)
+    if workload.zipf_alpha <= 0.0 or workload.n_queries <= 1 or \
+            len(n_nodes) == 0:
+        return np.ones(len(n_nodes))
+    n = np.minimum(np.maximum(n_nodes, 1.0), 4096.0).astype(np.int64)
+    uniq, inv = np.unique(n, return_inverse=True)
+    masses = np.asarray([_zipf_collision_mass(int(u), workload.zipf_alpha)
+                         for u in uniq])
+    p = masses[inv]
+    s = workload.n_queries
+    s0 = np.minimum(np.maximum(1.0 / p, 1.0), float(s))
+    total = s0 + (math.log(s) - np.log(s0)) / p
+    return np.minimum(total / s, 1.0)
 
 
 def _random_access(cb: CostBreakdown, level: LevelInfo, workload: Workload,
@@ -455,6 +493,111 @@ OPERATIONS = {
     "bulk_load": synthesize_bulk_load,
     "update": synthesize_update,
 }
+
+
+# ---------------------------------------------------------------------------
+# Structural templates: the symbolic form of the expert system above.
+# ---------------------------------------------------------------------------
+#: emission classes — which record sequence an internal level contributes
+#: to a synthesized operation (the per-level coordinate of a chain's
+#: structural template; see repro.core.templatecost)
+(CLS_SKIP, CLS_LL, CLS_IND_FUNC, CLS_IND, CLS_DEP, CLS_APPEND,
+ CLS_DEP_BLOOM) = range(7)
+
+
+def element_class(element: Element) -> int:
+    """The emission class of one element — the branch the ``synthesize_*``
+    walkers take for its levels, as data."""
+    if element.tag("fanout") == "unlimited":
+        return CLS_SKIP if element.tag("skip_node_links") == "perfect" \
+            else CLS_LL
+    part = element.tag("key_partitioning")
+    if part == "data-ind":
+        return CLS_IND_FUNC if element.get("key_partitioning")[1] == "func" \
+            else CLS_IND
+    if part == "data-dep":
+        return CLS_DEP_BLOOM if element.tag("bloom_filters") == "on" \
+            else CLS_DEP
+    return CLS_APPEND
+
+
+@functools.lru_cache(maxsize=4096)
+def symbolic_breakdown(op: str, template: Tuple
+                       ) -> Tuple[Tuple[str, str], ...]:
+    """One operation's record schema for a structural template.
+
+    ``template`` is ``(per-level class tuple, (sorted, bloom, layout,
+    value_fetch, area_links))`` as produced by
+    :func:`repro.core.templatecost.chain_geometry`.  The schema — the
+    ordered (Level-1, Level-2) pairs the expert system emits — is
+    synthesized **once per template**; every chain sharing the template
+    shares this layout, and :mod:`repro.core.templatecost` evaluates the
+    per-chain numeric sizes/counts as batched array ops (slots the scalar
+    walker would skip, e.g. linked-list page hops when a single page is
+    visited, carry count 0).
+    """
+    classes, (sorted_, bloom, layout, value_fetch, _area) = template
+    p_rec = (access.RANDOM_ACCESS, access.resolve(access.RANDOM_ACCESS))
+    recs: List[Tuple[str, str]] = []
+    if op in ("get", "range_get", "update"):
+        for cls in classes:
+            if cls == CLS_SKIP:
+                recs.append((access.SORTED_SEARCH,
+                             access.resolve(access.SORTED_SEARCH)))
+            elif cls == CLS_LL:
+                recs += [p_rec, p_rec,
+                         (access.SCAN, access.resolve(access.SCAN))]
+            elif cls == CLS_IND_FUNC:
+                recs += [p_rec, (access.HASH_PROBE,
+                                 access.resolve(access.HASH_PROBE))]
+            elif cls == CLS_IND:
+                recs.append(p_rec)
+            elif cls in (CLS_DEP, CLS_DEP_BLOOM):
+                recs += [p_rec, (access.SORTED_SEARCH, access.resolve(
+                    access.SORTED_SEARCH, layout="row-wise"))]
+                if cls == CLS_DEP_BLOOM:
+                    recs.append((access.BLOOM_PROBE,
+                                 access.resolve(access.BLOOM_PROBE)))
+            else:
+                recs += [p_rec, (access.SCAN, access.resolve(access.SCAN))]
+        recs.append(p_rec)                       # leaf descent
+        if bloom:
+            recs.append((access.BLOOM_PROBE,
+                         access.resolve(access.BLOOM_PROBE)))
+        if sorted_:
+            recs.append((access.SORTED_SEARCH,
+                         access.resolve(access.SORTED_SEARCH,
+                                        layout=layout)))
+        else:
+            recs.append((access.SCAN, access.resolve(access.SCAN,
+                                                     layout=layout)))
+        if value_fetch:
+            recs.append(p_rec)
+        if op == "range_get":
+            recs += [p_rec, (access.SCAN, access.resolve(
+                access.SCAN, layout=layout, op="range"))]
+        elif op == "update":
+            recs.append((access.SERIAL_WRITE,
+                         access.resolve(access.SERIAL_WRITE)))
+    elif op == "bulk_load":
+        if sorted_:
+            recs += [(access.SORT, access.resolve(access.SORT)),
+                     (access.ORDERED_BATCH_WRITE,
+                      access.resolve(access.ORDERED_BATCH_WRITE))]
+        else:
+            recs.append((access.SERIAL_WRITE,
+                         access.resolve(access.SERIAL_WRITE)))
+        for cls in classes:
+            if cls in (CLS_IND, CLS_IND_FUNC):
+                recs += [(access.SCAN, access.resolve(access.SCAN)),
+                         (access.SCATTERED_BATCH_WRITE,
+                          access.resolve(access.SCATTERED_BATCH_WRITE))]
+            else:
+                recs.append((access.ORDERED_BATCH_WRITE,
+                             access.resolve(access.ORDERED_BATCH_WRITE)))
+    else:
+        raise KeyError(op)
+    return tuple(recs)
 
 
 def synthesize_operation(op: str, spec: DataStructureSpec,

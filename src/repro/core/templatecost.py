@@ -1,0 +1,566 @@
+"""Template-vectorized cost synthesis: pack whole frontiers without
+per-design Python.
+
+PR 1/2 vectorized frontier *scoring* (one grouped predict per model, then
+one fused jitted call) but frontier *construction* still walked the scalar
+expert system once per design: ``instantiate`` -> ``synthesize_*`` ->
+``compile_breakdown`` -> pad, thousands of Python-level ``Element.tag``
+lookups and dataclass allocations per candidate.  After PR 2 that pipeline
+is the end-to-end search bottleneck (the Amdahl gap recorded in
+``experiments/bench/BENCH_search.json``).
+
+This module replaces the loop with a three-stage vectorized pipeline:
+
+1. **Geometry pass** (:func:`chain_geometry`, memoized on
+   (chain, workload)): a lean re-statement of
+   ``synthesis._instantiate_levels`` — per-element statics (branch class,
+   node bytes, emission flags) are resolved once per distinct
+   :class:`~repro.core.elements.Element` and the block-division loop runs
+   on plain ints/floats, no dataclass allocation.  The tuple of per-level
+   :func:`~repro.core.synthesis.element_class` values plus the terminal's
+   emission flags is the chain's **structural template**;
+   :func:`repro.core.synthesis.symbolic_breakdown` emits each template's
+   record schema once.
+2. **Flat emission** (:func:`emit_operation`): all chains' levels
+   concatenate into one SoA level table; every operation's records are
+   emitted as batched numpy column ops over *emission-class masks* — one
+   numpy expression covers every level of every chain sharing a class, so
+   the per-record Python of the scalar path disappears entirely.  Records
+   a chain's scalar synthesis would *not* emit (e.g. linked-list page hops
+   when one page is visited) carry count 0 — they weigh nothing and keep
+   the emission branch-free.
+3. **Assembly** (:func:`pack_specs`): one argsort orders records by
+   (chain, op, level, slot) — the exact scalar emission order — and a
+   vectorized scatter pads each design's block to a ``devicecost.TILE``
+   multiple, yielding the same per-spec (ids, sizes, weights) segments
+   ``batchcost.pack_frontier`` used to build one design at a time.
+
+The scalar path in :mod:`repro.core.synthesis` stays the 1e-9 oracle:
+``tests/test_templatecost.py`` asserts record-level parity (identical
+model-id sequences, sizes/counts to float tolerance) for every paper
+spec, workload and operation, and checks the emitted layout against the
+per-template symbolic breakdown.
+
+Hardware never enters any key or value here — packing a frontier once
+serves every what-if-hardware question unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import access
+from repro.core.devicecost import TILE, model_id
+from repro.core.elements import Element
+from repro.core.synthesis import (CLS_APPEND, CLS_DEP, CLS_DEP_BLOOM,
+                                  CLS_IND, CLS_IND_FUNC, CLS_LL, CLS_SKIP,
+                                  FENCE_BYTES, PTR_BYTES, Workload,
+                                  _node_bytes, element_class,
+                                  skew_multipliers, symbolic_breakdown)
+
+#: slots reserved per level in the intra-chain record order key
+_SLOTS = 16
+#: order-key stride per operation of the mix
+_OP_STRIDE = 1 << 12
+
+
+@functools.lru_cache(maxsize=64)
+def _mid(level1: str, layout: str = "columnar", op: str = "equal") -> int:
+    """Interned Level-2 model id of a resolved Level-1 call (lazy, so the
+    global interning order stays exactly what the scalar path produces)."""
+    return model_id(access.resolve(level1, layout=layout, op=op))
+
+
+@dataclasses.dataclass(frozen=True)
+class ElementStatics:
+    """Everything synthesis ever reads from one element, resolved once.
+
+    Purely structural — no workload, no hardware.  ``node_bytes`` is
+    workload-independent (``synthesis._node_bytes`` never reads its
+    workload argument; the record-parity tests run the same statics
+    against several workloads and would catch a drift).
+    """
+
+    terminal: bool
+    unlimited: bool
+    fanout: Optional[int]          # fixed fanout value (None otherwise)
+    capacity: Optional[int]        # terminal capacity (None otherwise)
+    recursive: bool
+    max_depth: int
+    node_bytes: float              # internal node bytes (unlimited: header)
+    bfs: bool                      # BFS / BFS-layer cache-region adjustment
+    cls: int                       # emission class (see synthesis.CLS_*)
+    fences: float                  # max(fanout - 1, 1) for data-dep search
+    bloom_bits: float              # 0.0 when bloom_filters is off
+    sorted_keys: bool
+    layout: str                    # key_value_layout tag
+    value_fetch: bool              # non-row-wise leaf refetches values
+    area_links: bool               # leaf-to-leaf links (range sweeps)
+
+
+def _compute_statics(e: Element) -> ElementStatics:
+    unlimited = e.tag("fanout") == "unlimited"
+    fanout = e.fanout
+    rec_arg = e.get("recursion")
+    max_depth = rec_arg[1] if isinstance(rec_arg, tuple) and \
+        isinstance(rec_arg[1], int) else 64
+    bf = e.get("bloom_filters")
+    bloom_bits = float(bf[2]) if isinstance(bf, tuple) and bf[0] == "on" \
+        else 0.0
+    layout = e.tag("key_value_layout")
+    if e.terminal or unlimited:
+        node_bytes = 2.0 * PTR_BYTES   # terminal unused; LL page header
+    else:
+        # _node_bytes is workload-independent (asserted by parity tests)
+        node_bytes = _node_bytes(e, fanout or 2, None)
+    return ElementStatics(
+        terminal=e.terminal, unlimited=unlimited, fanout=fanout,
+        capacity=e.capacity, recursive=e.tag("recursion") == "yes",
+        max_depth=max_depth, node_bytes=node_bytes,
+        bfs=e.tag("sub_block_physical_layout") in ("BFS", "BFS-layer"),
+        cls=element_class(e), fences=float(max((fanout or 2) - 1, 1)),
+        bloom_bits=bloom_bits, sorted_keys=e.sorted_keys, layout=layout,
+        value_fetch=layout != "row-wise" and e.retains_values,
+        area_links=e.tag("area_links") != "none")
+
+
+#: equal elements share one statics record; instances additionally pin it
+#: on ``Element._tc_statics`` so the geometry pass pays one attribute read
+_STATICS_BY_VALUE: Dict[Tuple, ElementStatics] = {}
+
+
+def statics_of(e: Element) -> ElementStatics:
+    st = e._tc_statics
+    if st is None:
+        st = _STATICS_BY_VALUE.get(e.values)
+        if st is None:
+            st = _compute_statics(e)
+            _STATICS_BY_VALUE[e.values] = st
+        object.__setattr__(e, "_tc_statics", st)
+    return st
+
+
+# ---------------------------------------------------------------------------
+# Geometry pass — lean _instantiate_levels (the per-chain structure memo)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class ChainGeometry:
+    """One chain's instantiated level structure, flattened to tuples.
+
+    ``template`` is the structural fingerprint grouping chains whose
+    record layout is identical up to numeric values — the argument
+    :func:`repro.core.synthesis.symbolic_breakdown` takes.
+
+    Not ``frozen=True`` — instances are shared via the ``chain_geometry``
+    memo and must be treated as immutable, but the frozen dataclass
+    ``__setattr__`` init path costs more than the whole geometry
+    simulation at search-frontier scale (thousands of chains per call).
+    """
+
+    stats: Tuple[ElementStatics, ...]   # per expanded internal level
+    n_nodes: Tuple[float, ...]
+    node_bytes: Tuple[float, ...]
+    epn: Tuple[float, ...]              # entries routed per node
+    region: Tuple[float, ...]           # path-so-far cache region
+    term: ElementStatics
+    t_n_nodes: float
+    t_epn: float
+    t_region: float
+    total_bytes: float
+    n: float                            # max(n_entries, 1)
+    n_raw: float                        # workload.n_entries as-is
+    termcap: int                        # terminal capacity or 256
+    template: Tuple
+
+    @property
+    def n_internal(self) -> int:
+        return len(self.stats)
+
+
+@functools.lru_cache(maxsize=65536)
+def chain_geometry(chain: Tuple[Element, ...], workload: Workload
+                   ) -> ChainGeometry:
+    """Block-division simulation of one chain — mirrors
+    ``synthesis._instantiate_levels`` value for value (same int/float op
+    sequence, asserted by the record-parity tests), memoized on
+    (chain, workload) with hardware nowhere in the key."""
+    term_st = statics_of(chain[-1])
+    n = max(workload.n_entries, 1)
+    capacity = term_st.capacity or 256
+    n_leaves = max(math.ceil(n / capacity), 1)
+
+    stats: List[ElementStatics] = []
+    nodes: List[float] = []
+    nbytes: List[float] = []
+    epn: List[float] = []
+    blocks = 1
+    entries = float(n)
+    for element in chain[:-1]:
+        st = statics_of(element)
+        if st.fanout is None and st.unlimited:
+            stats.append(st)
+            nodes.append(float(blocks))
+            nbytes.append(PTR_BYTES * 2.0)
+            epn.append(entries / max(blocks, 1))
+            continue
+        fanout = st.fanout or 2
+        if st.recursive:
+            depth = 0
+            while blocks * fanout < n_leaves and depth < st.max_depth - 1:
+                stats.append(st)
+                nodes.append(float(blocks))
+                nbytes.append(st.node_bytes)
+                epn.append(entries / blocks if blocks else entries)
+                blocks *= fanout
+                depth += 1
+        stats.append(st)
+        nodes.append(float(blocks))
+        nbytes.append(st.node_bytes)
+        epn.append(entries / blocks)
+        blocks *= fanout
+
+    if len(chain) > 1 and not statics_of(chain[-2]).unlimited:
+        n_term = max(n_leaves, blocks)
+    else:
+        n_term = n_leaves
+    term_bytes = min(capacity, n / max(n_term, 1)) * workload.pair_bytes
+    term_bytes = max(term_bytes, float(workload.pair_bytes))
+
+    region: List[float] = []
+    cumulative = 0.0
+    for st, nn, nb in zip(stats, nodes, nbytes):
+        cumulative += nn * nb
+        r = cumulative
+        if st.bfs:
+            group = (st.fanout or 2) * nb
+            r = min(cumulative, max(group, nb))
+        region.append(r)
+    cumulative += n_term * term_bytes
+    t_region = cumulative
+    if term_st.bfs:
+        group = (term_st.fanout or 2) * term_bytes
+        t_region = min(cumulative, max(group, term_bytes))
+
+    template = (tuple(st.cls for st in stats),
+                (term_st.sorted_keys, term_st.bloom_bits > 0.0,
+                 term_st.layout, term_st.value_fetch, term_st.area_links))
+    return ChainGeometry(
+        stats=tuple(stats), n_nodes=tuple(nodes), node_bytes=tuple(nbytes),
+        epn=tuple(epn), region=tuple(region), term=term_st,
+        t_n_nodes=float(int(n_term)), t_epn=entries / max(n_term, 1),
+        t_region=t_region, total_bytes=cumulative, n=float(n),
+        n_raw=float(workload.n_entries), termcap=capacity,
+        template=template)
+
+
+def clear_template_caches() -> None:
+    chain_geometry.cache_clear()
+    _STATICS_BY_VALUE.clear()
+
+
+def cache_info() -> Dict[str, Tuple]:
+    return {"chain_geometry": chain_geometry.cache_info()}
+
+
+# ---------------------------------------------------------------------------
+# Flat SoA tables over all chains being packed
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class _Tables:
+    # internal-level table, one row per expanded internal level
+    ch: np.ndarray          # owning chain index
+    lvl: np.ndarray         # level position within the chain
+    cls: np.ndarray
+    fanout: np.ndarray
+    n_nodes: np.ndarray
+    node_bytes: np.ndarray
+    epn: np.ndarray
+    region: np.ndarray
+    fences: np.ndarray
+    bloom_bits: np.ndarray
+    termcap: np.ndarray     # owning chain's terminal capacity
+    t_region: np.ndarray    # owning chain's terminal region
+    t_n_nodes: np.ndarray   # owning chain's terminal node count
+    # terminal table, one row per chain
+    c_n_int: np.ndarray     # internal level count (terminal order base)
+    c_t_n_nodes: np.ndarray
+    c_t_epn: np.ndarray
+    c_t_region: np.ndarray
+    c_t_bloom: np.ndarray
+    c_t_sorted: np.ndarray
+    c_t_value_fetch: np.ndarray
+    c_t_area: np.ndarray
+    c_mid_search: np.ndarray   # layout-resolved sorted-search model id
+    c_mid_scan: np.ndarray     # layout-resolved equal-scan model id
+    c_mid_rscan: np.ndarray    # layout-resolved range-scan model id
+    c_total_bytes: np.ndarray
+    c_n_raw: np.ndarray
+
+
+def _build_tables(geoms: Sequence[ChainGeometry]) -> _Tables:
+    i_rows: List[Tuple] = []
+    c_rows: List[Tuple] = []
+    for c, g in enumerate(geoms):
+        for j, st in enumerate(g.stats):
+            i_rows.append((c, j, st.cls, float(st.fanout or 0),
+                           g.n_nodes[j], g.node_bytes[j], g.epn[j],
+                           g.region[j], st.fences, st.bloom_bits,
+                           float(g.termcap), g.t_region, g.t_n_nodes))
+        t = g.term
+        c_rows.append((g.n_internal, g.t_n_nodes, g.t_epn, g.t_region,
+                       t.bloom_bits, t.sorted_keys, t.value_fetch,
+                       t.area_links,
+                       _mid(access.SORTED_SEARCH, t.layout),
+                       _mid(access.SCAN, t.layout),
+                       _mid(access.SCAN, t.layout, "range"),
+                       g.total_bytes, g.n_raw))
+    icols = list(zip(*i_rows)) if i_rows else [[] for _ in range(13)]
+    ccols = list(zip(*c_rows))
+    f8, i8 = np.float64, np.int64
+    return _Tables(
+        ch=np.asarray(icols[0], i8), lvl=np.asarray(icols[1], i8),
+        cls=np.asarray(icols[2], i8), fanout=np.asarray(icols[3], f8),
+        n_nodes=np.asarray(icols[4], f8),
+        node_bytes=np.asarray(icols[5], f8), epn=np.asarray(icols[6], f8),
+        region=np.asarray(icols[7], f8), fences=np.asarray(icols[8], f8),
+        bloom_bits=np.asarray(icols[9], f8),
+        termcap=np.asarray(icols[10], f8),
+        t_region=np.asarray(icols[11], f8),
+        t_n_nodes=np.asarray(icols[12], f8),
+        c_n_int=np.asarray(ccols[0], i8),
+        c_t_n_nodes=np.asarray(ccols[1], f8),
+        c_t_epn=np.asarray(ccols[2], f8),
+        c_t_region=np.asarray(ccols[3], f8),
+        c_t_bloom=np.asarray(ccols[4], f8),
+        c_t_sorted=np.asarray(ccols[5], bool),
+        c_t_value_fetch=np.asarray(ccols[6], bool),
+        c_t_area=np.asarray(ccols[7], bool),
+        c_mid_search=np.asarray(ccols[8], np.int32),
+        c_mid_scan=np.asarray(ccols[9], np.int32),
+        c_mid_rscan=np.asarray(ccols[10], np.int32),
+        c_total_bytes=np.asarray(ccols[11], f8),
+        c_n_raw=np.asarray(ccols[12], f8))
+
+
+# ---------------------------------------------------------------------------
+# Vectorized record emission (one numpy expression per class x slot)
+# ---------------------------------------------------------------------------
+class _Rows:
+    """Accumulates record columns: (chain, order, model id, size, count)."""
+
+    def __init__(self) -> None:
+        self.parts: List[Tuple[np.ndarray, ...]] = []
+
+    def emit(self, ch, order, mid, size, count=None) -> None:
+        n = len(ch)
+        if n == 0:
+            return
+        if np.isscalar(mid):
+            mid = np.full(n, mid, np.int32)
+        if count is None:
+            count = np.ones(n)
+        self.parts.append((np.asarray(ch, np.int64),
+                           np.asarray(order, np.int64),
+                           np.asarray(mid, np.int32),
+                           np.asarray(size, np.float64),
+                           np.asarray(count, np.float64)))
+
+    def collect(self) -> Tuple[np.ndarray, ...]:
+        if not self.parts:
+            z = np.zeros(0)
+            return (z.astype(np.int64), z.astype(np.int64),
+                    z.astype(np.int32), z, z)
+        return tuple(np.concatenate([p[i] for p in self.parts])
+                     for i in range(5))
+
+
+def _emit_get(t: _Tables, workload: Workload, rows: _Rows) -> None:
+    key_bytes = float(workload.key_bytes)
+    # -- internal levels ----------------------------------------------------
+    m = t.cls >= CLS_IND_FUNC                 # every class with its own P
+    mult = skew_multipliers(t.n_nodes[m], workload)
+    rows.emit(t.ch[m], t.lvl[m] * _SLOTS,
+              _mid(access.RANDOM_ACCESS),
+              np.maximum(t.region[m] * mult, 1.0))
+    m = t.cls == CLS_SKIP                     # skip list: fence search
+    rows.emit(t.ch[m], t.lvl[m] * _SLOTS, _mid(access.SORTED_SEARCH),
+              np.maximum(np.maximum(t.epn[m] / t.termcap[m], 1.0) *
+                         FENCE_BYTES, 1.0))
+    m = t.cls == CLS_LL                       # linked list: head + hops
+    pages = np.maximum(t.epn[m] / t.termcap[m], 1.0)
+    visited = (pages + 1.0) / 2.0
+    mult = skew_multipliers(t.t_n_nodes[m], workload)
+    rows.emit(t.ch[m], t.lvl[m] * _SLOTS, _mid(access.RANDOM_ACCESS),
+              np.maximum(t.t_region[m] * mult, 1.0))
+    rows.emit(t.ch[m], t.lvl[m] * _SLOTS + 1, _mid(access.RANDOM_ACCESS),
+              t.t_region[m], np.maximum(visited - 1.0, 0.0))
+    rows.emit(t.ch[m], t.lvl[m] * _SLOTS + 2, _mid(access.SCAN),
+              t.termcap[m] * key_bytes, np.maximum(visited - 1.0, 0.0))
+    m = t.cls == CLS_IND_FUNC                 # hash partitioning probe
+    rows.emit(t.ch[m], t.lvl[m] * _SLOTS + 1, _mid(access.HASH_PROBE),
+              np.maximum(t.n_nodes[m] * np.maximum(t.fanout[m], 1.0) *
+                         PTR_BYTES, 1.0))
+    m = (t.cls == CLS_DEP) | (t.cls == CLS_DEP_BLOOM)   # sorted fences
+    rows.emit(t.ch[m], t.lvl[m] * _SLOTS + 1,
+              _mid(access.SORTED_SEARCH, "row-wise"),
+              np.maximum(t.fences[m] * FENCE_BYTES, 1.0))
+    m = t.cls == CLS_DEP_BLOOM
+    rows.emit(t.ch[m], t.lvl[m] * _SLOTS + 2, _mid(access.BLOOM_PROBE),
+              np.maximum(t.bloom_bits[m] / 8.0, 1.0))
+    m = t.cls == CLS_APPEND                   # append partitioning scan
+    rows.emit(t.ch[m], t.lvl[m] * _SLOTS + 1, _mid(access.SCAN),
+              np.maximum(np.where(t.fanout[m] > 0, t.fanout[m], 2.0) *
+                         FENCE_BYTES, 1.0))
+    # -- terminal node ------------------------------------------------------
+    ch = np.arange(len(t.c_n_int))
+    base = t.c_n_int * _SLOTS
+    entries = np.maximum(t.c_t_epn, 1.0)
+    mult = skew_multipliers(t.c_t_n_nodes, workload)
+    rows.emit(ch, base, _mid(access.RANDOM_ACCESS),
+              np.maximum(t.c_t_region * mult, 1.0))
+    m = t.c_t_bloom > 0.0
+    rows.emit(ch[m], base[m] + 1, _mid(access.BLOOM_PROBE),
+              np.maximum(t.c_t_bloom[m] / 8.0, 1.0))
+    m = t.c_t_sorted
+    rows.emit(ch[m], base[m] + 2, t.c_mid_search[m],
+              np.maximum(entries[m] * key_bytes, 1.0))
+    m = ~t.c_t_sorted
+    rows.emit(ch[m], base[m] + 2, t.c_mid_scan[m],
+              entries[m] * key_bytes / 2.0)
+    m = t.c_t_value_fetch
+    rows.emit(ch[m], base[m] + 3, _mid(access.RANDOM_ACCESS),
+              np.maximum(entries[m] * float(workload.value_bytes), 1.0))
+
+
+def _emit_tail_range(t: _Tables, workload: Workload, rows: _Rows) -> None:
+    """Fig. 10 range sweep appended after the get descent."""
+    ch = np.arange(len(t.c_n_int))
+    base = (t.c_n_int + 1) * _SLOTS
+    frac = max(workload.selectivity, 0.0)
+    n_pages = np.maximum(np.ceil(frac * t.c_t_n_nodes), 1.0)
+    hop = np.where(t.c_t_area | (t.c_t_n_nodes == 1.0),
+                   t.c_t_region, t.c_total_bytes)
+    rows.emit(ch, base, _mid(access.RANDOM_ACCESS), hop,
+              np.maximum(n_pages - 1.0, 0.0))
+    rows.emit(ch, base + 1, t.c_mid_rscan,
+              np.maximum(t.c_t_epn, 1.0) * float(workload.key_bytes),
+              n_pages)
+
+
+def _emit_bulk_load(t: _Tables, workload: Workload, rows: _Rows) -> None:
+    ch = np.arange(len(t.c_n_int))
+    data_bytes = t.c_n_raw * float(workload.pair_bytes)
+    m = t.c_t_sorted
+    rows.emit(ch[m], np.zeros(int(m.sum()), np.int64), _mid(access.SORT),
+              np.maximum(t.c_n_raw[m], 1.0))
+    rows.emit(ch[m], np.ones(int(m.sum()), np.int64),
+              _mid(access.ORDERED_BATCH_WRITE),
+              np.maximum(data_bytes[m], 1.0))
+    m = ~t.c_t_sorted
+    rows.emit(ch[m], np.zeros(int(m.sum()), np.int64),
+              _mid(access.SERIAL_WRITE), np.maximum(data_bytes[m], 1.0))
+    level_bytes = np.maximum(t.n_nodes * t.node_bytes, 1.0)
+    base = (t.lvl + 1) * _SLOTS
+    m = (t.cls == CLS_IND) | (t.cls == CLS_IND_FUNC)
+    rows.emit(t.ch[m], base[m], _mid(access.SCAN),
+              np.maximum(data_bytes[t.ch[m]], 1.0))
+    rows.emit(t.ch[m], base[m] + 1, _mid(access.SCATTERED_BATCH_WRITE),
+              np.maximum(level_bytes[m], 1.0))
+    m = ~m
+    rows.emit(t.ch[m], base[m], _mid(access.ORDERED_BATCH_WRITE),
+              np.maximum(level_bytes[m], 1.0))
+
+
+def emit_operation(op: str, t: _Tables, workload: Workload
+                   ) -> Tuple[np.ndarray, ...]:
+    """Record columns (chain, order, model id, size, count) of one
+    operation over every chain in the tables — the vectorized twin of
+    ``synthesis.synthesize_operation`` + ``batchcost.compile_breakdown``."""
+    rows = _Rows()
+    if op == "get":
+        _emit_get(t, workload, rows)
+    elif op == "range_get":
+        _emit_get(t, workload, rows)
+        _emit_tail_range(t, workload, rows)
+    elif op == "update":
+        _emit_get(t, workload, rows)
+        ch = np.arange(len(t.c_n_int))
+        rows.emit(ch, (t.c_n_int + 1) * _SLOTS, _mid(access.SERIAL_WRITE),
+                  np.full(len(ch), max(float(workload.value_bytes), 1.0)))
+    elif op == "bulk_load":
+        _emit_bulk_load(t, workload, rows)
+    else:
+        raise KeyError(op)
+    return rows.collect()
+
+
+# ---------------------------------------------------------------------------
+# Assembly: per-spec tile-padded segments, ready for frontier concatenation
+# ---------------------------------------------------------------------------
+def pack_specs(chains: Sequence[Tuple[Element, ...]], workload: Workload,
+               mix_items: Tuple[Tuple[str, float], ...]
+               ) -> List[Tuple[np.ndarray, np.ndarray, np.ndarray]]:
+    """Mix-weighted (ids, sizes, weights) per chain, each padded to a TILE
+    multiple — the vectorized equivalent of packing every chain through
+    the scalar ``instantiate -> synthesize -> compile -> pad`` pipeline."""
+    n_chains = len(chains)
+    if n_chains == 0:
+        return []
+    geoms = [chain_geometry(c, workload) for c in chains]
+    t = _build_tables(geoms)
+    ch_parts, key_parts, mid_parts, size_parts, w_parts = [], [], [], [], []
+    for pos, (op, op_w) in enumerate(mix_items):
+        ch, order, mid, size, count = emit_operation(op, t, workload)
+        ch_parts.append(ch)
+        key_parts.append(order + pos * _OP_STRIDE)
+        mid_parts.append(mid)
+        size_parts.append(size)
+        w_parts.append(count * float(op_w))
+    ch = np.concatenate(ch_parts)
+    key = ch * (_OP_STRIDE * len(mix_items)) + np.concatenate(key_parts)
+    mids = np.concatenate(mid_parts)
+    sizes = np.concatenate(size_parts)
+    weights = np.concatenate(w_parts)
+
+    idx = np.argsort(key, kind="stable")
+    ch, mids, sizes, weights = ch[idx], mids[idx], sizes[idx], weights[idx]
+
+    counts = np.bincount(ch, minlength=n_chains)
+    # every chain must emit exactly its template's symbolic record schema
+    # (the once-per-template breakdown synthesis.py declares); a mismatch
+    # means the vectorized emission drifted from the expert system
+    expected_by_template: Dict[Tuple, int] = {}
+    for c, g in enumerate(geoms):
+        expected = expected_by_template.get(g.template)
+        if expected is None:
+            expected = sum(len(symbolic_breakdown(op, g.template))
+                           for op, _ in mix_items)
+            expected_by_template[g.template] = expected
+        if counts[c] != expected:
+            raise AssertionError(
+                f"template emission drift: chain {c} produced {counts[c]} "
+                f"records, schema says {expected} (template {g.template})")
+    padded = counts + (-counts % TILE)
+    pad_off = np.concatenate([[0], np.cumsum(padded)])
+    raw_off = np.concatenate([[0], np.cumsum(counts)])
+    total = int(pad_off[-1])
+    out_ids = np.empty(total, np.int32)
+    out_sizes = np.ones(total, np.float64)
+    out_weights = np.zeros(total, np.float64)
+    # pad rows repeat the block's first real model id (see the pad-id note
+    # in batchcost); fill per chain, then scatter the real rows over it
+    out_ids[:] = np.repeat(mids[raw_off[:-1]], padded)
+    pos = np.arange(len(ch)) + np.repeat(pad_off[:-1] - raw_off[:-1], counts)
+    out_ids[pos] = mids
+    out_sizes[pos] = sizes
+    out_weights[pos] = weights
+    for arr in (out_ids, out_sizes, out_weights):
+        arr.setflags(write=False)
+    return [(out_ids[pad_off[c]:pad_off[c + 1]],
+             out_sizes[pad_off[c]:pad_off[c + 1]],
+             out_weights[pad_off[c]:pad_off[c + 1]])
+            for c in range(n_chains)]

@@ -10,12 +10,14 @@ design / hardware / workload, e.g.:
 Every question is two cost-synthesis invocations (baseline + variation)
 over the same inputs, so answers arrive in milliseconds–seconds.  All
 three run on the batched/fused engine (:mod:`repro.core.batchcost` /
-:mod:`repro.core.devicecost`): a design question costs baseline and
-variant as one two-design frontier, and a hardware question scores the
-*same* packed frontier against both profiles — a pure device
-parameter-table swap with zero re-synthesis and zero recompilation.
-Pass ``engine="scalar"`` to fall back to the per-record scalar path
-(``cost_workload``) — the parity oracle for tests.
+:mod:`repro.core.devicecost`): a design question packs baseline and
+variant independently and *splices* them into one two-design frontier
+(``concat_frontiers`` — repeat questions against the same baseline reuse
+its cached segment instead of re-synthesizing it), and a hardware
+question scores the *same* packed frontier against both profiles — a
+pure device parameter-table swap with zero re-synthesis and zero
+recompilation.  Pass ``engine="scalar"`` to fall back to the per-record
+scalar path (``cost_workload``) — the parity oracle for tests.
 """
 from __future__ import annotations
 
@@ -23,7 +25,8 @@ import dataclasses
 import time
 from typing import Dict, Optional
 
-from repro.core.batchcost import cost_many, pack_frontier
+from repro.core.batchcost import (concat_frontiers, cost_many,
+                                  pack_frontier)
 from repro.core.elements import DataStructureSpec
 from repro.core.hardware import HardwareProfile
 from repro.core.synthesis import Workload, cost_workload
@@ -57,16 +60,18 @@ def what_if_design(spec: DataStructureSpec, variant: DataStructureSpec,
                    engine: str = "fused") -> WhatIfAnswer:
     """Same workload + hardware, different design (Fig. 2 leftmost input).
 
-    Baseline and variant are one two-design frontier — a single fused
-    scoring call answers the question.
+    Baseline and variant pack independently (each a segment-cache hit
+    when asked about before) and splice into one two-design frontier — a
+    single fused scoring call answers the question.
     """
     t0 = time.perf_counter()
     if engine == "scalar":
         base = cost_workload(spec, workload, hw, mix)
         var = cost_workload(variant, workload, hw, mix)
     else:
-        base, var = cost_many([spec, variant], workload, hw, mix,
-                              engine=engine)
+        packed = concat_frontiers([pack_frontier([spec], workload, mix),
+                                   pack_frontier([variant], workload, mix)])
+        base, var = packed.score(hw, engine=engine)
     return WhatIfAnswer(
         f"design {spec.describe()} -> {variant.describe()}",
         float(base), float(var), time.perf_counter() - t0)

@@ -196,17 +196,65 @@ def test_cache_hits_grow_across_cost_many_calls(hw_analytical):
     specs = [el.spec_btree(), el.spec_hash_table(), el.spec_skip_list()]
     cost_many(specs, w, hw_analytical, mix)
     cold = batchcost.cache_info()
-    # the cold call exercised every layer beneath the packing memo
-    assert cold["compiled_operation"].hits + \
-        cold["compiled_operation"].misses > 0
-    assert cold["instantiate"].hits > 0
-    before_hits = cold["packed_spec"].hits
+    # the cold call exercised every layer of the vectorized packer: one
+    # geometry simulation and one packed segment per spec, one frontier
+    assert cold["chain_geometry"].misses == len(specs)
+    assert cold["packed_spec"].misses == len(specs)
+    assert cold["frontier"].misses == 1
+    before_hits = cold["frontier"].hits
     before_misses = {k: v.misses for k, v in cold.items()}
     for i in range(3):
         cost_many(specs, w, hw_analytical, mix)
         info = batchcost.cache_info()
-        # every repeat is served straight from the packing memo...
-        assert info["packed_spec"].hits == \
-            before_hits + (i + 1) * len(specs)
+        # every repeat is served whole from the frontier memo...
+        assert info["frontier"].hits == before_hits + (i + 1)
         # ... with zero new misses anywhere beneath it
         assert {k: v.misses for k, v in info.items()} == before_misses
+    # a changed frontier reuses the retained per-spec segments: only the
+    # new chain synthesizes (incremental packing)
+    cost_many(specs + [el.spec_trie()], w, hw_analytical, mix)
+    info = batchcost.cache_info()
+    assert info["packed_spec"].misses == before_misses["packed_spec"] + 1
+    assert info["packed_spec"].hits >= len(specs)
+    assert info["chain_geometry"].misses == \
+        before_misses["chain_geometry"] + 1
+
+
+def test_clear_caches_empties_every_memo(hw_analytical):
+    """clear_caches must drain every layer of the synthesis/packing cache
+    stack — template, segment, frontier, schema and enumeration memos
+    included (a stale layer would survive element-library edits)."""
+    from repro.core.autocomplete import complete_design
+    w = Workload(n_entries=33_000)
+    complete_design((), w, hw_analytical, mix={"get": 5.0}, max_depth=2)
+    cost_many([el.spec_btree()], w, hw_analytical,
+              {"get": 1.0, "bulk_load": 1.0}, engine="grouped")
+    batchcost.cost_one("get", el.spec_btree(), w, hw_analytical)
+    info = batchcost.cache_info()
+    for layer in ("chain_geometry", "packed_spec", "frontier",
+                  "symbolic_breakdown", "enumerate", "compiled_operation",
+                  "instantiate"):
+        assert info[layer].misses + info[layer].hits > 0, layer
+    batchcost.clear_caches()
+    for layer, stats in batchcost.cache_info().items():
+        assert stats.hits == 0 and stats.misses == 0, layer
+        assert stats.currsize == 0, layer
+
+
+def test_hardware_not_in_any_synthesis_key(hw_analytical, cpu_profile):
+    """The paper's what-if-hardware contract: scoring one packed frontier
+    on a second profile must touch no synthesis/packing code at all."""
+    from repro.core.batchcost import pack_frontier
+    batchcost.clear_caches()
+    w = Workload(n_entries=120_000)
+    mix = {"get": 8.0, "update": 2.0}
+    specs = [el.spec_btree(), el.spec_hash_table(), el.spec_trie()]
+    packed = pack_frontier(specs, w, mix)
+    before = {k: (v.hits, v.misses) for k, v in batchcost.cache_info().items()}
+    a = packed.score(hw_analytical)
+    b = packed.score(cpu_profile)
+    assert {k: (v.hits, v.misses) for k, v in
+            batchcost.cache_info().items()} == before
+    assert a.shape == b.shape == (len(specs),)
+    # and re-packing for the other profile is pure cache hits
+    assert pack_frontier(specs, w, mix) is packed
