@@ -28,12 +28,27 @@ def container_profile(refresh: bool = False):
     return profile
 
 
+def _atomic_dump(obj, path: str) -> None:
+    """Serialize to a sibling temp file, then ``os.replace`` over ``path``.
+
+    A crash mid-``json.dump`` must never truncate an existing artifact —
+    the trajectory files accumulate cross-PR history that a plain
+    ``open(path, "w")`` would destroy on the next interrupted run."""
+    tmp = f"{path}.tmp.{os.getpid()}"
+    try:
+        with open(tmp, "w") as fh:
+            json.dump(obj, fh, indent=1, default=str)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+
+
 def emit(name: str, rows: Sequence[Dict], keys: Optional[List[str]] = None
          ) -> None:
     """Print an aligned table and persist rows under experiments/bench/."""
     os.makedirs(BENCH_DIR, exist_ok=True)
-    with open(os.path.join(BENCH_DIR, f"{name}.json"), "w") as fh:
-        json.dump(list(rows), fh, indent=1, default=str)
+    _atomic_dump(list(rows), os.path.join(BENCH_DIR, f"{name}.json"))
     _print_table(name, rows, keys)
 
 
@@ -45,13 +60,28 @@ def emit_trajectory(name: str, label: str, rows: Sequence[Dict],
     of ``{"entry", "label", "date", "rows"}`` records that accumulates
     across PRs, so perf history survives re-runs.  A legacy bare-rows file
     (the pre-trajectory format) is migrated into entry 0.
+
+    The rewrite is atomic (temp file + ``os.replace``); a corrupted
+    history file — e.g. truncated by a crash on a pre-atomic version — is
+    backed up beside itself and a fresh history is started instead of
+    raising on every future append.
     """
     os.makedirs(BENCH_DIR, exist_ok=True)
     path = os.path.join(BENCH_DIR, f"{name}.json")
     history: List[Dict] = []
     if os.path.exists(path):
-        with open(path) as fh:
-            existing = json.load(fh)
+        try:
+            with open(path) as fh:
+                existing = json.load(fh)
+            if not isinstance(existing, list):
+                raise ValueError(f"expected a list, found "
+                                 f"{type(existing).__name__}")
+        except ValueError:          # json.JSONDecodeError subclasses this
+            backup = f"{path}.corrupt-{time.strftime('%Y%m%d-%H%M%S')}"
+            os.replace(path, backup)
+            print(f"warning: {path} was corrupted; backed it up to "
+                  f"{backup} and starting a fresh history")
+            existing = []
         if existing and isinstance(existing[0], dict) and \
                 "rows" not in existing[0]:
             history = [{"entry": 0, "label": "pre-trajectory",
@@ -61,8 +91,7 @@ def emit_trajectory(name: str, label: str, rows: Sequence[Dict],
     history.append({"entry": len(history), "label": label,
                     "date": time.strftime("%Y-%m-%d %H:%M:%S"),
                     "rows": list(rows)})
-    with open(path, "w") as fh:
-        json.dump(history, fh, indent=1, default=str)
+    _atomic_dump(history, path)
     _print_table(f"{name} [entry {len(history) - 1}: {label}]", rows, keys)
 
 

@@ -3,10 +3,11 @@
     PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
     PYTHONPATH=src python -m benchmarks.run --smoke
 
-``--smoke`` is the fast validation path: it runs the search-engine parity
-checks at tiny sizes, writes **no** artifacts and appends nothing to the
-BENCH_search trajectory — CI-friendly, seconds not minutes.  The full
-trajectory run stays one command (no flags).
+``--smoke`` is the fast validation path: it runs the search-engine and
+what-if-serving parity checks at tiny sizes, writes **no** artifacts and
+appends nothing to the BENCH_search / BENCH_serving trajectories —
+CI-friendly, seconds not minutes.  The full trajectory run stays one
+command (no flags).
 """
 from __future__ import annotations
 
@@ -17,7 +18,8 @@ import traceback
 
 from benchmarks import (design_space, fig6_accuracy, fig7_bulkload_training,
                         fig8_cache_skew, fig9_design_search, hillclimb,
-                        kernels_bench, roofline, search_bench)
+                        kernels_bench, roofline, search_bench,
+                        serving_bench)
 
 BENCHES = [
     ("design_space", design_space.run),
@@ -28,6 +30,9 @@ BENCHES = [
     # perf trajectory: designs-costed-per-second, scalar vs grouped vs
     # fused (appends an entry to experiments/bench/BENCH_search.json)
     ("BENCH_search", search_bench.run),
+    # perf trajectory: questions/sec through the concurrent what-if
+    # server, serial loop vs coalesced (BENCH_serving.json)
+    ("BENCH_serving", serving_bench.run),
     ("hillclimb_design", hillclimb.run),
     ("kernels", kernels_bench.run),
     ("roofline", roofline.run),
@@ -44,9 +49,11 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
     if args.smoke:
-        print("### benchmark: BENCH_search (smoke)", flush=True)
         t0 = time.perf_counter()
+        print("### benchmark: BENCH_search (smoke)", flush=True)
         search_bench.run(smoke=True)
+        print("### benchmark: BENCH_serving (smoke)", flush=True)
+        serving_bench.run(smoke=True)
         print(f"### smoke done in {time.perf_counter() - t0:.1f}s")
         return
     if args.only and args.only not in {name for name, _ in BENCHES}:

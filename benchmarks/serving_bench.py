@@ -1,0 +1,243 @@
+"""BENCH_serving: questions/sec through the concurrent what-if server.
+
+Measures a >=64-question *mixed* batch (design / hardware / workload
+what-ifs plus a few auto-completions) through two serving regimes:
+
+1. **serial** — the PR-3 interactive baseline: a one-call-per-question
+   loop over the :mod:`repro.core.whatif` functions (each question is its
+   own fused scoring dispatch, 1-2 per question);
+2. **coalesced** — the same questions submitted concurrently to a
+   :class:`repro.serving.DesignCalculatorService`, whose micro-batching
+   loop splices the whole window into ONE fused scoring call per distinct
+   hardware profile.
+
+Both regimes answer from warm packing caches (the steady-state design-
+session regime), so the measured gap is pure dispatch amortization — the
+thing the serving engine exists to remove.  Three invariants are asserted
+before any number is persisted:
+
+* every coalesced answer matches the serial answer AND the scalar
+  ``cost_workload`` oracle to the fused engine's documented 1e-6;
+* a hardware-swap burst against a freshly built profile triggers **zero**
+  recompilations of the fused scorer (``devicecost.trace_count``);
+* coalesced serving clears ``TARGET_SPEEDUP`` x the serial loop.
+
+Each run appends one labelled entry to
+experiments/bench/BENCH_serving.json (same cross-PR trajectory format as
+BENCH_search).  ``run(smoke=True)`` executes the parity + recompile
+checks at a tiny size without touching the trajectory or asserting perf
+bars.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Tuple
+
+import numpy as np
+
+from benchmarks.common import emit_trajectory
+
+#: acceptance bar: coalesced questions/sec vs the serial one-call loop
+TARGET_SPEEDUP = 3.0
+
+
+def _mixed_questions(workload, skewed, grown, h1, h2, h3, n_questions: int,
+                     max_depth: int) -> List[Tuple]:
+    """A deterministic mixed question list: (kind, args...) tuples."""
+    from repro.core import elements as el, whatif
+    specs = [el.spec_btree(), el.spec_hash_table(), el.spec_skip_list(),
+             el.spec_btree(fanout=40), el.spec_trie()]
+    variants = [whatif.add_bloom_filters(el.spec_hash_table()),
+                el.spec_csb_tree(), el.spec_btree(page=512)]
+    qs: List[Tuple] = []
+    i = 0
+    while len(qs) < n_questions:
+        spec = specs[i % len(specs)]
+        # the session mix of the motivation: what-if heavy, with an
+        # auto-completion every 8th question
+        kind = (i % 8) % 3 if i % 8 != 7 else 3
+        if kind == 0:
+            qs.append(("design", spec, variants[i % len(variants)],
+                       workload, h1))
+        elif kind == 1:
+            qs.append(("hardware", spec, workload, h1, (h2, h3)[i % 2]))
+        elif kind == 2:
+            qs.append(("workload", spec, workload,
+                       (skewed, grown)[i % 2], (h1, h2)[i % 2]))
+        else:
+            qs.append(("complete", (spec.chain[0],), workload,
+                       (h1, h3)[i % 2], max_depth))
+        i += 1
+    return qs
+
+
+def _ask_serial(q: Tuple):
+    """One question through the serial whatif/autocomplete API."""
+    from repro.core import autocomplete, whatif
+    kind = q[0]
+    if kind == "design":
+        return whatif.what_if_design(q[1], q[2], q[3], q[4])
+    if kind == "hardware":
+        return whatif.what_if_hardware(q[1], q[2], q[3], q[4])
+    if kind == "workload":
+        return whatif.what_if_workload(q[1], q[2], q[3], q[4])
+    return autocomplete.complete_design(q[1], q[2], q[3],
+                                        max_depth=q[4])
+
+
+def _submit(service, q: Tuple):
+    kind = q[0]
+    if kind == "design":
+        return service.submit_design(q[1], q[2], q[3], q[4])
+    if kind == "hardware":
+        return service.submit_hardware(q[1], q[2], q[3], q[4])
+    if kind == "workload":
+        return service.submit_workload(q[1], q[2], q[3], q[4])
+    return service.submit_complete(q[1], q[2], q[3], max_depth=q[4])
+
+
+def _ask_coalesced(service, questions: List[Tuple]) -> List:
+    futures = [_submit(service, q) for q in questions]
+    return [f.result() for f in futures]
+
+
+def _scalar_oracle(q: Tuple):
+    """The per-record scalar answer for one what-if question (None for
+    auto-completions — their parity bar is the serial fused answer)."""
+    from repro.core import whatif
+    kind = q[0]
+    if kind == "design":
+        return whatif.what_if_design(q[1], q[2], q[3], q[4],
+                                     engine="scalar")
+    if kind == "hardware":
+        return whatif.what_if_hardware(q[1], q[2], q[3], q[4],
+                                       engine="scalar")
+    if kind == "workload":
+        return whatif.what_if_workload(q[1], q[2], q[3], q[4],
+                                       engine="scalar")
+    return None
+
+
+def _check_parity(questions, coalesced, serial, oracles) -> None:
+    from repro.core.autocomplete import SearchResult
+    for q, got, ref, oracle in zip(questions, coalesced, serial, oracles):
+        if isinstance(got, SearchResult):
+            # same fused engine either way; only the concat grouping of
+            # the scoring call differs, so allow its float32 tolerance
+            assert abs(got.cost_seconds - ref.cost_seconds) <= \
+                1e-6 * abs(ref.cost_seconds), q[0]
+            assert got.explored == ref.explored
+            continue
+        for attr in ("baseline_seconds", "variant_seconds"):
+            c, s, o = (getattr(x, attr) for x in (got, ref, oracle))
+            assert abs(c - o) <= 1e-6 * abs(o), (q[0], attr, c, o)
+            assert abs(s - o) <= 1e-6 * abs(o), (q[0], attr, s, o)
+        assert got.beneficial == oracle.beneficial == ref.beneficial
+
+
+def _best_of(fn: Callable[[], object], reps: int) -> float:
+    best = None
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        elapsed = time.perf_counter() - t0
+        best = elapsed if best is None else min(best, elapsed)
+    return best
+
+
+def run(quick: bool = False, smoke: bool = False) -> None:
+    from benchmarks.common import _print_table
+    from repro.core import batchcost, devicecost
+    from repro.core.hardware import analytical_profile, hw1, hw2, hw3
+    from repro.core.synthesis import Workload
+    from repro.serving import DesignCalculatorService
+
+    quick = quick or smoke
+    n_questions = 16 if smoke else (64 if quick else 96)
+    max_depth = 2
+    workload = Workload(n_entries=100_000 if quick else 1_000_000,
+                        n_queries=100)
+    skewed = dataclasses.replace(workload, zipf_alpha=1.5)
+    grown = dataclasses.replace(workload,
+                                n_entries=workload.n_entries * 4)
+    h1, h2, h3 = hw1(), hw2(), hw3()
+    questions = _mixed_questions(workload, skewed, grown, h1, h2, h3,
+                                 n_questions, max_depth)
+
+    batchcost.clear_caches()
+    # warm the serial path: compiles the per-question fused shapes and
+    # fills the segment/frontier caches (the steady-state session regime
+    # both loops are measured in)
+    serial = [_ask_serial(q) for q in questions]
+    oracles = [_scalar_oracle(q) for q in questions]
+
+    # max_batch == n_questions with a generous window: a burst submitted
+    # together always lands in exactly one deterministic batch
+    service = DesignCalculatorService(
+        [h1, h2, h3], window_s=0.25, max_batch=n_questions)
+    try:
+        coalesced = _ask_coalesced(service, questions)   # warm + parity
+        _check_parity(questions, coalesced, serial, oracles)
+
+        # zero recompiles across hardware-swap requests: a pure hardware
+        # burst is warmed once (compiling its h1/h3 group shapes), then
+        # re-asked against a freshly built profile — identical frontier
+        # shapes, new parameter banks, so every scoring call must reuse an
+        # already-compiled executable
+        specs = sorted({q[1] for q in questions if q[0] == "hardware"},
+                       key=lambda s: s.describe())
+        hw_burst = [("hardware", specs[i % len(specs)], workload, h1, h3)
+                    for i in range(n_questions)]
+        _ask_coalesced(service, hw_burst)                # compile burst shape
+        hw_new = analytical_profile("HW-new", mem_ns=60.0,
+                                    bw_bytes_per_s=80e9,
+                                    l3_bytes=64 << 20)
+        service.register_hardware(hw_new)                # banks built here
+        swapped = [(kind, spec, wl, base, hw_new)
+                   for kind, spec, wl, base, _ in hw_burst]
+        traces_before = devicecost.trace_count()
+        _ask_coalesced(service, swapped)
+        recompiles = devicecost.trace_count() - traces_before
+        assert recompiles == 0, \
+            f"hardware swap recompiled the fused scorer {recompiles}x"
+
+        reps = 2 if smoke else 5
+        serial_s = _best_of(lambda: [_ask_serial(q) for q in questions],
+                            reps)
+        coalesced_s = _best_of(
+            lambda: _ask_coalesced(service, questions), reps)
+        stats = service.stats()
+    finally:
+        service.stop()
+
+    speedup = serial_s / max(coalesced_s, 1e-12)
+    rows = [{
+        "bench": "whatif_serving",
+        "questions": n_questions,
+        "serial_s": serial_s,
+        "coalesced_s": coalesced_s,
+        "serial_qps": n_questions / max(serial_s, 1e-12),
+        "coalesced_qps": n_questions / max(coalesced_s, 1e-12),
+        "speedup_coalesced_vs_serial": speedup,
+        "hw_swap_recompiles": recompiles,
+        "score_calls": stats["score_calls"],
+        "batches": stats["batches"],
+        "questions_served": stats["answered"],
+    }]
+    keys = list(rows[0].keys())
+    if smoke:
+        _print_table("BENCH_serving [smoke — not persisted]", rows, keys)
+        print("serving parity + recompile checks passed")
+        return
+    print(f"coalesced serving vs serial loop: {speedup:.1f}x "
+          f"(target >= {TARGET_SPEEDUP:.0f}x) on {n_questions} questions")
+    assert speedup >= TARGET_SPEEDUP, \
+        "coalesced what-if serving regressed below the acceptance bar"
+    emit_trajectory("BENCH_serving",
+                    "PR4 concurrent what-if serving engine", rows,
+                    keys=keys)
+
+
+if __name__ == "__main__":
+    run()

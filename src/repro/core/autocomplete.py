@@ -150,6 +150,22 @@ batchcost.register_cache("enumerate", _enumerate_cached.cache_info,
                          _enumerate_cached.cache_clear)
 
 
+def enumerate_frontier(partial: Sequence[Element],
+                       candidates: Optional[Sequence[Element]] = None,
+                       terminals: Optional[Sequence[Element]] = None,
+                       max_depth: int = 3,
+                       name: str = "auto") -> Tuple[DataStructureSpec, ...]:
+    """The memoized candidate frontier of a completion question.
+
+    Public entry point for callers that separate enumeration from scoring
+    — :mod:`repro.serving` enumerates each auto-completion request's
+    frontier up front so a whole coalescing window of requests can splice
+    into one fused scoring call.  ``lru_cache`` keeps this thread-safe."""
+    return _enumerate_cached(
+        tuple(partial), tuple(candidates or default_candidates()),
+        tuple(terminals or default_terminals()), max_depth, name)
+
+
 def complete_design(partial: Sequence[Element], workload: Workload,
                     hw: HardwareProfile,
                     candidates: Optional[Sequence[Element]] = None,
@@ -170,9 +186,8 @@ def complete_design(partial: Sequence[Element], workload: Workload,
     to 1e-9 totals for grouped/scalar and 1e-6 for fused).
     """
     t0 = time.perf_counter()
-    frontier = list(_enumerate_cached(
-        tuple(partial), tuple(candidates or default_candidates()),
-        tuple(terminals or default_terminals()), max_depth, name))
+    frontier = list(enumerate_frontier(partial, candidates, terminals,
+                                       max_depth, name))
     if not frontier:
         raise RuntimeError("no valid completion found")
     if batched:

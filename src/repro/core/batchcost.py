@@ -50,6 +50,15 @@ Public API
     element-library edits) — including the template, segment and frontier
     caches, and any cache registered via :func:`register_cache`.
 
+All memo layers are thread-safe: the insertable dict caches (and the
+interning/device-table state in :mod:`repro.core.devicecost`) share the
+single re-entrant lock of :mod:`repro.core.memo`, so concurrent scoring
+threads — the :mod:`repro.serving` access pattern — cannot corrupt
+hit/miss accounting, and ``clear_caches()``/``cache_info()`` drain and
+snapshot every layer atomically.  Misses still compute outside the lock
+(two racing threads may redundantly pack one frontier; both store equal
+values).
+
 Caching layers (all keyed on hashable, frozen inputs — hardware is *not*
 part of any key, so re-costing a frontier on new hardware touches no
 synthesis code at all):
@@ -70,7 +79,6 @@ synthesis code at all):
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
 import functools
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
@@ -81,6 +89,7 @@ from repro.core import devicecost, templatecost
 from repro.core.devicecost import _MODEL_NAMES, model_id as _model_id
 from repro.core.elements import DataStructureSpec, Element
 from repro.core.hardware import HardwareProfile
+from repro.core.memo import MEMO_LOCK, CacheInfo, DictCache as _DictCache
 from repro.core.synthesis import (CostBreakdown, Workload,
                                   clear_synthesis_caches,
                                   synthesize_operation)
@@ -168,50 +177,6 @@ def compiled_operation(op: str, spec: DataStructureSpec,
     return _compiled_operation(op, spec.chain, workload)
 
 
-CacheInfo = collections.namedtuple("CacheInfo",
-                                   "hits misses maxsize currsize")
-
-
-class _DictCache:
-    """An insertable memo with lru_cache-style hit/miss accounting.
-
-    ``functools.lru_cache`` cannot be *populated* from outside, but the
-    vectorized packer computes many entries per call and must store them
-    all; this keeps the same observable counters so cache tests treat
-    every layer uniformly.  ``maxsize`` evicts the least-recently-used
-    entry (hits refresh recency — a burst of small what-if frontiers
-    must not push the retained steady-state search frontier out).
-    """
-
-    def __init__(self, maxsize: Optional[int] = None) -> None:
-        self._data: "collections.OrderedDict" = collections.OrderedDict()
-        self._maxsize = maxsize
-        self._hits = 0
-        self._misses = 0
-
-    def get(self, key):
-        entry = self._data.get(key)
-        if entry is None:
-            self._misses += 1
-        else:
-            self._hits += 1
-            self._data.move_to_end(key)
-        return entry
-
-    def put(self, key, value) -> None:
-        self._data[key] = value
-        if self._maxsize is not None and len(self._data) > self._maxsize:
-            self._data.popitem(last=False)
-
-    def clear(self) -> None:
-        self._data.clear()
-        self._hits = self._misses = 0
-
-    def info(self) -> CacheInfo:
-        return CacheInfo(self._hits, self._misses, self._maxsize,
-                         len(self._data))
-
-
 #: per-spec packed segments — (chain, workload, mix) -> (ids, sizes, weights)
 _segment_cache = _DictCache(maxsize=65536)
 #: whole packed frontiers — (chains, workload, mix) -> PackedFrontier
@@ -230,29 +195,34 @@ def register_cache(name: str, info_fn: Callable[[], Tuple],
 
 
 def clear_caches() -> None:
-    _compiled_operation.cache_clear()
-    _segment_cache.clear()
-    _frontier_cache.clear()
-    templatecost.clear_template_caches()
-    clear_synthesis_caches()
-    for _, clear_fn in _EXTERNAL_CACHES.values():
-        clear_fn()
+    # MEMO_LOCK makes the drain atomic with respect to concurrent scorers:
+    # no thread can repopulate one layer while a later layer is still being
+    # cleared (every DictCache put/get takes the same re-entrant lock).
+    with MEMO_LOCK:
+        _compiled_operation.cache_clear()
+        _segment_cache.clear()
+        _frontier_cache.clear()
+        templatecost.clear_template_caches()
+        clear_synthesis_caches()
+        for _, clear_fn in _EXTERNAL_CACHES.values():
+            clear_fn()
 
 
 def cache_info() -> Dict[str, Tuple]:
     from repro.core.synthesis import (_instantiate_levels,
                                       _zipf_collision_mass,
                                       symbolic_breakdown)
-    info = {"compiled_operation": _compiled_operation.cache_info(),
-            "packed_spec": _segment_cache.info(),
-            "frontier": _frontier_cache.info(),
-            "instantiate": _instantiate_levels.cache_info(),
-            "zipf_mass": _zipf_collision_mass.cache_info(),
-            "symbolic_breakdown": symbolic_breakdown.cache_info()}
-    info.update(templatecost.cache_info())
-    for name, (info_fn, _) in _EXTERNAL_CACHES.items():
-        info[name] = info_fn()
-    return info
+    with MEMO_LOCK:
+        info = {"compiled_operation": _compiled_operation.cache_info(),
+                "packed_spec": _segment_cache.info(),
+                "frontier": _frontier_cache.info(),
+                "instantiate": _instantiate_levels.cache_info(),
+                "zipf_mass": _zipf_collision_mass.cache_info(),
+                "symbolic_breakdown": symbolic_breakdown.cache_info()}
+        info.update(templatecost.cache_info())
+        for name, (info_fn, _) in _EXTERNAL_CACHES.items():
+            info[name] = info_fn()
+        return info
 
 
 # ---------------------------------------------------------------------------

@@ -50,11 +50,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.hardware import HardwareProfile
+from repro.core.memo import MEMO_LOCK
 from repro.core.models import _BASES, KNN_SENTINEL
 
 # ---------------------------------------------------------------------------
 # Level-2 model-name interning: frontier records refer to models by id.
 # Owned here (the table rows are aligned to it); batchcost re-exports.
+# Guarded by the shared memo lock: a torn read of (_MODEL_IDS,
+# _MODEL_NAMES) under concurrent serving threads could hand two models
+# one id, silently mis-scoring every frontier that uses either.
 # ---------------------------------------------------------------------------
 _MODEL_IDS: Dict[str, int] = {}
 _MODEL_NAMES: List[str] = []
@@ -63,9 +67,12 @@ _MODEL_NAMES: List[str] = []
 def model_id(name: str) -> int:
     mid = _MODEL_IDS.get(name)
     if mid is None:
-        mid = len(_MODEL_NAMES)
-        _MODEL_IDS[name] = mid
-        _MODEL_NAMES.append(name)
+        with MEMO_LOCK:
+            mid = _MODEL_IDS.get(name)
+            if mid is None:
+                mid = len(_MODEL_NAMES)
+                _MODEL_NAMES.append(name)
+                _MODEL_IDS[name] = mid
     return mid
 
 
@@ -203,12 +210,22 @@ def device_table(hw: HardwareProfile) -> DeviceTable:
     boundary crosses, so rebuilds almost never recompile the scorer — and
     two profiles of the same model zoo always share compiled executables.
     """
-    table = hw._device_table
-    if table is None or table.n_interned != len(_MODEL_NAMES) or \
-            table.models_ref != id(hw.models):
-        table = build_table(hw)
+    def _current(table) -> bool:
+        return table is not None and \
+            table.n_interned == len(_MODEL_NAMES) and \
+            table.models_ref == id(hw.models)
+
+    with MEMO_LOCK:   # consistent staleness check vs concurrent interning
+        table = hw._device_table
+        if _current(table):
+            return table
+    # build OUTSIDE the lock — bank construction is the expensive path and
+    # must not stall every concurrent scorer's cache traffic; two racing
+    # threads may build duplicate (equal) tables, last write wins
+    table = build_table(hw)
+    with MEMO_LOCK:
         hw._device_table = table
-    return table
+        return table
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,82 @@
+"""Thread-safe memo layer for the batch-costing stack.
+
+The costing stack keeps several module-level memos (batchcost's segment /
+frontier caches, devicecost's model-name interning and per-profile device
+tables, templatecost's statics map).  A long-lived serving process
+(:mod:`repro.serving`) answers questions from many threads, and the
+``functools.lru_cache`` layers are already safe under CPython — but the
+insertable dict caches and the interning tables are get-then-put sequences
+whose hit/miss accounting (and ``OrderedDict`` recency bookkeeping) can be
+corrupted by concurrent callers, and an insert racing ``clear_caches()``
+can resurrect a stale entry mid-drain.
+
+This module owns the single re-entrant lock every such memo shares
+(``MEMO_LOCK``) plus the :class:`DictCache` built on it.  One lock — not
+one per cache — so cross-layer operations (``batchcost.clear_caches()``,
+``batchcost.cache_info()``) observe every layer at a consistent point:
+no thread can be between a segment-cache put and the matching
+frontier-cache put while a clear or info snapshot runs.
+
+The lock guards *bookkeeping*, not computation: cache misses compute
+outside the lock, so two threads may redundantly pack the same frontier —
+benign (both store equal values) and far cheaper than serializing
+synthesis.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+from typing import Optional
+
+#: the one re-entrant lock shared by every memo in the costing stack
+MEMO_LOCK = threading.RLock()
+
+CacheInfo = collections.namedtuple("CacheInfo",
+                                   "hits misses maxsize currsize")
+
+
+class DictCache:
+    """An insertable memo with lru_cache-style hit/miss accounting.
+
+    ``functools.lru_cache`` cannot be *populated* from outside, but the
+    vectorized packer computes many entries per call and must store them
+    all; this keeps the same observable counters so cache tests treat
+    every layer uniformly.  ``maxsize`` evicts the least-recently-used
+    entry (hits refresh recency — a burst of small what-if frontiers
+    must not push the retained steady-state search frontier out).
+
+    Every method holds :data:`MEMO_LOCK`, so counters, the recency order
+    and ``info()`` snapshots stay consistent under concurrent scoring.
+    """
+
+    def __init__(self, maxsize: Optional[int] = None) -> None:
+        self._data: "collections.OrderedDict" = collections.OrderedDict()
+        self._maxsize = maxsize
+        self._hits = 0
+        self._misses = 0
+
+    def get(self, key):
+        with MEMO_LOCK:
+            entry = self._data.get(key)
+            if entry is None:
+                self._misses += 1
+            else:
+                self._hits += 1
+                self._data.move_to_end(key)
+            return entry
+
+    def put(self, key, value) -> None:
+        with MEMO_LOCK:
+            self._data[key] = value
+            if self._maxsize is not None and len(self._data) > self._maxsize:
+                self._data.popitem(last=False)
+
+    def clear(self) -> None:
+        with MEMO_LOCK:
+            self._data.clear()
+            self._hits = self._misses = 0
+
+    def info(self) -> CacheInfo:
+        with MEMO_LOCK:
+            return CacheInfo(self._hits, self._misses, self._maxsize,
+                             len(self._data))

@@ -56,6 +56,7 @@ import numpy as np
 from repro.core import access
 from repro.core.devicecost import TILE, model_id
 from repro.core.elements import Element
+from repro.core.memo import MEMO_LOCK
 from repro.core.synthesis import (CLS_APPEND, CLS_DEP, CLS_DEP_BLOOM,
                                   CLS_IND, CLS_IND_FUNC, CLS_LL, CLS_SKIP,
                                   FENCE_BYTES, PTR_BYTES, Workload,
@@ -136,10 +137,14 @@ _STATICS_BY_VALUE: Dict[Tuple, ElementStatics] = {}
 def statics_of(e: Element) -> ElementStatics:
     st = e._tc_statics
     if st is None:
-        st = _STATICS_BY_VALUE.get(e.values)
-        if st is None:
-            st = _compute_statics(e)
-            _STATICS_BY_VALUE[e.values] = st
+        # under the shared memo lock so a concurrent clear_template_caches
+        # cannot interleave with the by-value insert (duplicate statics
+        # would be benign, a torn OrderedDict/counter state would not be)
+        with MEMO_LOCK:
+            st = _STATICS_BY_VALUE.get(e.values)
+            if st is None:
+                st = _compute_statics(e)
+                _STATICS_BY_VALUE[e.values] = st
         object.__setattr__(e, "_tc_statics", st)
     return st
 
@@ -258,8 +263,9 @@ def chain_geometry(chain: Tuple[Element, ...], workload: Workload
 
 
 def clear_template_caches() -> None:
-    chain_geometry.cache_clear()
-    _STATICS_BY_VALUE.clear()
+    with MEMO_LOCK:
+        chain_geometry.cache_clear()
+        _STATICS_BY_VALUE.clear()
 
 
 def cache_info() -> Dict[str, Tuple]:

@@ -10,14 +10,16 @@ design / hardware / workload, e.g.:
 Every question is two cost-synthesis invocations (baseline + variation)
 over the same inputs, so answers arrive in milliseconds–seconds.  All
 three run on the batched/fused engine (:mod:`repro.core.batchcost` /
-:mod:`repro.core.devicecost`): a design question packs baseline and
-variant independently and *splices* them into one two-design frontier
-(``concat_frontiers`` — repeat questions against the same baseline reuse
-its cached segment instead of re-synthesizing it), and a hardware
-question scores the *same* packed frontier against both profiles — a
-pure device parameter-table swap with zero re-synthesis and zero
-recompilation.  Pass ``engine="scalar"`` to fall back to the per-record
-scalar path (``cost_workload``) — the parity oracle for tests.
+:mod:`repro.core.devicecost`): design and workload questions pack
+baseline and variant independently and *splice* them into one two-design
+frontier (``concat_frontiers`` — repeat questions against the same
+baseline reuse its cached segment instead of re-synthesizing it), and a
+hardware question scores the *same* packed frontier against both
+profiles — a pure device parameter-table swap with zero re-synthesis and
+zero recompilation.  Pass ``engine="scalar"`` to fall back to the
+per-record scalar path (``cost_workload``) — the parity oracle for
+tests.  :mod:`repro.serving` serves these same questions concurrently,
+coalescing a window of them into one fused call.
 """
 from __future__ import annotations
 
@@ -25,11 +27,24 @@ import dataclasses
 import time
 from typing import Dict, Optional
 
-from repro.core.batchcost import (concat_frontiers, cost_many,
-                                  pack_frontier)
+from repro.core.batchcost import concat_frontiers, pack_frontier
 from repro.core.elements import DataStructureSpec
 from repro.core.hardware import HardwareProfile
 from repro.core.synthesis import Workload, cost_workload
+
+
+def question_design(spec: DataStructureSpec,
+                    variant: DataStructureSpec) -> str:
+    return f"design {spec.describe()} -> {variant.describe()}"
+
+
+def question_hardware(hw: HardwareProfile, new_hw: HardwareProfile) -> str:
+    return f"hardware {hw.name} -> {new_hw.name}"
+
+
+def question_workload(workload: Workload, new_workload: Workload) -> str:
+    return (f"workload n={workload.n_entries},zipf={workload.zipf_alpha} -> "
+            f"n={new_workload.n_entries},zipf={new_workload.zipf_alpha}")
 
 
 @dataclasses.dataclass
@@ -72,9 +87,8 @@ def what_if_design(spec: DataStructureSpec, variant: DataStructureSpec,
         packed = concat_frontiers([pack_frontier([spec], workload, mix),
                                    pack_frontier([variant], workload, mix)])
         base, var = packed.score(hw, engine=engine)
-    return WhatIfAnswer(
-        f"design {spec.describe()} -> {variant.describe()}",
-        float(base), float(var), time.perf_counter() - t0)
+    return WhatIfAnswer(question_design(spec, variant),
+                        float(base), float(var), time.perf_counter() - t0)
 
 
 def what_if_hardware(spec: DataStructureSpec, workload: Workload,
@@ -94,28 +108,32 @@ def what_if_hardware(spec: DataStructureSpec, workload: Workload,
         packed = pack_frontier([spec], workload, mix)
         base = packed.score(hw, engine=engine)[0]
         var = packed.score(new_hw, engine=engine)[0]
-    return WhatIfAnswer(
-        f"hardware {hw.name} -> {new_hw.name}",
-        float(base), float(var), time.perf_counter() - t0)
+    return WhatIfAnswer(question_hardware(hw, new_hw),
+                        float(base), float(var), time.perf_counter() - t0)
 
 
 def what_if_workload(spec: DataStructureSpec, workload: Workload,
                      new_workload: Workload, hw: HardwareProfile,
                      mix: Optional[Dict[str, float]] = None,
                      engine: str = "fused") -> WhatIfAnswer:
-    """E.g. "what if queries skew to 0.01% of the key space?"."""
+    """E.g. "what if queries skew to 0.01% of the key space?".
+
+    Packing is workload-keyed but *scoring* is workload-free, so the two
+    workload variants splice into one two-design frontier and a single
+    fused call answers the question — and, like the design/hardware
+    questions, repeat questions against either workload hit the segment
+    cache instead of re-synthesizing the spec.
+    """
     t0 = time.perf_counter()
     if engine == "scalar":
         base = cost_workload(spec, workload, hw, mix)
         var = cost_workload(spec, new_workload, hw, mix)
     else:
-        base = float(cost_many([spec], workload, hw, mix, engine=engine)[0])
-        var = float(cost_many([spec], new_workload, hw, mix,
-                              engine=engine)[0])
-    return WhatIfAnswer(
-        f"workload n={workload.n_entries},zipf={workload.zipf_alpha} -> "
-        f"n={new_workload.n_entries},zipf={new_workload.zipf_alpha}",
-        float(base), float(var), time.perf_counter() - t0)
+        packed = concat_frontiers([pack_frontier([spec], workload, mix),
+                                   pack_frontier([spec], new_workload, mix)])
+        base, var = packed.score(hw, engine=engine)
+    return WhatIfAnswer(question_workload(workload, new_workload),
+                        float(base), float(var), time.perf_counter() - t0)
 
 
 def add_bloom_filters(spec: DataStructureSpec, num_hashes: int = 4,

@@ -1,0 +1,467 @@
+"""Micro-batching what-if serving engine.
+
+The paper's headline promise is *interactive* design questions — answers
+"on the order of a few seconds or minutes" — and the access pattern of a
+design session (Learning Key-Value Store Design, Idreos et al.) is long
+runs of many small, related questions against a shared design continuum.
+Served naively, every question pays a full fused-scorer dispatch, and
+concurrent designers hammer the module-level synthesis memos from many
+threads.
+
+:class:`DesignCalculatorService` is the long-lived serving loop those
+sessions talk to:
+
+* **Resident state.**  Registered :class:`~repro.core.hardware.
+  HardwareProfile`s keep their device parameter banks built
+  (:func:`repro.core.devicecost.device_table`), so no question ever pays
+  bank construction; the packed-frontier/segment caches of
+  :mod:`repro.core.batchcost` (thread-safe via
+  :mod:`repro.core.memo`) persist across questions.
+* **Micro-batching.**  Requests are submitted from any thread and return
+  :class:`concurrent.futures.Future`s.  A single worker drains the queue:
+  the first request opens a coalescing window (``window_s``), everything
+  arriving inside it joins the batch, and the batch is served by splicing
+  every question's packed frontier into **one**
+  :func:`~repro.core.batchcost.concat_frontiers` frontier per distinct
+  hardware profile — one fused scoring call each.  A hardware-variant
+  question contributes the *same* packed frontier to two profile groups:
+  a pure parameter-table swap, zero recompilation.
+* **Per-session frontier reuse.**  A :class:`ServiceSession` pins the
+  packed frontiers of its recent questions, so a designer iterating on
+  one baseline never re-packs it — even if a burst of unrelated traffic
+  evicts it from the global LRU caches.
+
+Answers are exactly :class:`~repro.core.whatif.WhatIfAnswer` /
+:class:`~repro.core.autocomplete.SearchResult`; parity with the serial
+scalar oracle (to the fused engine's documented 1e-6) is asserted in
+``tests/test_serving.py`` and ``benchmarks/serving_bench.py``.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import itertools
+import queue
+import threading
+import time
+from concurrent.futures import Future
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import devicecost
+from repro.core.autocomplete import SearchResult, enumerate_frontier
+from repro.core.batchcost import (PackedFrontier, concat_frontiers,
+                                  pack_frontier)
+from repro.core.elements import DataStructureSpec, Element
+from repro.core.hardware import HardwareProfile
+from repro.core.synthesis import Workload
+from repro.core.whatif import (WhatIfAnswer, question_design,
+                               question_hardware, question_workload)
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    """Serving counters (snapshot with :meth:`DesignCalculatorService.stats`)."""
+
+    questions: int = 0          # requests submitted
+    answered: int = 0           # futures resolved successfully
+    failed: int = 0             # futures resolved with an exception
+    batches: int = 0            # non-empty coalescing windows served
+    empty_windows: int = 0      # windows that closed with no requests
+    coalesced: int = 0          # requests that shared a batch with others
+    score_calls: int = 0        # fused/grouped scoring calls issued
+    max_batch: int = 0          # largest batch served
+    session_frontier_hits: int = 0
+
+
+@dataclasses.dataclass
+class _Evaluation:
+    """One frontier-under-one-profile scoring unit of a request.
+
+    Requests decompose into evaluations; the batcher groups evaluations
+    by hardware profile and scores each group in one fused call.  After
+    scoring, ``totals`` holds this evaluation's per-design slice.
+    """
+
+    specs: Tuple[DataStructureSpec, ...]
+    workload: Workload
+    mix: Optional[Dict[str, float]]
+    hw_name: str
+    session: Optional[str] = None
+    packed: Optional[PackedFrontier] = None
+    totals: Optional[np.ndarray] = None
+    error: Optional[Exception] = None   # this evaluation's scoring failure
+
+
+@dataclasses.dataclass
+class _Request:
+    evals: List[_Evaluation]
+    finalize: Callable[[float], object]   # elapsed-seconds -> answer
+    future: Future
+    t0: float
+
+
+class _SessionState:
+    """Packed frontiers pinned by one session (worker-thread only)."""
+
+    def __init__(self, maxsize: int = 64) -> None:
+        self.frontiers: "collections.OrderedDict" = collections.OrderedDict()
+        self.maxsize = maxsize
+
+    def get(self, key) -> Optional[PackedFrontier]:
+        packed = self.frontiers.get(key)
+        if packed is not None:
+            self.frontiers.move_to_end(key)
+        return packed
+
+    def put(self, key, packed: PackedFrontier) -> None:
+        self.frontiers[key] = packed
+        if len(self.frontiers) > self.maxsize:
+            self.frontiers.popitem(last=False)
+
+
+@dataclasses.dataclass
+class ServiceSession:
+    """A designer's handle on the service: same questions, pinned frontiers."""
+
+    service: "DesignCalculatorService"
+    name: str
+
+    def what_if_design(self, spec, variant, workload, hw, mix=None):
+        return self.service.what_if_design(spec, variant, workload, hw, mix,
+                                           session=self.name)
+
+    def what_if_hardware(self, spec, workload, hw, new_hw, mix=None):
+        return self.service.what_if_hardware(spec, workload, hw, new_hw, mix,
+                                             session=self.name)
+
+    def what_if_workload(self, spec, workload, new_workload, hw, mix=None):
+        return self.service.what_if_workload(spec, workload, new_workload,
+                                             hw, mix, session=self.name)
+
+    def complete_design(self, partial, workload, hw, **kwargs):
+        return self.service.complete_design(partial, workload, hw,
+                                            session=self.name, **kwargs)
+
+
+class DesignCalculatorService:
+    """Long-lived concurrent what-if server (see module docstring).
+
+    Parameters
+    ----------
+    profiles:
+        Hardware profiles to register up front (device banks are built
+        immediately; more can be registered later, or implicitly by
+        asking a question about an unregistered profile object).
+    window_s:
+        The coalescing window: how long the worker keeps a batch open
+        after its first request arrives.
+    max_batch:
+        Hard cap on requests per batch (the window closes early).
+    engine:
+        ``"fused"`` (default) or ``"grouped"`` — every scoring call goes
+        through :meth:`PackedFrontier.score` with this engine.
+    """
+
+    def __init__(self, profiles: Sequence[HardwareProfile] = (), *,
+                 window_s: float = 0.002, max_batch: int = 1024,
+                 engine: str = "fused", start: bool = True) -> None:
+        if engine not in ("fused", "grouped"):
+            raise ValueError(f"unknown serving engine: {engine!r}")
+        self._engine = engine
+        self._window = window_s
+        self._max_batch = max_batch
+        self._profiles: Dict[str, HardwareProfile] = {}
+        self._sessions: Dict[str, _SessionState] = {}
+        self._session_counter = itertools.count()
+        self._queue: "queue.Queue[Optional[_Request]]" = queue.Queue()
+        self._lock = threading.Lock()      # profiles/sessions/stats registry
+        self._stats = ServiceStats()
+        self._thread: Optional[threading.Thread] = None
+        for hw in profiles:
+            self.register_hardware(hw)
+        if start:
+            self.start()
+
+    # -- lifecycle ----------------------------------------------------------
+    def start(self) -> None:
+        if self._thread is not None and self._thread.is_alive():
+            return
+        self._thread = threading.Thread(target=self._loop, daemon=True,
+                                        name="design-calculator-serving")
+        self._thread.start()
+
+    def stop(self, timeout: Optional[float] = None) -> None:
+        """Drain already-queued requests, then stop the worker.
+
+        Requests that slip in behind the shutdown sentinel are failed
+        (never left with a forever-pending future).  If ``timeout``
+        expires with the worker still running, the service stays
+        stoppable/startable — the thread is only forgotten once dead."""
+        if self._thread is None:
+            return
+        self._queue.put(None)
+        self._thread.join(timeout)
+        if self._thread.is_alive():    # timed out; try again later
+            return
+        self._thread = None
+        self._fail_pending()
+
+    def _fail_pending(self) -> None:
+        """Fail every request still queued after the worker has exited."""
+        while True:
+            try:
+                req = self._queue.get_nowait()
+            except queue.Empty:
+                return
+            if req is None:
+                continue
+            req.future.set_exception(
+                RuntimeError("service stopped before serving this request"))
+            with self._lock:
+                self._stats.failed += 1
+
+    close = stop
+
+    def __enter__(self) -> "DesignCalculatorService":
+        self.start()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- registry -----------------------------------------------------------
+    def register_hardware(self, hw: HardwareProfile) -> str:
+        """Register a profile and build its device parameter banks now, so
+        the first question about it pays no bank construction."""
+        with self._lock:
+            self._profiles[hw.name] = hw
+        devicecost.device_table(hw)
+        return hw.name
+
+    def _profile_name(self, hw) -> str:
+        if isinstance(hw, str):
+            if hw not in self._profiles:
+                raise KeyError(f"unregistered hardware profile: {hw!r}")
+            return hw
+        if self._profiles.get(hw.name) is not hw:
+            self.register_hardware(hw)
+        return hw.name
+
+    def session(self, name: Optional[str] = None) -> ServiceSession:
+        """Open (or re-attach to) a designer session with pinned frontiers."""
+        name = name or f"session-{next(self._session_counter)}"
+        with self._lock:
+            self._sessions.setdefault(name, _SessionState())
+        return ServiceSession(self, name)
+
+    def stats(self) -> Dict[str, int]:
+        with self._lock:
+            return dict(dataclasses.asdict(self._stats))
+
+    # -- submission (any thread) --------------------------------------------
+    def submit_design(self, spec: DataStructureSpec,
+                      variant: DataStructureSpec, workload: Workload, hw,
+                      mix: Optional[Dict[str, float]] = None,
+                      session: Optional[str] = None) -> Future:
+        hw_name = self._profile_name(hw)
+        ev = _Evaluation((spec, variant), workload, mix, hw_name, session)
+
+        def finalize(elapsed: float) -> WhatIfAnswer:
+            return WhatIfAnswer(question_design(spec, variant),
+                                float(ev.totals[0]), float(ev.totals[1]),
+                                elapsed)
+        return self._submit([ev], finalize)
+
+    def submit_hardware(self, spec: DataStructureSpec, workload: Workload,
+                        hw, new_hw,
+                        mix: Optional[Dict[str, float]] = None,
+                        session: Optional[str] = None) -> Future:
+        base_hw = self._profiles[self._profile_name(hw)]
+        var_hw = self._profiles[self._profile_name(new_hw)]
+        # identical (specs, workload, mix): both evaluations resolve to the
+        # SAME packed frontier, scored under two profile groups — the
+        # what-if-hardware table swap, now amortized across a whole batch
+        base = _Evaluation((spec,), workload, mix, base_hw.name, session)
+        var = _Evaluation((spec,), workload, mix, var_hw.name, session)
+
+        def finalize(elapsed: float) -> WhatIfAnswer:
+            return WhatIfAnswer(question_hardware(base_hw, var_hw),
+                                float(base.totals[0]), float(var.totals[0]),
+                                elapsed)
+        return self._submit([base, var], finalize)
+
+    def submit_workload(self, spec: DataStructureSpec, workload: Workload,
+                        new_workload: Workload, hw,
+                        mix: Optional[Dict[str, float]] = None,
+                        session: Optional[str] = None) -> Future:
+        hw_name = self._profile_name(hw)
+        base = _Evaluation((spec,), workload, mix, hw_name, session)
+        var = _Evaluation((spec,), new_workload, mix, hw_name, session)
+
+        def finalize(elapsed: float) -> WhatIfAnswer:
+            return WhatIfAnswer(question_workload(workload, new_workload),
+                                float(base.totals[0]), float(var.totals[0]),
+                                elapsed)
+        return self._submit([base, var], finalize)
+
+    def submit_complete(self, partial: Sequence[Element],
+                        workload: Workload, hw,
+                        candidates: Optional[Sequence[Element]] = None,
+                        terminals: Optional[Sequence[Element]] = None,
+                        mix: Optional[Dict[str, float]] = None,
+                        max_depth: int = 3, name: str = "auto",
+                        session: Optional[str] = None) -> Future:
+        hw_name = self._profile_name(hw)
+        # enumeration is structural and memoized — do it at submit time so
+        # the whole window's frontiers are known when the batch closes
+        frontier = enumerate_frontier(partial, candidates, terminals,
+                                      max_depth, name)
+        if not frontier:
+            with self._lock:   # counted like any other failed question
+                self._stats.questions += 1
+                self._stats.failed += 1
+            fut: Future = Future()
+            fut.set_exception(RuntimeError("no valid completion found"))
+            return fut
+        ev = _Evaluation(frontier, workload, mix, hw_name, session)
+
+        def finalize(elapsed: float) -> SearchResult:
+            best = int(np.argmin(ev.totals))
+            return SearchResult(frontier[best], float(ev.totals[best]),
+                                len(frontier), elapsed)
+        return self._submit([ev], finalize)
+
+    # -- synchronous conveniences -------------------------------------------
+    def what_if_design(self, *args, **kwargs) -> WhatIfAnswer:
+        return self.submit_design(*args, **kwargs).result()
+
+    def what_if_hardware(self, *args, **kwargs) -> WhatIfAnswer:
+        return self.submit_hardware(*args, **kwargs).result()
+
+    def what_if_workload(self, *args, **kwargs) -> WhatIfAnswer:
+        return self.submit_workload(*args, **kwargs).result()
+
+    def complete_design(self, *args, **kwargs) -> SearchResult:
+        return self.submit_complete(*args, **kwargs).result()
+
+    # -- the serving loop (worker thread) -----------------------------------
+    def _submit(self, evals: List[_Evaluation],
+                finalize: Callable[[float], object]) -> Future:
+        thread = self._thread
+        if thread is None or not thread.is_alive():
+            raise RuntimeError("service is not running (call start())")
+        fut: Future = Future()
+        with self._lock:
+            self._stats.questions += 1
+        self._queue.put(_Request(evals, finalize, fut, time.perf_counter()))
+        # close the submit/stop race: if the worker died between the check
+        # above and the put, nothing will ever serve the queue — fail the
+        # stragglers (including ours) instead of hanging their futures
+        if not thread.is_alive():
+            self._fail_pending()
+        return fut
+
+    def _loop(self) -> None:
+        while True:
+            head = self._queue.get()
+            if head is None:
+                return
+            batch = [head]
+            stop = False
+            deadline = time.monotonic() + self._window
+            while len(batch) < self._max_batch:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    break
+                try:
+                    nxt = self._queue.get(timeout=remaining)
+                except queue.Empty:
+                    break
+                if nxt is None:
+                    stop = True
+                    break
+                batch.append(nxt)
+            try:
+                self._serve_batch(batch)
+            except Exception as exc:   # defensive: never kill the loop
+                for req in batch:
+                    if not req.future.done():
+                        req.future.set_exception(exc)
+            if stop:
+                return
+
+    def _pack(self, ev: _Evaluation) -> PackedFrontier:
+        mix_key = tuple(ev.mix.items()) if ev.mix else None
+        key = (tuple(s.chain for s in ev.specs), ev.workload, mix_key)
+        state = self._sessions.get(ev.session) if ev.session else None
+        if state is not None:
+            packed = state.get(key)
+            if packed is not None:
+                with self._lock:
+                    self._stats.session_frontier_hits += 1
+                return packed
+        packed = pack_frontier(ev.specs, ev.workload, ev.mix)
+        if state is not None:
+            state.put(key, packed)
+        return packed
+
+    def _serve_batch(self, batch: List[_Request]) -> None:
+        """Answer one coalescing window: splice every evaluation into one
+        frontier per hardware profile, score each with one fused call,
+        slice the per-design totals back out, resolve the futures."""
+        if not batch:
+            with self._lock:
+                self._stats.empty_windows += 1
+            return
+        groups: Dict[str, List[_Evaluation]] = {}
+        live: List[_Request] = []
+        for req in batch:
+            try:
+                for ev in req.evals:
+                    ev.packed = self._pack(ev)
+                for ev in req.evals:
+                    groups.setdefault(ev.hw_name, []).append(ev)
+                live.append(req)
+            except Exception as exc:
+                req.future.set_exception(exc)
+                with self._lock:
+                    self._stats.failed += 1
+        score_calls = 0
+        for hw_name, evals in groups.items():
+            hw = self._profiles[hw_name]
+            try:
+                combined = concat_frontiers([ev.packed for ev in evals])
+                totals = combined.score(hw, engine=self._engine)
+                score_calls += 1
+            except Exception as exc:
+                for ev in evals:   # each group keeps its own failure
+                    ev.error = exc
+                continue
+            offset = 0
+            for ev in evals:
+                n = ev.packed.n_segments
+                ev.totals = totals[offset:offset + n]
+                offset += n
+        answered = failed = 0
+        for req in live:
+            try:
+                for ev in req.evals:
+                    if ev.error is not None:
+                        raise ev.error
+                req.future.set_result(
+                    req.finalize(time.perf_counter() - req.t0))
+                answered += 1
+            except Exception as exc:
+                req.future.set_exception(exc)
+                failed += 1
+        with self._lock:
+            st = self._stats
+            st.batches += 1
+            st.score_calls += score_calls
+            st.answered += answered
+            st.failed += failed
+            st.max_batch = max(st.max_batch, len(batch))
+            if len(batch) > 1:
+                st.coalesced += len(batch)

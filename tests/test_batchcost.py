@@ -258,3 +258,78 @@ def test_hardware_not_in_any_synthesis_key(hw_analytical, cpu_profile):
     assert a.shape == b.shape == (len(specs),)
     # and re-packing for the other profile is pure cache hits
     assert pack_frontier(specs, w, mix) is packed
+
+
+def test_empty_and_degenerate_frontiers(hw_analytical):
+    """cost_many([]) / pack_frontier([]) / concat_frontiers([]) return
+    empty results instead of crashing inside packing or the fused scorer
+    — the serving engine must tolerate windows whose evaluations are all
+    empty, and splicing empty parts must be the identity."""
+    w = Workload(n_entries=10_000)
+    assert cost_many([], w, hw_analytical).shape == (0,)
+    empty = batchcost.pack_frontier([], w)
+    assert empty.n_segments == 0 and len(empty.ids) == 0
+    for engine in ("fused", "grouped"):
+        assert empty.score(hw_analytical, engine=engine).shape == (0,)
+    assert batchcost.concat_frontiers([]).n_segments == 0
+    assert batchcost.concat_frontiers([empty, empty]).n_segments == 0
+    assert batchcost.concat_frontiers(
+        [empty, empty]).score(hw_analytical).shape == (0,)
+    # empty parts splice away without disturbing real designs
+    packed = batchcost.pack_frontier([el.spec_btree()], w)
+    spliced = batchcost.concat_frontiers([empty, packed, empty])
+    assert spliced.n_segments == 1
+    np.testing.assert_allclose(spliced.score(hw_analytical),
+                               packed.score(hw_analytical), rtol=0)
+
+
+def test_memo_layer_consistent_under_threads(hw_analytical):
+    """The module-level memos (segment/frontier dict caches, lru layers,
+    device-table and interning state) are shared by every serving thread;
+    concurrent scoring racing cache_info()/clear_caches() must neither
+    raise nor corrupt the hit/miss accounting."""
+    import threading
+
+    batchcost.clear_caches()
+    w = Workload(n_entries=50_000)
+    mix = {"get": 10.0, "update": 2.0}
+    specs = _grid_specs()
+    errors = []
+
+    def score_loop():
+        try:
+            for _ in range(12):
+                totals = cost_many(specs, w, hw_analytical, mix)
+                assert totals.shape == (len(specs),)
+                batchcost.cache_info()
+        except Exception as exc:    # pragma: no cover - failure path
+            errors.append(exc)
+
+    def churn_loop():
+        try:
+            for _ in range(6):
+                batchcost.clear_caches()
+                info = batchcost.cache_info()
+                assert all(v.hits >= 0 and v.misses >= 0
+                           for v in info.values())
+        except Exception as exc:    # pragma: no cover - failure path
+            errors.append(exc)
+
+    threads = [threading.Thread(target=score_loop) for _ in range(6)]
+    threads.append(threading.Thread(target=churn_loop))
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    # the storm must leave values correct and counters coherent
+    scalar = np.array([cost_workload(s, w, hw_analytical, mix)
+                       for s in specs])
+    np.testing.assert_allclose(cost_many(specs, w, hw_analytical, mix),
+                               scalar, rtol=1e-6)
+    info = batchcost.cache_info()
+    assert info["packed_spec"].currsize <= len(specs)
+    batchcost.clear_caches()
+    for layer, stats in batchcost.cache_info().items():
+        assert stats.hits == 0 and stats.misses == 0, layer
+        assert stats.currsize == 0, layer

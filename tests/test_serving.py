@@ -1,0 +1,244 @@
+"""Concurrent what-if serving engine (repro.serving) — correctness under
+coalescing, sessions, threads, and degenerate traffic."""
+import dataclasses
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import batchcost, devicecost, elements as el, whatif
+from repro.core.hardware import analytical_profile, hw1, hw2, hw3
+from repro.core.synthesis import Workload, cost_workload
+from repro.serving import DesignCalculatorService
+
+W = Workload(n_entries=200_000, n_queries=100)
+SKEWED = dataclasses.replace(W, zipf_alpha=1.5)
+GROWN = dataclasses.replace(W, n_entries=800_000)
+
+
+@pytest.fixture()
+def profiles():
+    return hw1(), hw2(), hw3()
+
+
+def _service(profiles, **kwargs):
+    kwargs.setdefault("window_s", 0.002)
+    return DesignCalculatorService(list(profiles), **kwargs)
+
+
+def _mixed_questions(h1, h2, h3):
+    """(kind, *args) tuples covering all three what-if kinds, several
+    specs, two workload variants and two hardware swaps."""
+    specs = [el.spec_btree(), el.spec_hash_table(), el.spec_skip_list(),
+             el.spec_trie()]
+    bloomed = whatif.add_bloom_filters(el.spec_hash_table())
+    qs = []
+    for i, spec in enumerate(specs):
+        qs.append(("design", spec, bloomed, W, h1))
+        qs.append(("hardware", spec, W, h1, (h2, h3)[i % 2]))
+        qs.append(("workload", spec, W, (SKEWED, GROWN)[i % 2], h2))
+    return qs
+
+
+def _ask(service, q):
+    kind = q[0]
+    if kind == "design":
+        return service.what_if_design(*q[1:])
+    if kind == "hardware":
+        return service.what_if_hardware(*q[1:])
+    return service.what_if_workload(*q[1:])
+
+
+def _scalar(q):
+    kind = q[0]
+    fn = {"design": whatif.what_if_design,
+          "hardware": whatif.what_if_hardware,
+          "workload": whatif.what_if_workload}[kind]
+    return fn(*q[1:], engine="scalar")
+
+
+def _assert_matches(got, oracle):
+    assert got.baseline_seconds == pytest.approx(
+        oracle.baseline_seconds, rel=1e-6)
+    assert got.variant_seconds == pytest.approx(
+        oracle.variant_seconds, rel=1e-6)
+    assert got.beneficial == oracle.beneficial
+    assert got.question == oracle.question
+
+
+def test_service_answers_match_scalar_oracle(profiles):
+    h1, h2, h3 = profiles
+    with _service(profiles) as svc:
+        for q in _mixed_questions(h1, h2, h3):
+            _assert_matches(_ask(svc, q), _scalar(q))
+
+
+def test_service_grouped_engine_parity(profiles):
+    h1, h2, h3 = profiles
+    with _service(profiles, engine="grouped") as svc:
+        q = ("design", el.spec_btree(), el.spec_csb_tree(), W, h1)
+        got = _ask(svc, q)
+        oracle = _scalar(q)
+        assert got.baseline_seconds == pytest.approx(
+            oracle.baseline_seconds, rel=1e-9)
+        assert got.variant_seconds == pytest.approx(
+            oracle.variant_seconds, rel=1e-9)
+
+
+def test_service_complete_design_matches_direct(profiles):
+    from repro.core.autocomplete import complete_design
+    h1, _, _ = profiles
+    with _service(profiles) as svc:
+        got = svc.complete_design((), W, h1, mix={"get": 100.0},
+                                  max_depth=2)
+    direct = complete_design((), W, h1, mix={"get": 100.0}, max_depth=2)
+    assert got.cost_seconds == pytest.approx(direct.cost_seconds, rel=1e-6)
+    assert got.explored == direct.explored
+
+
+def test_service_complete_design_no_completion_fails_future(profiles):
+    h1, _, _ = profiles
+    with _service(profiles) as svc:
+        # a non-terminal element as the only "terminal" admits no chain
+        fut = svc.submit_complete((), W, h1,
+                                  terminals=[el.hash_element(100)],
+                                  max_depth=1)
+        with pytest.raises(RuntimeError, match="no valid completion"):
+            fut.result()
+
+
+def test_concurrent_mixed_questions_match_scalar_oracle(profiles):
+    """The ISSUE acceptance test: N threads issuing mixed design /
+    hardware / workload questions through the service all match the
+    serial scalar oracle to 1e-6, and the fused scorer never retraces —
+    hardware-swap requests included (``max_batch=1`` keeps every batch
+    shape identical to the single-threaded warm pass)."""
+    h1, h2, h3 = profiles
+    questions = _mixed_questions(h1, h2, h3)
+    oracles = [_scalar(q) for q in questions]
+    with _service(profiles, window_s=0.0, max_batch=1) as svc:
+        for q in questions:            # warm pass compiles every shape
+            _ask(svc, q)
+        traces_before = devicecost.trace_count()
+        n_threads = 4
+        results = [[None] * len(questions) for _ in range(n_threads)]
+        errors = []
+
+        def worker(slot):
+            try:
+                for i, q in enumerate(questions):
+                    results[slot][i] = _ask(svc, q)
+            except Exception as exc:   # pragma: no cover - failure path
+                errors.append(exc)
+
+        threads = [threading.Thread(target=worker, args=(t,))
+                   for t in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not errors
+        # zero recompiles across the whole threaded phase (which includes
+        # every hardware-swap request)
+        assert devicecost.trace_count() == traces_before
+        for per_thread in results:
+            for got, oracle in zip(per_thread, oracles):
+                _assert_matches(got, oracle)
+        stats = svc.stats()
+        assert stats["answered"] == (n_threads + 1) * len(questions)
+        assert stats["failed"] == 0
+
+
+def test_burst_coalesces_into_few_batches(profiles):
+    h1, h2, h3 = profiles
+    questions = _mixed_questions(h1, h2, h3) * 3
+    with _service(profiles, window_s=0.25,
+                  max_batch=len(questions)) as svc:
+        _ask(svc, questions[0])        # warm so the batch serves quickly
+        futures = [getattr(svc, f"submit_{q[0]}")(*q[1:])
+                   for q in questions]
+        for f in futures:
+            f.result()
+        stats = svc.stats()
+    # the burst must actually coalesce: far fewer batches and scoring
+    # calls than questions (one scoring call per profile per batch)
+    assert stats["coalesced"] >= len(questions)
+    assert stats["batches"] <= 1 + len(questions) // 4
+    assert stats["score_calls"] < len(questions)
+    assert stats["max_batch"] > 1
+
+
+def test_session_pins_frontiers_across_global_cache_clears(profiles):
+    """A designer iterating on one baseline never re-packs it: even after
+    the global segment/frontier caches are dropped, the session's pinned
+    packed frontier answers the repeat question with zero packing."""
+    h1, _, _ = profiles
+    spec, variant = el.spec_btree(), el.spec_csb_tree()
+    with _service(profiles) as svc:
+        sess = svc.session("designer-1")
+        first = sess.what_if_design(spec, variant, W, h1)
+        assert svc.stats()["session_frontier_hits"] == 0
+        batchcost.clear_caches()       # simulate eviction by other traffic
+        again = sess.what_if_design(spec, variant, W, h1)
+        assert svc.stats()["session_frontier_hits"] == 1
+        # nothing was re-synthesized or re-packed for the repeat ask
+        assert batchcost.cache_info()["packed_spec"].misses == 0
+        assert again.baseline_seconds == pytest.approx(
+            first.baseline_seconds, rel=1e-12)
+        # distinct sessions do not share pins
+        other = svc.session("designer-2")
+        other.what_if_design(spec, variant, W, h1)
+        assert svc.stats()["session_frontier_hits"] == 1
+
+
+def test_empty_window_and_empty_frontier_tolerated(profiles):
+    h1, _, _ = profiles
+    with _service(profiles) as svc:
+        svc._serve_batch([])           # an empty coalescing window
+        assert svc.stats()["empty_windows"] == 1
+        # a degenerate evaluation (no specs) resolves, not crashes
+        from repro.serving.service import _Evaluation, _Request
+        from concurrent.futures import Future
+        ev = _Evaluation((), W, None, h1.name)
+        fut = Future()
+        svc._serve_batch([_Request([ev], lambda el_: ev.totals, fut, 0.0)])
+        assert fut.result().shape == (0,)
+
+
+def test_failed_question_does_not_poison_the_batch(profiles):
+    h1, _, _ = profiles
+    bad_hw = analytical_profile("HW-bad")
+    del bad_hw.models["random_memory_access"]
+    with _service(profiles) as svc:
+        svc.register_hardware(bad_hw)
+        good = svc.submit_design(el.spec_btree(), el.spec_csb_tree(), W, h1)
+        bad = svc.submit_design(el.spec_btree(), el.spec_csb_tree(), W,
+                                bad_hw)
+        with pytest.raises(KeyError, match="no fitted"):
+            bad.result()
+        assert good.result().baseline_seconds > 0
+        assert svc.stats()["failed"] == 1
+
+
+def test_submit_after_stop_raises(profiles):
+    h1, _, _ = profiles
+    svc = _service(profiles)
+    svc.stop()
+    with pytest.raises(RuntimeError, match="not running"):
+        svc.submit_hardware(el.spec_btree(), W, h1, h1)
+
+
+def test_unregistered_profile_name_raises(profiles):
+    with _service(profiles) as svc:
+        with pytest.raises(KeyError, match="unregistered"):
+            svc.submit_hardware(el.spec_btree(), W, "HW1", "HW-unknown")
+
+
+def test_stop_drains_pending_requests(profiles):
+    h1, h2, _ = profiles
+    svc = _service(profiles, window_s=0.05)
+    futures = [svc.submit_hardware(el.spec_btree(), W, h1, h2)
+               for _ in range(8)]
+    svc.stop(timeout=30.0)
+    for f in futures:
+        assert f.result().baseline_seconds > 0

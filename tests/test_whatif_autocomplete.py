@@ -38,6 +38,40 @@ def test_what_if_workload_skew(hw_analytical):
     assert ans.beneficial  # skew improves B-tree gets (Fig. 8b)
 
 
+def test_what_if_workload_fused_path_reuses_cached_segments(hw_analytical):
+    """The workload question rides pack_frontier + concat_frontiers like
+    the design/hardware kinds: a repeat question is pure cache hits, and
+    a new variant against the same baseline re-packs only the variant
+    (the baseline segment is spliced from the cache)."""
+    from repro.core import batchcost
+    spec = el.spec_btree()
+    skew1 = dataclasses.replace(W, zipf_alpha=1.2)
+    skew2 = dataclasses.replace(W, zipf_alpha=1.5)
+    batchcost.clear_caches()
+    first = whatif.what_if_workload(spec, W, skew1, hw_analytical)
+    seg_misses = batchcost.cache_info()["packed_spec"].misses
+    assert seg_misses == 2            # (chain, W) + (chain, skew1)
+    again = whatif.what_if_workload(spec, W, skew1, hw_analytical)
+    info = batchcost.cache_info()
+    assert info["packed_spec"].misses == seg_misses
+    assert info["frontier"].hits >= 2     # both one-spec frontiers reused
+    assert again.baseline_seconds == pytest.approx(
+        first.baseline_seconds, rel=1e-12)
+    assert again.variant_seconds == pytest.approx(
+        first.variant_seconds, rel=1e-12)
+    # a different variant against the same baseline packs ONE new segment
+    whatif.what_if_workload(spec, W, skew2, hw_analytical)
+    assert batchcost.cache_info()["packed_spec"].misses == seg_misses + 1
+    # and the spliced fused answer still matches the scalar oracle
+    scalar = whatif.what_if_workload(spec, W, skew1, hw_analytical,
+                                     engine="scalar")
+    assert first.baseline_seconds == pytest.approx(
+        scalar.baseline_seconds, rel=1e-6)
+    assert first.variant_seconds == pytest.approx(
+        scalar.variant_seconds, rel=1e-6)
+    assert first.beneficial == scalar.beneficial
+
+
 def test_whatif_fused_parity_with_scalar(hw_analytical):
     """All three what-if kinds ride the batched/fused path by default;
     their answers must match the scalar cost_workload oracle to the fused
