@@ -1,11 +1,18 @@
 """Fig. 8: cache-conscious designs (CSB+ vs B+) across data sizes, and
-workload skew (Zipf alpha sweep) — predicted vs measured."""
+workload skew (Zipf alpha sweep) — predicted vs measured.
+
+The skew predictions run through the PR-5 workload-sweep engine
+(:func:`repro.core.batchcost.cost_sweep`): the whole (designs x alphas)
+grid is one fused scoring call, checked against the scalar
+``synthesis.cost`` oracle cell by cell."""
 from __future__ import annotations
+
+import dataclasses
 
 import numpy as np
 
 from benchmarks.common import container_profile, emit
-from repro.core import elements as el, structures as S, synthesis
+from repro.core import batchcost, elements as el, structures as S, synthesis
 from repro.core.synthesis import Workload
 
 ALPHAS = (0.0, 0.5, 1.0, 1.5, 2.0)
@@ -44,29 +51,38 @@ def run(quick: bool = False) -> None:
                          "predicted_us": predicted * 1e6})
     emit("fig8a_cache_conscious", rows)
 
-    # (b) skew sweep: predicted latency must fall with alpha, faster for B+
+    # (b) skew sweep: predicted latency must fall with alpha, faster for
+    # B+.  The whole (designs x alphas) prediction grid is ONE fused
+    # workload-sweep call; the scalar expert system stays the per-cell
+    # oracle.
     rows = []
     n = 50_000 if quick else 200_000
     keys = rng.permutation(n * 2)[:n].astype(np.int64)
     values = keys.copy()
-    for name, cls, spec in (
-            ("btree", S.BPlusTree, el.spec_btree()),
-            ("csb_tree", S.CSBTree, el.spec_csb_tree())):
+    designs = (("btree", S.BPlusTree, el.spec_btree()),
+               ("csb_tree", S.CSBTree, el.spec_csb_tree()))
+    base = Workload(n_entries=n, n_queries=200)
+    workloads = [dataclasses.replace(base, zipf_alpha=alpha)
+                 for alpha in ALPHAS]
+    grid = batchcost.cost_sweep([spec for _, _, spec in designs],
+                                workloads, hw, {"get": 1.0})
+    oracle = np.asarray(
+        [[synthesis.cost("get", spec, w, hw)
+          for _, _, spec in designs] for w in workloads])
+    np.testing.assert_allclose(grid, oracle, rtol=1e-6)
+    for d, (name, cls, spec) in enumerate(designs):
         structure = cls()
         structure.bulk_load(keys, values)
-        for alpha in ALPHAS:
+        for a, alpha in enumerate(ALPHAS):
             queries = _zipf_queries(np.sort(keys), 200, alpha, rng)
             import time
             t0 = time.perf_counter()
             for q in queries:
                 structure.get(int(q))
             measured = (time.perf_counter() - t0) / len(queries)
-            predicted = synthesis.cost(
-                "get", spec, Workload(n_entries=n, n_queries=200,
-                                      zipf_alpha=alpha), hw)
             rows.append({"structure": name, "alpha": alpha,
                          "measured_us": measured * 1e6,
-                         "predicted_us": predicted * 1e6})
+                         "predicted_us": float(grid[a, d]) * 1e6})
     emit("fig8b_skew", rows)
 
 

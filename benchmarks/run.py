@@ -3,8 +3,10 @@
     PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
     PYTHONPATH=src python -m benchmarks.run --smoke
 
-``--smoke`` is the fast validation path: it runs the search-engine and
-what-if-serving parity checks at tiny sizes, writes **no** artifacts and
+``--smoke`` is the fast validation path: it runs the search-engine,
+workload-sweep and what-if-serving parity checks at tiny sizes (every
+engine against the scalar oracle, grouped sweep grids bit-identical to
+per-workload loops, zero-recompile probes), writes **no** artifacts and
 appends nothing to the BENCH_search / BENCH_serving trajectories —
 CI-friendly, seconds not minutes.  The full trajectory run stays one
 command (no flags).

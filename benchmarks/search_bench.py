@@ -1,9 +1,10 @@
 """BENCH_search: designs-costed-per-second across costing engines (perf CI).
 
-Measures four searches through every costing path — the scalar per-design
+Measures five searches through every costing path — the scalar per-design
 ``cost_workload`` loop, the PR-1 grouped ``cost_many`` engine, the PR-2
-fused device-resident engine (:mod:`repro.core.devicecost`), and the PR-3
-template-vectorized packer (:mod:`repro.core.templatecost`):
+fused device-resident engine (:mod:`repro.core.devicecost`), the PR-3
+template-vectorized packer (:mod:`repro.core.templatecost`), and the PR-5
+workload-sweep engine (:func:`repro.core.batchcost.cost_sweep`):
 
 1. fig9-style auto-completion search, cold caches per run *and*
    steady-state (warm enumeration/segment/frontier memos — the what-if
@@ -14,7 +15,12 @@ template-vectorized packer (:mod:`repro.core.templatecost`):
    construction only — no scoring), so the construction/scoring split of
    the Amdahl gap stays visible across future PRs;
 4. steady-state scoring of a >=4096-design frontier against a verbatim
-   reconstruction of the PR-1 ``cost_many`` as the fixed baseline.
+   reconstruction of the PR-1 ``cost_many`` as the fixed baseline;
+5. an 8-workload x >=512-design **sweep** (read/write ratio + skew axis)
+   through one fused ``cost_sweep`` call vs the pre-PR-5 capability —
+   looping ``cost_many`` once per workload — with every cell checked
+   against both engines' grids and the scalar oracle, and a
+   zero-recompile probe across repeat sweeps and a hardware swap.
 
 Each run *appends* one labelled entry to
 experiments/bench/BENCH_search.json (a trajectory accumulating across PRs
@@ -25,6 +31,7 @@ or asserting perf bars (the ``benchmarks/run.py --smoke`` fast path).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 import time
 from typing import Dict, List
@@ -39,6 +46,9 @@ TARGET_SPEEDUP = 3.0
 #: the PR-3 acceptance bar: end-to-end auto-completion (cold and steady
 #: state) and frontier packing vs the reconstructed PR-2 pipeline
 E2E_TARGET_SPEEDUP = 3.0
+#: the PR-5 acceptance bar: steady-state 8-workload sweep vs looping
+#: cost_many per workload (measured 3.5-4.1x on this container)
+SWEEP_TARGET_SPEEDUP = 3.0
 
 
 def _pr1_cost_many(specs, workload, hw, mix) -> np.ndarray:
@@ -323,6 +333,87 @@ def _bench_frontier_packing(workload, hw, mix, min_designs: int) -> Dict:
     }
 
 
+def _bench_workload_sweep(workload, hw, min_designs: int,
+                          n_points: int = 8, smoke: bool = False) -> Dict:
+    """The PR-5 scenario: an (8-workload x >=512-design) continuum —
+    read fraction and skew varying together — scored as ONE fused sweep
+    call vs the pre-PR-5 capability (looping ``cost_many`` per
+    workload).  Steady state on both sides: warm segment/frontier/sweep
+    memos, identical frontiers."""
+    from repro.core import batchcost, devicecost
+    from repro.core.autocomplete import (default_candidates,
+                                         default_terminals,
+                                         enumerate_completions)
+    from repro.core.hardware import hw1
+    from repro.core.synthesis import cost_workload
+
+    depth = 2 if smoke else 3
+    frontier = list(enumerate_completions((), default_candidates(),
+                                          default_terminals(), depth,
+                                          "sweep-bench"))
+    while len(frontier) < min_designs:     # tile up to the design floor
+        frontier = frontier + frontier
+    n = len(frontier)
+    fracs = np.linspace(1.0, 0.0, n_points)
+    alphas = np.linspace(0.0, 2.1, n_points)
+    workloads = [dataclasses.replace(workload, zipf_alpha=float(a))
+                 for a in alphas]
+    mixes = [{"get": float(f) * 100.0, "update": (1.0 - float(f)) * 100.0}
+             for f in fracs]
+
+    # -- parity: the hard invariant, asserted in smoke and full runs ------
+    grid = batchcost.cost_sweep(frontier, workloads, hw, mixes)
+    loop = np.stack([batchcost.cost_many(frontier, w, hw, m)
+                     for w, m in zip(workloads, mixes)])
+    np.testing.assert_allclose(grid, loop, rtol=1e-6)
+    grid_grouped = batchcost.cost_sweep(frontier, workloads, hw, mixes,
+                                        engine="grouped")
+    loop_grouped = np.stack([batchcost.cost_many(frontier, w, hw, m,
+                                                 engine="grouped")
+                             for w, m in zip(workloads, mixes)])
+    np.testing.assert_array_equal(grid_grouped, loop_grouped)
+    np.testing.assert_allclose(grid, grid_grouped, rtol=1e-6)
+    cells = np.linspace(0, n - 1, 5).astype(int)
+    scalar = np.asarray([[cost_workload(frontier[d], w, hw, m)
+                          for d in cells]
+                         for w, m in zip(workloads, mixes)])
+    np.testing.assert_allclose(grid[:, cells], scalar, rtol=1e-6)
+    assert np.array_equal(np.argmin(grid, axis=1),
+                          np.argmin(grid_grouped, axis=1))
+
+    # -- zero recompiles across repeat sweeps and a hardware swap ---------
+    other = hw1()
+    batchcost.cost_sweep(frontier, workloads, other, mixes)  # warm shapes
+    traces = devicecost.trace_count()
+    batchcost.cost_sweep(frontier, workloads, hw, mixes)
+    batchcost.cost_sweep(frontier, workloads, other, mixes)
+    assert devicecost.trace_count() == traces, \
+        "repeat sweeps / hardware swaps must not retrace the fused kernel"
+
+    import gc
+    gc.collect()   # timings below compare ~ms-scale dispatches
+    sweep_s = _steady_state(
+        lambda: batchcost.cost_sweep(frontier, workloads, hw, mixes),
+        reps=11)
+    loop_s = _steady_state(
+        lambda: [batchcost.cost_many(frontier, w, hw, m)
+                 for w, m in zip(workloads, mixes)], reps=11)
+    packed = batchcost.pack_sweep(frontier, workloads, mixes)
+    cells_total = n * n_points
+    return {
+        "search": "workload_sweep",
+        "designs": n,
+        "workloads": n_points,
+        "records": len(packed.frontiers[0].ids) * n_points,
+        "fused_s": sweep_s,
+        "sweep_steady_s": sweep_s,
+        "per_workload_steady_s": loop_s,
+        "sweep_cells_per_s": cells_total / max(sweep_s, 1e-12),
+        "per_workload_cells_per_s": cells_total / max(loop_s, 1e-12),
+        "speedup_sweep_vs_per_workload": loop_s / max(sweep_s, 1e-12),
+    }
+
+
 def _bench_hillclimb(workload, hw, mix, steps: int) -> Dict:
     row = bench_climb(workload, hw, mix, steps=steps)
     return {
@@ -353,6 +444,11 @@ def run(quick: bool = False, smoke: bool = False) -> None:
 
     batchcost.clear_caches()   # measure from cold synthesis caches
     rows: List[Dict] = [
+        # the sweep's ~ms-scale steady-state timings run first, before
+        # the 6932-design benches fragment the heap
+        _bench_workload_sweep(workload, hw,
+                              min_designs=64 if smoke else 512,
+                              n_points=4 if smoke else 8, smoke=smoke),
         _bench_complete_design(workload, hw, mix,
                                max_depth=2 if quick else 3),
         _bench_hillclimb(workload, hw, mix, steps=5 if quick else 30),
@@ -361,11 +457,13 @@ def run(quick: bool = False, smoke: bool = False) -> None:
         _bench_frontier_scoring(workload, hw, mix,
                                 min_designs=1024 if quick else 4096),
     ]
-    keys = ["search", "designs", "scalar_s", "grouped_s", "fused_s",
-            "fused_steady_s", "fused_score_s", "pack_cold_s", "pr2_e2e_s",
+    keys = ["search", "designs", "workloads", "scalar_s", "grouped_s",
+            "fused_s", "fused_steady_s", "fused_score_s", "pack_cold_s",
+            "pr2_e2e_s", "sweep_steady_s", "per_workload_steady_s",
             "fused_designs_per_s", "pack_designs_per_s",
-            "speedup_fused_vs_pr1", "speedup_e2e_cold_vs_pr2",
-            "speedup_e2e_steady_vs_pr2", "design"]
+            "sweep_cells_per_s", "speedup_fused_vs_pr1",
+            "speedup_e2e_cold_vs_pr2", "speedup_e2e_steady_vs_pr2",
+            "speedup_sweep_vs_per_workload", "design"]
     if smoke:
         # parity-only pass: no trajectory append, no perf bars (tiny
         # sizes make wall-clock ratios meaningless)
@@ -374,14 +472,15 @@ def run(quick: bool = False, smoke: bool = False) -> None:
         return
     # perf bars come BEFORE the trajectory append: a regressed run must
     # fail without permanently writing its entry into the cross-PR file
-    scoring = rows[-1]
+    by_name = {row["search"]: row for row in rows}
+    scoring = by_name["frontier_scoring"]
     print(f"fused scoring vs PR-1 cost_many: "
           f"{scoring['speedup_fused_scoring_vs_pr1']:.1f}x "
           f"(target >= {TARGET_SPEEDUP:.0f}x) on "
           f"{scoring['designs']} designs")
     assert scoring["speedup_fused_scoring_vs_pr1"] >= TARGET_SPEEDUP, \
         "fused frontier scoring regressed below the PR-2 acceptance bar"
-    e2e = rows[0]
+    e2e = by_name["complete_design"]
     print(f"auto-completion vs PR-2 pipeline: "
           f"{e2e['speedup_e2e_cold_vs_pr2']:.1f}x cold / "
           f"{e2e['speedup_e2e_steady_vs_pr2']:.1f}x steady "
@@ -391,7 +490,7 @@ def run(quick: bool = False, smoke: bool = False) -> None:
         "cold end-to-end search regressed below the PR-3 acceptance bar"
     assert e2e["speedup_e2e_steady_vs_pr2"] >= E2E_TARGET_SPEEDUP, \
         "steady-state search regressed below the PR-3 acceptance bar"
-    packing = rows[2]
+    packing = by_name["frontier_packing"]
     print(f"frontier packing vs PR-2 loop: "
           f"{packing['speedup_pack_vs_pr2']:.1f}x cold on "
           f"{packing['designs']} designs")
@@ -400,9 +499,18 @@ def run(quick: bool = False, smoke: bool = False) -> None:
     # noise on the 200k-record frontier can't flake the perf CI
     assert packing["speedup_pack_vs_pr2"] >= 2.5, \
         "template-vectorized packing regressed below the PR-3 bar"
+    sweep = by_name["workload_sweep"]
+    print(f"workload sweep ({sweep['workloads']} workloads x "
+          f"{sweep['designs']} designs) vs per-workload cost_many: "
+          f"{sweep['speedup_sweep_vs_per_workload']:.1f}x steady-state "
+          f"(target >= {SWEEP_TARGET_SPEEDUP:.0f}x)")
+    assert sweep["speedup_sweep_vs_per_workload"] >= \
+        SWEEP_TARGET_SPEEDUP, \
+        "the workload-sweep engine regressed below the PR-5 bar"
     emit_trajectory(
         "BENCH_search",
-        "PR3 template-vectorized synthesis + incremental frontier packing",
+        "PR5 workload-generalized frontier packing + batched "
+        "workload-sweep engine",
         rows, keys=keys)
 
 

@@ -40,3 +40,10 @@ print("   ", whatif.what_if_workload(base, workload, skewed,
 print("Q5: ...and is there a better design for that skewed workload?")
 result = complete_design((), skewed, hw3(), mix={"get": 100.0}, max_depth=2)
 print("   ", result.summary())
+
+print("Q6: And across the whole skew axis 0.0 -> 2.0 at once?")
+axis = [dataclasses.replace(workload, zipf_alpha=a)
+        for a in (0.0, 0.5, 1.0, 1.5, 2.0)]
+sweep = whatif.workload_sweep([base, whatif.add_bloom_filters(base)],
+                              axis, hw3())
+print("   ", sweep.summary().replace("\n", "\n    "))

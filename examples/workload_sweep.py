@@ -1,0 +1,62 @@
+"""The design continuum, one fused question: best design vs read fraction.
+
+    PYTHONPATH=src python examples/workload_sweep.py
+
+A designer asks "as my workload shifts from write-heavy to read-heavy,
+when does the best data structure change — and what does the crossover
+cost?".  Pre-PR-5 this was one auto-completion per sweep point (each
+re-deriving the same chains' geometry); now the whole
+(designs x workloads) grid packs shared template statics once and scores
+in ONE fused call (`workload_sweep` / `design_continuum`).
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core import whatif
+from repro.core.autocomplete import design_continuum, enumerate_frontier
+from repro.core.hardware import hw3
+from repro.core.synthesis import Workload
+
+workload = Workload(n_entries=1_000_000, n_queries=100)
+fractions = [i / 10 for i in range(11)]           # read fraction 0.0 -> 1.0
+mixes = whatif.read_fraction_mixes(fractions)
+workloads = [workload] * len(fractions)
+
+print("Q: how does the best design change with the read fraction?")
+results = design_continuum((), workloads, hw3(), mixes=mixes, max_depth=2)
+print(f"   {results[0].explored} candidate designs x "
+      f"{len(fractions)} workload points, "
+      f"answered in {results[0].elapsed_seconds:.2f}s\n")
+
+print(f"{'read%':>6}  {'best design':<42} {'cost/op':>11}")
+for f, r in zip(fractions, results):
+    print(f"{f * 100:5.0f}%  {r.spec.describe():<42} "
+          f"{r.cost_seconds:10.3e}s")
+
+# The full grid is one call too — chart the continuum of a few named
+# designs against the winner (an ASCII "plot"; totals[w, d]).
+specs = list(enumerate_frontier((), max_depth=2, name="sweep-example"))
+answer = whatif.workload_sweep(specs, workloads, hw3(), mixes)
+best = answer.totals.min(axis=1)
+print("\ncheapest-design cost across the axis (normalized bar):")
+for f, b in zip(fractions, best):
+    bar = "#" * max(int(round(40 * b / best.max())), 1)
+    print(f"{f * 100:5.0f}%  {bar:<42} {b:9.3e}s")
+
+switches = [i for i in range(1, len(results))
+            if results[i].spec.describe() != results[i - 1].spec.describe()]
+if switches:
+    for i in switches:
+        print(f"\ncrossover at read fraction {fractions[i]:.1f}: "
+              f"{results[i - 1].spec.describe()} -> "
+              f"{results[i].spec.describe()}")
+else:
+    print(f"\nno crossover: {results[0].spec.describe()} wins the "
+          f"whole axis")
+print(f"grid shape {answer.totals.shape}, "
+      f"argmin parity with np.argmin: "
+      f"{bool((answer.best_indices == np.argmin(answer.totals, 1)).all())}")

@@ -26,6 +26,12 @@ per-spec segment reuse (:mod:`repro.core.batchcost` /
 cached element-chain hashes so a chain costed in an earlier round is
 never packed or scored again — ``explored``/``designs_costed`` count
 unique designs.
+
+``design_continuum`` (PR 5) runs one auto-completion frontier against a
+whole *workload axis* — a read/write-ratio or skew sweep — in a single
+fused (designs x workloads) scoring call via
+:func:`repro.core.batchcost.cost_sweep`, returning the best design per
+sweep point (the continuum curves of *Learning Key-Value Store Design*).
 """
 from __future__ import annotations
 
@@ -198,6 +204,45 @@ def complete_design(partial: Sequence[Element], workload: Workload,
     best = int(np.argmin(totals))  # first minimum — Algorithm 1's strict <
     return SearchResult(frontier[best], float(totals[best]), len(frontier),
                         time.perf_counter() - t0)
+
+
+def complete_design_sweep(partial: Sequence[Element],
+                          workloads: Sequence[Workload],
+                          hw: HardwareProfile,
+                          candidates: Optional[Sequence[Element]] = None,
+                          terminals: Optional[Sequence[Element]] = None,
+                          mixes=None,
+                          max_depth: int = 3,
+                          name: str = "auto",
+                          engine: str = "fused") -> List[SearchResult]:
+    """Algorithm 1 across a whole workload axis: one enumeration, one
+    (designs x workloads) fused scoring call, one best design per point.
+
+    The sweep twin of :func:`complete_design`: ``workloads`` (plus
+    optional per-point ``mixes`` — see
+    :func:`repro.core.batchcost.normalize_points`) define the sweep
+    axis; the returned list holds each point's winning design.  Each
+    per-point result is identical to calling ``complete_design`` with
+    that point's (workload, mix) — asserted in ``tests/test_sweep.py``.
+    """
+    t0 = time.perf_counter()
+    frontier = list(enumerate_frontier(partial, candidates, terminals,
+                                       max_depth, name))
+    if not frontier:
+        raise RuntimeError("no valid completion found")
+    grid = batchcost.cost_sweep(frontier, workloads, hw, mixes,
+                                engine=engine)
+    elapsed = time.perf_counter() - t0
+    results = []
+    for row in grid:
+        best = int(np.argmin(row))   # first minimum — Algorithm 1's strict <
+        results.append(SearchResult(frontier[best], float(row[best]),
+                                    len(frontier), elapsed))
+    return results
+
+
+#: the paper-facing name: the best-design-vs-workload continuum curve
+design_continuum = complete_design_sweep
 
 
 # ---------------------------------------------------------------------------

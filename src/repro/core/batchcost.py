@@ -41,14 +41,25 @@ Public API
     Splice already-packed frontiers into one — hill-climb/beam rounds and
     ``whatif`` baseline+variant pairs compose retained frontiers instead
     of re-packing every design.
+``pack_sweep(specs, workloads, mixes)`` / ``cost_sweep(...)``
+    The **workload-sweep engine** (PR 5): a (designs x workloads) grid —
+    a read/write-ratio, skew, selectivity or data-size continuum — packed
+    by splicing the shared workload-free template statics with
+    per-workload geometry columns (:func:`repro.core.templatecost.
+    pack_points`) and scored in ONE fused call
+    (:func:`repro.core.devicecost.score_sweep`: bank gathers issued once
+    for all workloads).  ``cost_sweep`` returns the ``[W, D]`` totals
+    grid; hardware stays a pure parameter-table swap.
+    ``concat_sweeps(parts)`` splices sweeps over the same points along
+    the design axis (the serving coalescing primitive).
 ``compiled_operation(op, spec, workload)``
     The cached compiled form of one operation's breakdown through the
     *scalar* expert system — the per-design oracle the vectorized packer
     is tested against (and the ``cost_one`` fast path).
 ``clear_caches()``
     Drop every memo in the synthesis/packing stack (tests,
-    element-library edits) — including the template, segment and frontier
-    caches, and any cache registered via :func:`register_cache`.
+    element-library edits) — including the template, segment, frontier
+    and sweep caches, and any cache registered via :func:`register_cache`.
 
 All memo layers are thread-safe: the insertable dict caches (and the
 interning/device-table state in :mod:`repro.core.devicecost`) share the
@@ -61,11 +72,17 @@ values).
 
 Caching layers (all keyed on hashable, frozen inputs — hardware is *not*
 part of any key, so re-costing a frontier on new hardware touches no
-synthesis code at all):
+synthesis code at all; the full memo map lives in
+``docs/cost_pipeline.md`` and the key invariants are asserted by
+``tests/test_cache_keys.py``):
 
-1. ``chain_geometry`` in :mod:`repro.core.templatecost` — the block
-   division simulation per (element chain, workload), and the scalar
-   ``instantiate`` twin in :mod:`repro.core.synthesis`.
+1. ``chain_statics`` / ``segment_statics`` in
+   :mod:`repro.core.templatecost` — the workload-FREE template half of
+   every segment (level structure, regions, record model-ids), keyed on
+   (chain, depth signature) and (template, ops); a workload sweep
+   re-derives only numeric columns.  ``chain_geometry`` layers one
+   workload's numerics on top, and the scalar ``instantiate`` twin lives
+   in :mod:`repro.core.synthesis`.
 2. The per-(n_nodes, zipf_alpha) skew weights and per-template
    ``symbolic_breakdown`` schemas, memoized in synthesis.
 3. The *segment cache* here: each spec's mix-weighted, tile-padded
@@ -73,7 +90,8 @@ synthesis code at all):
    batch by the vectorized packer, reused record-for-record by later
    frontiers containing the same chain.
 4. The *frontier cache*: whole packed frontiers per (chains, workload,
-   mix) — the steady-state what-if-serving hit path.
+   mix) — and the *sweep cache*: whole (designs x workloads) grids per
+   (chains, points) — the steady-state what-if-serving hit paths.
 5. ``compiled_operation`` per (op, chain, workload) — scalar-oracle path
    only.
 """
@@ -178,9 +196,11 @@ def compiled_operation(op: str, spec: DataStructureSpec,
 
 
 #: per-spec packed segments — (chain, workload, mix) -> (ids, sizes, weights)
-_segment_cache = _DictCache(maxsize=65536)
+_segment_cache = _DictCache(maxsize=65536, name="packed_spec")
 #: whole packed frontiers — (chains, workload, mix) -> PackedFrontier
-_frontier_cache = _DictCache(maxsize=16)
+_frontier_cache = _DictCache(maxsize=16, name="frontier")
+#: whole packed sweeps — (chains, points) -> PackedSweep
+_sweep_cache = _DictCache(maxsize=8, name="sweep")
 
 #: caches owned by other modules (e.g. autocomplete's frontier
 #: enumeration memo) that must drain with ours: name -> (info_fn, clear_fn)
@@ -202,6 +222,7 @@ def clear_caches() -> None:
         _compiled_operation.cache_clear()
         _segment_cache.clear()
         _frontier_cache.clear()
+        _sweep_cache.clear()
         templatecost.clear_template_caches()
         clear_synthesis_caches()
         for _, clear_fn in _EXTERNAL_CACHES.values():
@@ -216,6 +237,7 @@ def cache_info() -> Dict[str, Tuple]:
         info = {"compiled_operation": _compiled_operation.cache_info(),
                 "packed_spec": _segment_cache.info(),
                 "frontier": _frontier_cache.info(),
+                "sweep": _sweep_cache.info(),
                 "instantiate": _instantiate_levels.cache_info(),
                 "zipf_mass": _zipf_collision_mass.cache_info(),
                 "symbolic_breakdown": symbolic_breakdown.cache_info()}
@@ -368,6 +390,224 @@ def concat_frontiers(parts: Sequence[PackedFrontier]) -> PackedFrontier:
         np.concatenate([p.tile_segments + off
                         for p, off in zip(parts, offsets)]),
         sum(p.n_segments for p in parts))
+
+
+# ---------------------------------------------------------------------------
+# Workload sweeps: (designs x workloads) grids as one scoring product
+# ---------------------------------------------------------------------------
+#: one sweep point: (workload, frozen mix items)
+SweepPoint = Tuple[Workload, Tuple[Tuple[str, float], ...]]
+
+
+def normalize_points(workloads: Sequence[Workload],
+                     mixes=None) -> Tuple[SweepPoint, ...]:
+    """Canonical (workload, mix_items) points of a sweep.
+
+    ``mixes`` may be ``None`` (each workload's default get-only mix), one
+    mix dict applied to every point, or a sequence of per-point mix
+    dicts (a read/write-ratio sweep varies the mix, not the workload).
+    """
+    workloads = tuple(workloads)
+    if not workloads:
+        raise ValueError("a sweep needs at least one workload point")
+    if mixes is None or isinstance(mixes, dict):
+        mixes = [mixes] * len(workloads)
+    else:
+        mixes = list(mixes)
+        if len(mixes) != len(workloads):
+            raise ValueError(f"{len(mixes)} mixes for "
+                             f"{len(workloads)} workloads")
+    return tuple(
+        (w, tuple((mix or {"get": float(w.n_queries)}).items()))
+        for w, mix in zip(workloads, mixes))
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedSweep:
+    """A (designs x workloads) grid packed for fused scoring.
+
+    One :class:`PackedFrontier` per sweep point over the same designs.
+    When the grid is *rectangular* — every point shares the record layout
+    (same template statics; the common case for read/write-ratio, skew,
+    selectivity or query-count sweeps at a fixed data size) — the frozen
+    per-point frontiers share one interned ids array, and ``score``
+    issues ONE :func:`repro.core.devicecost.score_sweep` call whose bank
+    gathers are amortized across every workload.  Non-rectangular sweeps
+    (``n_entries`` changing a chain's level structure) degrade gracefully
+    to one spliced flat fused call.
+
+    Hardware never enters the packing: scoring the same sweep against
+    another profile is a pure parameter-table swap (zero recompilation,
+    asserted in ``tests/test_sweep.py``).
+    """
+
+    points: Tuple[SweepPoint, ...]
+    n_designs: int
+    frontiers: Tuple[PackedFrontier, ...]   # one per point
+
+    @property
+    def n_points(self) -> int:
+        return len(self.points)
+
+    @property
+    def rectangular(self) -> bool:
+        cached = self.__dict__.get("_rect")
+        if cached is None:
+            f0 = self.frontiers[0] if self.frontiers else None
+            cached = all(
+                f.ids is f0.ids or np.array_equal(f.ids, f0.ids)
+                for f in self.frontiers[1:])
+            object.__setattr__(self, "_rect", cached)
+        return cached
+
+    def _sweep_arrays(self) -> Tuple:
+        """(host ids, device-committed arrays), built once per sweep.
+
+        Steady-state serving re-scores the same retained sweep; caching
+        the padded float32 stack — resident on device when it fits one
+        fused chunk (:func:`repro.core.devicecost.to_device_sweep`) —
+        makes each repeat score a pure fused dispatch: no padding, no
+        dtype conversion, no copies in either direction (the host-side
+        ids stay cached for the scorer's availability check).
+        """
+        cached = self.__dict__.get("_f32")
+        if cached is None:
+            f0 = self.frontiers[0]
+            bucket = devicecost._pow2(len(f0.ids), 16)
+            padded = devicecost.pad_sweep(
+                np.asarray(f0.ids, np.int32),
+                np.stack([f.sizes for f in self.frontiers]),
+                np.stack([f.weights for f in self.frontiers]),
+                np.asarray(f0.tile_segments, np.int32), bucket)
+            cached = (padded[0], devicecost.to_device_sweep(*padded))
+            object.__setattr__(self, "_f32", cached)
+        return cached
+
+    def score(self, hw: HardwareProfile, engine: str = "fused"
+              ) -> np.ndarray:
+        """The ``[n_points, n_designs]`` totals grid under ``hw``.
+
+        ``engine="grouped"`` scores each point's frontier through the
+        PR-1 grouped oracle — bit-identical to looping ``cost_many(...,
+        engine="grouped")`` per workload.
+        """
+        if self.n_designs == 0 or not self.points:
+            return np.zeros((self.n_points, self.n_designs))
+        if engine == "fused":
+            if self.rectangular:
+                host_ids, (ids, sizes, weights, tiles) = \
+                    self._sweep_arrays()
+                return devicecost.score_sweep(ids, sizes, weights, tiles,
+                                              self.n_designs, hw,
+                                              host_ids=host_ids)
+            # non-rectangular: one spliced flat fused call over the
+            # whole grid (point-major), not one dispatch per point
+            flat = concat_frontiers(list(self.frontiers))
+            return flat.score(hw).reshape(self.n_points, self.n_designs)
+        if engine != "grouped":
+            raise ValueError(f"unknown engine: {engine!r}")
+        return np.stack([f.score(hw, engine=engine)
+                         for f in self.frontiers])
+
+
+def pack_sweep(specs: Sequence[DataStructureSpec],
+               workloads: Sequence[Workload],
+               mixes=None) -> PackedSweep:
+    """Pack a (designs x workloads) grid, splicing shared template
+    statics with per-workload geometry columns.
+
+    Incremental like :func:`pack_frontier`: per-(spec, point) segments
+    come from the segment cache when present; only genuinely new
+    (chain, point) cells reach the workload-axis packer
+    (:func:`repro.core.templatecost.pack_points` — statics and record
+    layout computed once per structural group, numerics batched over the
+    workload axis).  Each point's frontier also lands in the frontier
+    cache, so a later single-workload ``cost_many`` against any sweep
+    point is a pure cache hit — and vice versa.  A repeated identical
+    sweep is one sweep-cache hit.
+    """
+    points = normalize_points(workloads, mixes)
+    specs = list(specs)
+    chains = tuple(spec.chain for spec in specs)
+    sweep_key = (chains, points)
+    cached = _sweep_cache.get(sweep_key)
+    if cached is not None:
+        return cached
+    per_point: List[List[Optional[Tuple[np.ndarray, ...]]]] = []
+    #: missing-point pattern -> ordered unique chains missing exactly there
+    missing: Dict[Tuple[int, ...], List[Tuple[Element, ...]]] = {}
+    missing_pts: Dict[Tuple[Element, ...], List[int]] = {}
+    for pi, (workload, mix_items) in enumerate(points):
+        row: List[Optional[Tuple[np.ndarray, ...]]] = []
+        for chain in chains:
+            seg = _segment_cache.get((chain, workload, mix_items))
+            row.append(seg)
+            if seg is None:
+                pts = missing_pts.setdefault(chain, [])
+                if not pts or pts[-1] != pi:   # dedupe repeated chains
+                    pts.append(pi)
+        per_point.append(row)
+    for chain, pts in missing_pts.items():
+        missing.setdefault(tuple(pts), []).append(chain)
+    # only genuinely new (chain, point) cells reach the packer: chains
+    # already cached for SOME points re-pack only the points they miss
+    for pts, group_chains in missing.items():
+        packed = templatecost.pack_points(
+            group_chains, [points[pi] for pi in pts])
+        pos_of = {chain: i for i, chain in enumerate(group_chains)}
+        for li, pi in enumerate(pts):
+            workload, mix_items = points[pi]
+            for ci, chain in enumerate(chains):
+                if per_point[pi][ci] is None and chain in pos_of:
+                    seg = packed[li][pos_of[chain]]
+                    _segment_cache.put((chain, workload, mix_items), seg)
+                    per_point[pi][ci] = seg
+    frontiers = []
+    for (workload, mix_items), row in zip(points, per_point):
+        frontier = _assemble_frontier(row)
+        if chains:
+            _frontier_cache.put((chains, workload, mix_items), frontier)
+        frontiers.append(frontier)
+    sweep = PackedSweep(points, len(specs), tuple(frontiers))
+    _sweep_cache.put(sweep_key, sweep)
+    return sweep
+
+
+def concat_sweeps(parts: Sequence["PackedSweep"]) -> PackedSweep:
+    """Splice sweeps over the SAME points along the design axis.
+
+    The serving coalescing primitive: concurrent sweep requests sharing
+    a workload-point axis combine into one grid and one fused call, like
+    PR-4's ``concat_frontiers`` window batching for flat questions.
+    """
+    parts = list(parts)
+    if not parts:
+        raise ValueError("concat_sweeps needs at least one sweep")
+    points = parts[0].points
+    for p in parts[1:]:
+        if p.points != points:
+            raise ValueError("cannot splice sweeps over different "
+                             "workload points")
+    if len(parts) == 1:
+        return parts[0]
+    frontiers = tuple(
+        concat_frontiers([p.frontiers[w] for p in parts])
+        for w in range(len(points)))
+    return PackedSweep(points, sum(p.n_designs for p in parts), frontiers)
+
+
+def cost_sweep(specs: Sequence[DataStructureSpec],
+               workloads: Sequence[Workload], hw: HardwareProfile,
+               mixes=None, engine: str = "fused") -> np.ndarray:
+    """Workload cost for every (workload, design) cell, as one grid.
+
+    Equivalent to stacking ``cost_many(specs, w, hw, mix)`` per sweep
+    point (grouped engine: bit-identical; fused: one
+    :func:`~repro.core.devicecost.score_sweep` call whose totals match
+    the scalar oracle to the documented 1e-6).  Returns shape
+    ``[len(workloads), len(specs)]``.
+    """
+    return pack_sweep(specs, workloads, mixes).score(hw, engine=engine)
 
 
 # ---------------------------------------------------------------------------

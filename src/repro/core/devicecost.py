@@ -276,6 +276,54 @@ def _score_kernel(banks: Dict[str, jax.Array], ids: jax.Array,
 _score_jit = jax.jit(_score_kernel, static_argnums=(5, 6))
 
 
+def _sweep_kernel(banks: Dict[str, jax.Array], ids: jax.Array,
+                  sizes: jax.Array, weights: jax.Array,
+                  segments: jax.Array, n_segments: int,
+                  with_knn: bool) -> jax.Array:
+    """The workload-axis twin of :func:`_score_kernel`.
+
+    ``sizes``/``weights`` carry a leading workload axis ``[W, R]`` while
+    ``ids``/``segments`` stay 1-D: a design-continuum sweep shares its
+    record layout across every workload point, so the parameter-bank
+    gathers (the memory-bound half of the fused call) are issued ONCE for
+    all W workloads instead of once per workload — on top of collapsing W
+    dispatches into one.  Per-record math is identical to the flat
+    kernel; only the broadcast shape differs.
+    """
+    _TRACE_COUNT[0] += 1
+    x = jnp.clip(sizes, banks["xlo"][ids][None], banks["xhi"][ids][None])
+    lx = jnp.log(x + 1.0)
+
+    feats = jnp.stack([x, lx, jnp.log(lx + 1.0), x * lx], axis=-1)
+    lin = (feats * banks["lin_w"][ids][None]).sum(-1) + \
+        banks["lin_y0"][ids][None]
+
+    sig = (jax.nn.sigmoid(banks["sig_k"][ids][None] *
+                          (lx[..., None] - banks["sig_x0"][ids][None])) *
+           banks["sig_c"][ids][None]).sum(-1) + banks["sig_y0"][ids][None]
+
+    kind = banks["kinds"][ids][None]
+    y = jnp.where(kind == KIND_SIGMOID, sig, lin)
+    if with_knn:   # static: profiles without knn models skip the top_k
+        klx = banks["knn_lx"][ids]                       # [R, K] — once
+        d = jnp.abs(lx[..., None] - klx[None]) + 1e-6    # [W, R, K]
+        w = jnp.where(klx[None] >= KNN_SENTINEL * 0.5, 0.0, 1.0 / d)
+        wk, idx = jax.lax.top_k(w, 4)
+        yk = jnp.take_along_axis(
+            jnp.broadcast_to(banks["knn_y"][ids][None], w.shape), idx,
+            axis=-1)
+        knn = (wk * yk).sum(-1) / jnp.maximum(wk.sum(-1), 1e-30)
+        y = jnp.where(kind == KIND_KNN, knn, y)
+    y = jnp.maximum(y, 0.0)
+    tiles = (weights * y).reshape(y.shape[0], -1, TILE).sum(-1)
+    return jax.vmap(lambda t: jax.ops.segment_sum(
+        t, segments, num_segments=n_segments,
+        indices_are_sorted=True))(tiles)
+
+
+_sweep_jit = jax.jit(_sweep_kernel, static_argnums=(5, 6))
+
+
 @functools.lru_cache(maxsize=64)
 def _score_pmap(n_segments: int, with_knn: bool):
     return jax.pmap(
@@ -359,6 +407,110 @@ def score_frontier(ids: np.ndarray, sizes: np.ndarray, weights: np.ndarray,
                                        bucket), n_pad, table.has_knn)
         totals += np.asarray(out, np.float64)
     return totals[:n_segments]
+
+
+def pad_sweep(ids: np.ndarray, sizes: np.ndarray, weights: np.ndarray,
+              tile_segments: np.ndarray, bucket: int
+              ) -> Tuple[np.ndarray, ...]:
+    """:func:`_pad_records` for sweep layouts: ``sizes``/``weights`` pad
+    along their record axis (axis 1), ``ids``/``tile_segments`` stay 1-D.
+    Public so :class:`repro.core.batchcost.PackedSweep` can cache the
+    padded device-dtype arrays once and hand repeat scores a zero-copy
+    call."""
+    n = len(ids)
+    if n == bucket:
+        return (np.asarray(ids, np.int32), np.asarray(sizes, np.float32),
+                np.asarray(weights, np.float32),
+                np.asarray(tile_segments, np.int32))
+    pad = bucket - n
+    w = sizes.shape[0]
+    seg_pad = bucket // TILE - len(tile_segments)
+    seg_fill = tile_segments[-1] if len(tile_segments) else 0
+    # pad ids repeat a REAL model id (never a blind 0): the availability
+    # check may run on the padded array, and a profile without a fitted
+    # model for whatever name was interned first must not spuriously
+    # reject a sweep that never references it
+    pad_id = ids[-1] if n else 0
+    return (np.concatenate([ids, np.full(pad, pad_id, ids.dtype)]
+                           ).astype(np.int32),
+            np.concatenate([sizes, np.ones((w, pad), sizes.dtype)],
+                           axis=1).astype(np.float32),
+            np.concatenate([weights, np.zeros((w, pad), weights.dtype)],
+                           axis=1).astype(np.float32),
+            np.concatenate([tile_segments,
+                            np.full(seg_pad, seg_fill,
+                                    tile_segments.dtype)]
+                           ).astype(np.int32))
+
+
+def sweep_chunk(w_axis: int) -> int:
+    """Largest per-chunk record count of a W-workload sweep: keeps
+    W x chunk under the fused-record ceiling, cut on tile boundaries so
+    no design block is ever split mid-tile."""
+    return max((_MAX_FUSED_RECORDS // max(w_axis, 1)) // TILE * TILE,
+               TILE)
+
+
+def to_device_sweep(ids, sizes, weights, tile_segments) -> Tuple:
+    """Commit padded sweep arrays to the device when they fit one fused
+    chunk (the retained-sweep steady path skips every host->device copy
+    on repeat scores); multi-chunk sweeps stay host-side, where the
+    chunk loop slices them."""
+    if len(ids) > sweep_chunk(sizes.shape[0]):
+        return ids, sizes, weights, tile_segments
+    return tuple(jnp.asarray(a)
+                 for a in (ids, sizes, weights, tile_segments))
+
+
+def score_sweep(ids, sizes, weights, tile_segments, n_segments: int,
+                hw: HardwareProfile,
+                host_ids: Optional[np.ndarray] = None) -> np.ndarray:
+    """Per-(workload, design) totals for a rectangular sweep, one fused
+    call.
+
+    ``sizes``/``weights`` are ``[W, R]`` with a shared record layout
+    (``ids`` ``[R]``, TILE-aligned per design, ``tile_segments`` sorted
+    ascending — the layout :func:`repro.core.batchcost.pack_sweep`
+    emits); numpy or (already padded, e.g. via :func:`to_device_sweep`)
+    device arrays.  When ``ids`` is device-resident, pass ``host_ids``
+    (a host-side copy) so the per-call availability check never pulls
+    the array back from the device.  Returns ``[W, n_segments]``.
+    Shapes are pow2-bucketed like :func:`score_frontier`, so repeat
+    sweeps (and what-if-hardware swaps against a sweep) reuse the
+    compiled executable with zero recompilation.
+    """
+    w_axis = int(sizes.shape[0])
+    if n_segments == 0 or w_axis == 0:
+        return np.zeros((w_axis, n_segments), np.float64)
+    table = device_table(hw)
+    host_ids = np.asarray(ids) if host_ids is None else host_ids
+    _check_frontier(table, host_ids)
+    n_pad = _pow2(n_segments, 16)
+    chunk_r = sweep_chunk(w_axis)
+    n = len(host_ids)
+    if n == _pow2(n, 16) and n <= chunk_r:
+        # bucket-aligned single chunk — the steady path: PackedSweep
+        # hands over cached padded device-resident arrays plus host ids,
+        # so beyond the O(R) availability check above this is a pure
+        # fused dispatch with zero copies
+        out = _sweep_jit(table.banks, ids, sizes, weights,
+                         tile_segments, n_pad, table.has_knn)
+        return np.asarray(out, np.float64)[:, :n_segments]
+    ids = host_ids
+    sizes, weights = np.asarray(sizes), np.asarray(weights)
+    tile_segments = np.asarray(tile_segments)
+    totals = np.zeros((w_axis, n_pad), np.float64)
+    for lo in range(0, max(n, 1), chunk_r):
+        chunk = slice(lo, lo + chunk_r)
+        tile_chunk = slice(lo // TILE, (lo + chunk_r) // TILE)
+        bucket = _pow2(len(ids[chunk]), 16)
+        out = _sweep_jit(table.banks,
+                         *pad_sweep(ids[chunk], sizes[:, chunk],
+                                    weights[:, chunk],
+                                    tile_segments[tile_chunk], bucket),
+                         n_pad, table.has_knn)
+        totals += np.asarray(out, np.float64)
+    return totals[:, :n_segments]
 
 
 def _score_sharded(table: DeviceTable, ids: np.ndarray, sizes: np.ndarray,

@@ -21,15 +21,33 @@ The lock guards *bookkeeping*, not computation: cache misses compute
 outside the lock, so two threads may redundantly pack the same frontier —
 benign (both store equal values) and far cheaper than serializing
 synthesis.
+
+Named caches self-register in :data:`REGISTRY` so the cache-key
+*invariants* of the stack — hardware appears in no synthesis/packing key,
+workload appears in no template-statics key (see
+``docs/cost_pipeline.md``) — can be asserted by introspection
+(``tests/test_cache_keys.py`` walks every registered cache's keys) instead
+of being comments that rot.
 """
 from __future__ import annotations
 
 import collections
 import threading
-from typing import Optional
+from typing import Dict, List, Optional
 
 #: the one re-entrant lock shared by every memo in the costing stack
 MEMO_LOCK = threading.RLock()
+
+#: named DictCaches, for cache-key introspection (tests, docs tooling);
+#: re-registering a name replaces the entry (tests swap caches freely)
+REGISTRY: Dict[str, "DictCache"] = {}
+
+
+def registered_caches() -> Dict[str, "DictCache"]:
+    """Snapshot of every named cache currently registered."""
+    with MEMO_LOCK:
+        return dict(REGISTRY)
+
 
 CacheInfo = collections.namedtuple("CacheInfo",
                                    "hits misses maxsize currsize")
@@ -49,11 +67,20 @@ class DictCache:
     and ``info()`` snapshots stay consistent under concurrent scoring.
     """
 
-    def __init__(self, maxsize: Optional[int] = None) -> None:
+    def __init__(self, maxsize: Optional[int] = None,
+                 name: Optional[str] = None) -> None:
         self._data: "collections.OrderedDict" = collections.OrderedDict()
         self._maxsize = maxsize
         self._hits = 0
         self._misses = 0
+        if name is not None:
+            with MEMO_LOCK:
+                REGISTRY[name] = self
+
+    def keys(self) -> List:
+        """Snapshot of the current keys (cache-key invariant tests)."""
+        with MEMO_LOCK:
+            return list(self._data.keys())
 
     def get(self, key):
         with MEMO_LOCK:

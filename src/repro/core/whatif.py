@@ -1,4 +1,4 @@
-"""What-if design engine (paper §4).
+"""What-if design engine (paper §4) and workload-sweep questions.
 
 Answers design questions by re-costing a specification under a varied
 design / hardware / workload, e.g.:
@@ -6,28 +6,45 @@ design / hardware / workload, e.g.:
 * "What if we change our hardware to HW3?"
 * "Would it be beneficial to add a bloom filter in all B-tree leaves?"
 * "What if the workload becomes skewed?"
+* "How does the best design change as the read fraction goes 0 -> 1?"
 
-Every question is two cost-synthesis invocations (baseline + variation)
-over the same inputs, so answers arrive in milliseconds–seconds.  All
-three run on the batched/fused engine (:mod:`repro.core.batchcost` /
-:mod:`repro.core.devicecost`): design and workload questions pack
-baseline and variant independently and *splice* them into one two-design
-frontier (``concat_frontiers`` — repeat questions against the same
-baseline reuse its cached segment instead of re-synthesizing it), and a
-hardware question scores the *same* packed frontier against both
-profiles — a pure device parameter-table swap with zero re-synthesis and
-zero recompilation.  Pass ``engine="scalar"`` to fall back to the
-per-record scalar path (``cost_workload``) — the parity oracle for
-tests.  :mod:`repro.serving` serves these same questions concurrently,
-coalescing a window of them into one fused call.
+A binary question is two cost-synthesis invocations (baseline +
+variation) over the same inputs, so answers arrive in
+milliseconds–seconds.  All kinds run on the batched/fused engine
+(:mod:`repro.core.batchcost` / :mod:`repro.core.devicecost`): design and
+workload questions pack baseline and variant independently and *splice*
+them into one two-design frontier (``concat_frontiers`` — repeat
+questions against the same baseline reuse its cached segment instead of
+re-synthesizing it), and a hardware question scores the *same* packed
+frontier against both profiles — a pure device parameter-table swap with
+zero re-synthesis and zero recompilation.
+
+:func:`workload_sweep` generalizes the workload question to a whole
+**design continuum** (in the spirit of *Learning Key-Value Store
+Design*): a (designs x workloads) grid — read/write-ratio, skew,
+selectivity or data-size axes — packed once by splicing shared template
+statics with per-workload geometry columns and scored in ONE fused call
+(:func:`repro.core.batchcost.cost_sweep`).  ``read_fraction_mixes``
+builds the canonical read/write axis;
+:func:`repro.core.autocomplete.design_continuum` runs the sweep over an
+auto-completion frontier.
+
+Pass ``engine="scalar"`` to fall back to the per-record scalar path
+(``cost_workload``) — the parity oracle for tests.  :mod:`repro.serving`
+serves all these question kinds concurrently, coalescing a window of
+them into one fused call per hardware profile.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Sequence, Tuple
 
-from repro.core.batchcost import concat_frontiers, pack_frontier
+import numpy as np
+
+from repro.core.batchcost import (SweepPoint, concat_frontiers,
+                                  cost_sweep, normalize_points,
+                                  pack_frontier)
 from repro.core.elements import DataStructureSpec
 from repro.core.hardware import HardwareProfile
 from repro.core.synthesis import Workload, cost_workload
@@ -134,6 +151,89 @@ def what_if_workload(spec: DataStructureSpec, workload: Workload,
         base, var = packed.score(hw, engine=engine)
     return WhatIfAnswer(question_workload(workload, new_workload),
                         float(base), float(var), time.perf_counter() - t0)
+
+
+def question_sweep(points: Sequence[SweepPoint], n_designs: int) -> str:
+    return f"sweep {len(points)} workloads x {n_designs} designs"
+
+
+@dataclasses.dataclass
+class WorkloadSweepAnswer:
+    """The totals grid of a (designs x workloads) sweep.
+
+    ``totals[w, d]`` is the cost of design ``d`` under sweep point ``w``
+    — the full design continuum, answered in one fused scoring call.
+    """
+
+    question: str
+    specs: Tuple[DataStructureSpec, ...]
+    points: Tuple[SweepPoint, ...]
+    totals: np.ndarray               # [n_points, n_designs]
+    elapsed_seconds: float
+
+    @property
+    def best_indices(self) -> np.ndarray:
+        """Index of the cheapest design per sweep point (computed once)."""
+        cached = self.__dict__.get("_best_indices")
+        if cached is None:
+            cached = np.argmin(self.totals, axis=1)
+            self.__dict__["_best_indices"] = cached
+        return cached
+
+    def best(self, point: int) -> Tuple[DataStructureSpec, float]:
+        d = int(self.best_indices[point])
+        return self.specs[d], float(self.totals[point, d])
+
+    def continuum(self) -> List[Tuple[SweepPoint, DataStructureSpec,
+                                      float]]:
+        """(point, best design, cost) per sweep point — the
+        best-design-vs-workload curve."""
+        return [(p, *self.best(i)) for i, p in enumerate(self.points)]
+
+    def summary(self) -> str:
+        lines = [f"{self.question} in {self.elapsed_seconds:.2f}s"]
+        for (workload, mix_items), spec, cost in self.continuum():
+            mix = ", ".join(f"{op}={w:g}" for op, w in mix_items)
+            lines.append(
+                f"  zipf={workload.zipf_alpha:g} n={workload.n_entries}"
+                f" [{mix}] -> {spec.describe()} ({cost:.3e}s)")
+        return "\n".join(lines)
+
+
+def read_fraction_mixes(fractions: Sequence[float],
+                        n_ops: float = 100.0) -> List[Dict[str, float]]:
+    """The canonical read/write-ratio axis: get/update mixes totalling
+    ``n_ops`` operations per sweep point."""
+    return [{"get": f * n_ops, "update": (1.0 - f) * n_ops}
+            for f in fractions]
+
+
+def workload_sweep(specs: Sequence[DataStructureSpec],
+                   workloads: Sequence[Workload], hw: HardwareProfile,
+                   mixes=None, engine: str = "fused"
+                   ) -> WorkloadSweepAnswer:
+    """Cost every design under every workload point, as one question.
+
+    The generalization of :func:`what_if_workload` from one (baseline,
+    variant) pair to a whole grid: template statics are packed once and
+    every workload contributes only its numeric geometry columns, so a
+    read/write-ratio or skew sweep is answered at frontier-scoring speed
+    (one fused call) instead of one packing + scoring round per point.
+    ``engine="scalar"`` is the per-cell ``cost_workload`` oracle.
+    """
+    t0 = time.perf_counter()
+    specs = tuple(specs)
+    points = normalize_points(workloads, mixes)
+    if engine == "scalar":
+        totals = np.asarray(
+            [[cost_workload(s, w, hw, dict(mix_items)) for s in specs]
+             for w, mix_items in points]).reshape(len(points), len(specs))
+    else:
+        totals = cost_sweep(specs, [p[0] for p in points], hw,
+                            [dict(p[1]) for p in points], engine=engine)
+    return WorkloadSweepAnswer(question_sweep(points, len(specs)), specs,
+                               points, totals,
+                               time.perf_counter() - t0)
 
 
 def add_bloom_filters(spec: DataStructureSpec, num_hashes: int = 4,

@@ -3,9 +3,9 @@
 A :class:`~repro.serving.service.DesignCalculatorService` is a long-lived
 scoring service: it holds the device-resident parameter banks of its
 registered hardware profiles plus the packed-frontier/segment caches, and
-answers concurrent what-if (design / hardware / workload) and
-auto-completion questions by coalescing a window of them into one fused
-scoring call per hardware profile.
+answers concurrent what-if (design / hardware / workload), workload-sweep
+and auto-completion questions by coalescing a window of them into one
+fused scoring call per hardware profile (see ``docs/serving.md``).
 """
 from repro.serving.service import (DesignCalculatorService, ServiceSession,
                                    ServiceStats)

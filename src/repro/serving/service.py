@@ -30,11 +30,21 @@ sessions talk to:
   packed frontiers of its recent questions, so a designer iterating on
   one baseline never re-packs it — even if a burst of unrelated traffic
   evicts it from the global LRU caches.
+* **Workload sweeps** (PR 5).  ``submit_sweep`` serves whole
+  (designs x workloads) grids — read/write-ratio or skew continuums —
+  through the :func:`repro.core.batchcost.pack_sweep` engine.  Sweeps in
+  one window sharing a workload-point axis splice along the design axis
+  (``concat_sweeps``) and score as ONE fused sweep call per hardware
+  profile, exactly like flat questions coalesce via
+  ``concat_frontiers``; retained sweeps pin in sessions like frontiers.
 
 Answers are exactly :class:`~repro.core.whatif.WhatIfAnswer` /
+:class:`~repro.core.whatif.WorkloadSweepAnswer` /
 :class:`~repro.core.autocomplete.SearchResult`; parity with the serial
 scalar oracle (to the fused engine's documented 1e-6) is asserted in
-``tests/test_serving.py`` and ``benchmarks/serving_bench.py``.
+``tests/test_serving.py``, ``tests/test_sweep.py`` and
+``benchmarks/serving_bench.py``.  Semantics are documented in
+``docs/serving.md``.
 """
 from __future__ import annotations
 
@@ -51,13 +61,16 @@ import numpy as np
 
 from repro.core import devicecost
 from repro.core.autocomplete import SearchResult, enumerate_frontier
-from repro.core.batchcost import (PackedFrontier, concat_frontiers,
-                                  pack_frontier)
+from repro.core.batchcost import (PackedFrontier, PackedSweep,
+                                  concat_frontiers, concat_sweeps,
+                                  normalize_points, pack_frontier,
+                                  pack_sweep)
 from repro.core.elements import DataStructureSpec, Element
 from repro.core.hardware import HardwareProfile
 from repro.core.synthesis import Workload
-from repro.core.whatif import (WhatIfAnswer, question_design,
-                               question_hardware, question_workload)
+from repro.core.whatif import (WhatIfAnswer, WorkloadSweepAnswer,
+                               question_design, question_hardware,
+                               question_sweep, question_workload)
 
 
 @dataclasses.dataclass
@@ -73,6 +86,7 @@ class ServiceStats:
     score_calls: int = 0        # fused/grouped scoring calls issued
     max_batch: int = 0          # largest batch served
     session_frontier_hits: int = 0
+    sweeps: int = 0             # workload-sweep requests submitted
 
 
 @dataclasses.dataclass
@@ -80,16 +94,20 @@ class _Evaluation:
     """One frontier-under-one-profile scoring unit of a request.
 
     Requests decompose into evaluations; the batcher groups evaluations
-    by hardware profile and scores each group in one fused call.  After
-    scoring, ``totals`` holds this evaluation's per-design slice.
+    by (hardware profile, sweep points) and scores each group in one
+    fused call.  After scoring, ``totals`` holds this evaluation's
+    per-design slice (flat questions) or its ``[points, designs]`` grid
+    columns (sweeps, where ``points`` is set and ``workload``/``mix``
+    are unused).
     """
 
     specs: Tuple[DataStructureSpec, ...]
-    workload: Workload
+    workload: Optional[Workload]
     mix: Optional[Dict[str, float]]
     hw_name: str
     session: Optional[str] = None
-    packed: Optional[PackedFrontier] = None
+    points: Optional[Tuple] = None      # sweep evaluations only
+    packed: Optional[PackedFrontier] = None   # PackedSweep for sweeps
     totals: Optional[np.ndarray] = None
     error: Optional[Exception] = None   # this evaluation's scoring failure
 
@@ -143,6 +161,10 @@ class ServiceSession:
     def complete_design(self, partial, workload, hw, **kwargs):
         return self.service.complete_design(partial, workload, hw,
                                             session=self.name, **kwargs)
+
+    def workload_sweep(self, specs, workloads, hw, mixes=None):
+        return self.service.workload_sweep(specs, workloads, hw, mixes,
+                                           session=self.name)
 
 
 class DesignCalculatorService:
@@ -333,6 +355,31 @@ class DesignCalculatorService:
                                 len(frontier), elapsed)
         return self._submit([ev], finalize)
 
+    def submit_sweep(self, specs: Sequence[DataStructureSpec],
+                     workloads: Sequence[Workload], hw,
+                     mixes=None,
+                     session: Optional[str] = None) -> Future:
+        """A (designs x workloads) grid as one request.
+
+        Sweeps over the same workload-point axis arriving in one
+        coalescing window splice along the design axis and score as one
+        fused sweep call (a distinct axis or profile starts its own
+        group); the answer is a
+        :class:`~repro.core.whatif.WorkloadSweepAnswer`."""
+        hw_name = self._profile_name(hw)
+        specs = tuple(specs)
+        points = normalize_points(workloads, mixes)
+        ev = _Evaluation(specs, None, None, hw_name, session,
+                         points=points)
+        with self._lock:
+            self._stats.sweeps += 1
+
+        def finalize(elapsed: float) -> WorkloadSweepAnswer:
+            return WorkloadSweepAnswer(
+                question_sweep(points, len(specs)), specs, points,
+                np.asarray(ev.totals), elapsed)
+        return self._submit([ev], finalize)
+
     # -- synchronous conveniences -------------------------------------------
     def what_if_design(self, *args, **kwargs) -> WhatIfAnswer:
         return self.submit_design(*args, **kwargs).result()
@@ -345,6 +392,9 @@ class DesignCalculatorService:
 
     def complete_design(self, *args, **kwargs) -> SearchResult:
         return self.submit_complete(*args, **kwargs).result()
+
+    def workload_sweep(self, *args, **kwargs) -> WorkloadSweepAnswer:
+        return self.submit_sweep(*args, **kwargs).result()
 
     # -- the serving loop (worker thread) -----------------------------------
     def _submit(self, evals: List[_Evaluation],
@@ -393,8 +443,12 @@ class DesignCalculatorService:
                 return
 
     def _pack(self, ev: _Evaluation) -> PackedFrontier:
-        mix_key = tuple(ev.mix.items()) if ev.mix else None
-        key = (tuple(s.chain for s in ev.specs), ev.workload, mix_key)
+        chains = tuple(s.chain for s in ev.specs)
+        if ev.points is not None:
+            key: Tuple = (chains, ev.points)
+        else:
+            mix_key = tuple(ev.mix.items()) if ev.mix else None
+            key = (chains, ev.workload, mix_key)
         state = self._sessions.get(ev.session) if ev.session else None
         if state is not None:
             packed = state.get(key)
@@ -402,36 +456,52 @@ class DesignCalculatorService:
                 with self._lock:
                     self._stats.session_frontier_hits += 1
                 return packed
-        packed = pack_frontier(ev.specs, ev.workload, ev.mix)
+        if ev.points is not None:
+            packed = pack_sweep(ev.specs, [p[0] for p in ev.points],
+                                [dict(p[1]) for p in ev.points])
+        else:
+            packed = pack_frontier(ev.specs, ev.workload, ev.mix)
         if state is not None:
             state.put(key, packed)
         return packed
 
     def _serve_batch(self, batch: List[_Request]) -> None:
         """Answer one coalescing window: splice every evaluation into one
-        frontier per hardware profile, score each with one fused call,
-        slice the per-design totals back out, resolve the futures."""
+        frontier per (hardware profile, sweep-point axis), score each
+        group with one fused call, slice the per-design totals (or
+        per-grid columns) back out, resolve the futures."""
         if not batch:
             with self._lock:
                 self._stats.empty_windows += 1
             return
-        groups: Dict[str, List[_Evaluation]] = {}
+        groups: Dict[Tuple, List[_Evaluation]] = {}
         live: List[_Request] = []
         for req in batch:
             try:
                 for ev in req.evals:
                     ev.packed = self._pack(ev)
                 for ev in req.evals:
-                    groups.setdefault(ev.hw_name, []).append(ev)
+                    groups.setdefault((ev.hw_name, ev.points),
+                                      []).append(ev)
                 live.append(req)
             except Exception as exc:
                 req.future.set_exception(exc)
                 with self._lock:
                     self._stats.failed += 1
         score_calls = 0
-        for hw_name, evals in groups.items():
+        for (hw_name, points), evals in groups.items():
             hw = self._profiles[hw_name]
             try:
+                if points is not None:   # sweeps splice along designs
+                    sweep = concat_sweeps([ev.packed for ev in evals])
+                    grid = sweep.score(hw, engine=self._engine)
+                    score_calls += 1
+                    offset = 0
+                    for ev in evals:
+                        n = ev.packed.n_designs
+                        ev.totals = grid[:, offset:offset + n]
+                        offset += n
+                    continue
                 combined = concat_frontiers([ev.packed for ev in evals])
                 totals = combined.score(hw, engine=self._engine)
                 score_calls += 1

@@ -197,8 +197,8 @@ def test_cache_hits_grow_across_cost_many_calls(hw_analytical):
     cost_many(specs, w, hw_analytical, mix)
     cold = batchcost.cache_info()
     # the cold call exercised every layer of the vectorized packer: one
-    # geometry simulation and one packed segment per spec, one frontier
-    assert cold["chain_geometry"].misses == len(specs)
+    # statics resolution and one packed segment per spec, one frontier
+    assert cold["chain_statics"].misses == len(specs)
     assert cold["packed_spec"].misses == len(specs)
     assert cold["frontier"].misses == 1
     before_hits = cold["frontier"].hits
@@ -216,8 +216,8 @@ def test_cache_hits_grow_across_cost_many_calls(hw_analytical):
     info = batchcost.cache_info()
     assert info["packed_spec"].misses == before_misses["packed_spec"] + 1
     assert info["packed_spec"].hits >= len(specs)
-    assert info["chain_geometry"].misses == \
-        before_misses["chain_geometry"] + 1
+    assert info["chain_statics"].misses == \
+        before_misses["chain_statics"] + 1
 
 
 def test_clear_caches_empties_every_memo(hw_analytical):
@@ -231,9 +231,9 @@ def test_clear_caches_empties_every_memo(hw_analytical):
               {"get": 1.0, "bulk_load": 1.0}, engine="grouped")
     batchcost.cost_one("get", el.spec_btree(), w, hw_analytical)
     info = batchcost.cache_info()
-    for layer in ("chain_geometry", "packed_spec", "frontier",
-                  "symbolic_breakdown", "enumerate", "compiled_operation",
-                  "instantiate"):
+    for layer in ("chain_statics", "segment_statics", "packed_spec",
+                  "frontier", "symbolic_breakdown", "enumerate",
+                  "compiled_operation", "instantiate"):
         assert info[layer].misses + info[layer].hits > 0, layer
     batchcost.clear_caches()
     for layer, stats in batchcost.cache_info().items():

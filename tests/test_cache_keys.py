@@ -1,0 +1,114 @@
+"""Cache-key invariants of the pack->score pipeline.
+
+The memo map and its two invariants are documented in
+``docs/cost_pipeline.md``:
+
+1. **Hardware never appears in a synthesis/packing key** — a what-if-
+   hardware question re-scores retained frontiers as a pure device
+   parameter-table swap.
+2. **Workload never appears in a template-statics key** (PR 5) — a
+   workload sweep re-derives only numeric geometry columns; structure,
+   schemas and model-id layouts are shared across every sweep point.
+
+Rather than trusting comments, these tests exercise every packing layer
+and then *walk the actual keys* of every registered cache
+(:func:`repro.core.memo.registered_caches`).
+"""
+import dataclasses
+
+import numpy as np
+
+from repro.core import batchcost, elements as el
+from repro.core.hardware import HardwareProfile, hw3
+from repro.core.memo import registered_caches
+from repro.core.synthesis import Workload
+
+#: caches whose keys must be workload-free (the template-statics layer)
+STATICS_CACHES = ("chain_statics", "segment_statics")
+
+
+def _walk(obj):
+    yield obj
+    if isinstance(obj, (tuple, list, frozenset)):
+        for item in obj:
+            yield from _walk(item)
+    elif isinstance(obj, dict):
+        for k, v in obj.items():
+            yield from _walk(k)
+            yield from _walk(v)
+
+
+def _exercise_every_layer(hw) -> None:
+    w1 = Workload(n_entries=96_000)
+    w2 = dataclasses.replace(w1, zipf_alpha=1.3)
+    specs = [el.spec_btree(), el.spec_hash_table(), el.spec_skip_list()]
+    batchcost.cost_many(specs, w1, hw, {"get": 8.0, "update": 2.0})
+    batchcost.cost_sweep(specs, [w1, w2], hw,
+                         [{"get": 10.0}, {"get": 5.0, "update": 5.0}])
+    batchcost.pack_frontier(specs, w2, None)
+
+
+def test_registered_caches_cover_the_packing_stack(hw_analytical):
+    """The introspection registry must actually see the packing layers —
+    an unregistered (hence unaudited) cache would silently exempt itself
+    from the invariants below."""
+    batchcost.clear_caches()
+    _exercise_every_layer(hw_analytical)
+    caches = registered_caches()
+    for name in ("packed_spec", "frontier", "sweep") + STATICS_CACHES:
+        assert name in caches, name
+        assert caches[name].keys(), f"{name} was never populated"
+
+
+def test_hardware_never_in_any_cache_key(hw_analytical):
+    batchcost.clear_caches()
+    _exercise_every_layer(hw_analytical)
+    for name, cache in registered_caches().items():
+        for key in cache.keys():
+            for node in _walk(key):
+                assert not isinstance(node, HardwareProfile), \
+                    f"HardwareProfile inside {name} key {key!r}"
+
+
+def test_workload_never_in_template_statics_keys(hw_analytical):
+    batchcost.clear_caches()
+    _exercise_every_layer(hw_analytical)
+    caches = registered_caches()
+    for name in STATICS_CACHES:
+        for key in caches[name].keys():
+            for node in _walk(key):
+                assert not isinstance(node, Workload), \
+                    f"Workload inside {name} key {key!r}"
+
+
+def test_statics_entries_shared_across_workloads(hw_analytical):
+    """Behavioral form of invariant 2: N same-structure workloads over
+    one chain set leave exactly one statics entry per chain."""
+    batchcost.clear_caches()
+    base = Workload(n_entries=80_000)
+    workloads = [dataclasses.replace(base, zipf_alpha=a, n_queries=q)
+                 for a, q in ((0.0, 100), (0.7, 100), (1.4, 500),
+                              (2.0, 50))]
+    specs = [el.spec_btree(), el.spec_trie()]
+    batchcost.cost_sweep(specs, workloads, hw_analytical)
+    info = batchcost.cache_info()
+    assert info["chain_statics"].currsize == len(specs)
+    assert info["segment_statics"].currsize <= len(specs)
+
+
+def test_sweep_scoring_touches_no_packing_cache(hw_analytical,
+                                                cpu_profile):
+    """Invariant 1 for the sweep product: scoring one retained sweep on a
+    second profile touches no packing layer at all (pure table swap)."""
+    batchcost.clear_caches()
+    w = Workload(n_entries=64_000)
+    sweep = batchcost.pack_sweep(
+        [el.spec_btree(), el.spec_hash_table()],
+        [w, dataclasses.replace(w, zipf_alpha=1.1)])
+    before = {k: (v.hits, v.misses)
+              for k, v in batchcost.cache_info().items()}
+    a = sweep.score(hw_analytical)
+    b = sweep.score(cpu_profile)
+    assert {k: (v.hits, v.misses)
+            for k, v in batchcost.cache_info().items()} == before
+    assert a.shape == b.shape == (2, 2)
