@@ -20,7 +20,7 @@ import traceback
 
 from benchmarks import (design_space, fig6_accuracy, fig7_bulkload_training,
                         fig8_cache_skew, fig9_design_search, hillclimb,
-                        kernels_bench, roofline, search_bench,
+                        kernels_bench, load_bench, roofline, search_bench,
                         serving_bench)
 
 BENCHES = [
@@ -35,6 +35,10 @@ BENCHES = [
     # perf trajectory: questions/sec through the concurrent what-if
     # server, serial loop vs coalesced (BENCH_serving.json)
     ("BENCH_serving", serving_bench.run),
+    # robustness trajectory: sustained mixed load through the hardened
+    # server — priority-lane latency, shedding, warm restart
+    # (BENCH_load.json)
+    ("BENCH_load", load_bench.run),
     ("hillclimb_design", hillclimb.run),
     ("kernels", kernels_bench.run),
     ("roofline", roofline.run),
@@ -56,6 +60,8 @@ def main() -> None:
         search_bench.run(smoke=True)
         print("### benchmark: BENCH_serving (smoke)", flush=True)
         serving_bench.run(smoke=True)
+        print("### benchmark: BENCH_load (smoke)", flush=True)
+        load_bench.run(smoke=True)
         print(f"### smoke done in {time.perf_counter() - t0:.1f}s")
         return
     if args.only and args.only not in {name for name, _ in BENCHES}:

@@ -103,7 +103,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import devicecost, templatecost
+from repro.core import devicecost, memo as memo_module, templatecost
 from repro.core.devicecost import _MODEL_NAMES, model_id as _model_id
 from repro.core.elements import DataStructureSpec, Element
 from repro.core.hardware import HardwareProfile
@@ -195,12 +195,86 @@ def compiled_operation(op: str, spec: DataStructureSpec,
     return _compiled_operation(op, spec.chain, workload)
 
 
-#: per-spec packed segments — (chain, workload, mix) -> (ids, sizes, weights)
-_segment_cache = _DictCache(maxsize=65536, name="packed_spec")
-#: whole packed frontiers — (chains, workload, mix) -> PackedFrontier
-_frontier_cache = _DictCache(maxsize=16, name="frontier")
-#: whole packed sweeps — (chains, points) -> PackedSweep
-_sweep_cache = _DictCache(maxsize=8, name="sweep")
+#: per-spec packed segments — (chain, workload, mix) -> (ids, sizes, weights);
+#: snapshot-enabled: segments are the expensive hardware-free synthesis
+#: product a warm-restarted service wants back first
+_segment_cache = _DictCache(maxsize=65536, name="packed_spec",
+                            snapshot=True)
+#: whole packed frontiers — (chains, workload, mix) -> PackedFrontier;
+#: snapshot-enabled so a warm-restarted service answers its retained
+#: questions without even the resplice (values are stripped of their
+#: live-only ``__dict__`` memos at capture time)
+_frontier_cache = _DictCache(maxsize=16, name="frontier", snapshot=True)
+#: whole packed sweeps — (chains, points) -> PackedSweep; snapshot-enabled
+#: (capture strips the device-resident ``_f32`` stack)
+_sweep_cache = _DictCache(maxsize=8, name="sweep", snapshot=True)
+
+
+def _restore_segment(value, env):
+    """Remap a snapshotted (ids, sizes, weights) segment onto the live
+    model-id interning (see :func:`repro.core.memo.restore_caches`)."""
+    ids, sizes, weights = value
+    remap = env["model_ids"]
+    ids = np.ascontiguousarray(remap[np.asarray(ids, dtype=np.int64)])
+    ids.setflags(write=False)
+    return (ids, sizes, weights)
+
+
+def _remap_ids(ids, remap, shared: Dict[int, np.ndarray]) -> np.ndarray:
+    """Remap one interned-ids array, preserving object sharing (rectangular
+    sweeps alias a single ids array across all their per-point frontiers —
+    ``PackedSweep.rectangular`` leans on that identity)."""
+    key = id(ids)
+    if key not in shared:
+        out = np.ascontiguousarray(
+            remap[np.asarray(ids, dtype=np.int64)].astype(np.int32))
+        out.setflags(write=False)
+        shared[key] = out
+    return shared[key]
+
+
+def _strip_frontier(f: "PackedFrontier") -> "PackedFrontier":
+    """A clean copy without the cached ``_f32`` views (capture transform)."""
+    return PackedFrontier(f.ids, f.sizes, f.weights, f.tile_segments,
+                          f.n_segments)
+
+
+def _restore_frontier(value, env, shared=None):
+    f = value
+    ids = _remap_ids(f.ids, env["model_ids"],
+                     shared if shared is not None else {})
+    return PackedFrontier(ids, f.sizes, f.weights, f.tile_segments,
+                          f.n_segments)
+
+
+def _strip_sweep(s: "PackedSweep") -> "PackedSweep":
+    """Capture transform: drop the device-resident ``_f32`` stack and the
+    ``_rect`` memo (both rebuild lazily), and canonicalize a rectangular
+    sweep's equal per-point ids arrays onto ONE shared object — the
+    pickle then stores a single ids array per sweep (not ``n_points``
+    equal copies) and :func:`_remap_ids`' sharing-preserving restore
+    keeps the alias, so ``rectangular`` short-circuits on identity."""
+    frontiers = tuple(_strip_frontier(f) for f in s.frontiers)
+    if frontiers and s.rectangular:
+        ids0 = frontiers[0].ids
+        frontiers = frontiers[:1] + tuple(
+            PackedFrontier(ids0, f.sizes, f.weights, f.tile_segments,
+                           f.n_segments) for f in frontiers[1:])
+    return PackedSweep(s.points, s.n_designs, frontiers)
+
+
+def _restore_sweep(value, env):
+    shared: Dict[int, np.ndarray] = {}
+    frontiers = tuple(_restore_frontier(f, env, shared)
+                      for f in value.frontiers)
+    return PackedSweep(value.points, value.n_designs, frontiers)
+
+
+memo_module.register_restore_transform("packed_spec", _restore_segment)
+memo_module.register_capture_transform("frontier", _strip_frontier)
+memo_module.register_restore_transform("frontier", _restore_frontier)
+memo_module.register_capture_transform("sweep", _strip_sweep)
+memo_module.register_restore_transform("sweep", _restore_sweep)
 
 #: caches owned by other modules (e.g. autocomplete's frontier
 #: enumeration memo) that must drain with ours: name -> (info_fn, clear_fn)

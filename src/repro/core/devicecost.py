@@ -49,6 +49,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import memo
 from repro.core.hardware import HardwareProfile
 from repro.core.memo import MEMO_LOCK
 from repro.core.models import _BASES, KNN_SENTINEL
@@ -74,6 +75,26 @@ def model_id(name: str) -> int:
                 _MODEL_NAMES.append(name)
                 _MODEL_IDS[name] = mid
     return mid
+
+
+def _capture_model_names() -> List[str]:
+    with MEMO_LOCK:
+        return list(_MODEL_NAMES)
+
+
+def _restore_model_remap(names: List[str]) -> np.ndarray:
+    """old interned id -> live id, re-interning every snapshotted name.
+
+    Ids are assigned lazily in first-use order, so a restarted process
+    (or one that interned extra names first) may disagree with the
+    snapshot; every id-bearing restored value is rewritten through this
+    remap (a fresh process re-interns in snapshot order, making the
+    remap the identity)."""
+    return np.asarray([model_id(n) for n in names], dtype=np.int32)
+
+
+memo.register_snapshot_env("model_ids", _capture_model_names,
+                           _restore_model_remap)
 
 
 def model_name(mid: int) -> str:

@@ -28,12 +28,32 @@ workload appears in no template-statics key (see
 ``docs/cost_pipeline.md``) — can be asserted by introspection
 (``tests/test_cache_keys.py`` walks every registered cache's keys) instead
 of being comments that rot.
+
+**Warm-restart snapshots.**  Caches registered with ``snapshot=True``
+(the template-statics and packed-segment memos — the expensive,
+hardware-free synthesis products) can be persisted to a versioned
+on-disk snapshot (:func:`snapshot_caches`) and restored on service start
+(:func:`restore_caches`), so a restarted
+:class:`~repro.serving.service.DesignCalculatorService` answers its
+first question from warm caches.  The snapshot is keyed by a schema
+number plus a fingerprint of the costing stack's source
+(:func:`snapshot_version`): any code drift invalidates it and the
+restore silently falls back to a cold start — a corrupt, truncated or
+stale snapshot must *never* crash ``start()``.  Because Level-2 model
+ids are interned lazily in first-use order, the snapshot records the
+interning table and restore remaps every id-bearing value through the
+live table (cache owners contribute the capture/remap hooks via
+:func:`register_snapshot_env` / :func:`register_restore_transform`).
 """
 from __future__ import annotations
 
 import collections
+import hashlib
+import importlib
+import os
+import pickle
 import threading
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 #: the one re-entrant lock shared by every memo in the costing stack
 MEMO_LOCK = threading.RLock()
@@ -68,11 +88,14 @@ class DictCache:
     """
 
     def __init__(self, maxsize: Optional[int] = None,
-                 name: Optional[str] = None) -> None:
+                 name: Optional[str] = None,
+                 snapshot: bool = False) -> None:
         self._data: "collections.OrderedDict" = collections.OrderedDict()
         self._maxsize = maxsize
         self._hits = 0
         self._misses = 0
+        #: include this cache's entries in warm-restart snapshots
+        self.snapshot = snapshot
         if name is not None:
             with MEMO_LOCK:
                 REGISTRY[name] = self
@@ -107,3 +130,156 @@ class DictCache:
         with MEMO_LOCK:
             return CacheInfo(self._hits, self._misses, self._maxsize,
                              len(self._data))
+
+    # -- warm-restart snapshot support ---------------------------------------
+    def items(self) -> List[Tuple]:
+        """Snapshot of (key, value) pairs, oldest first (LRU order)."""
+        with MEMO_LOCK:
+            return list(self._data.items())
+
+    def load(self, key, value) -> None:
+        """Populate without touching hit/miss counters (snapshot restore)."""
+        with MEMO_LOCK:
+            self._data[key] = value
+            if self._maxsize is not None and len(self._data) > self._maxsize:
+                self._data.popitem(last=False)
+
+
+# ---------------------------------------------------------------------------
+# Warm-restart snapshots: persist/restore the snapshot-enabled caches
+# ---------------------------------------------------------------------------
+#: bump when the snapshot container format itself changes
+SNAPSHOT_SCHEMA = 1
+
+#: side-band state captured with a snapshot and rebuilt on restore:
+#: name -> (capture_fn() -> picklable, restore_fn(picklable) -> context).
+#: The canonical hook is devicecost's lazily-interned model-id table —
+#: restore_fn re-interns every recorded name and returns the old-id ->
+#: new-id remap that the restore transforms index with.
+SNAPSHOT_ENV: Dict[str, Tuple[Callable, Callable]] = {}
+
+#: per-cache value rewrites applied on restore:
+#: cache name -> fn(value, env) -> value (env: restored SNAPSHOT_ENV contexts)
+RESTORE_TRANSFORMS: Dict[str, Callable] = {}
+
+#: per-cache value rewrites applied at capture time:
+#: cache name -> fn(value) -> picklable value.  Cache owners use these to
+#: strip live-only state (device-resident array caches and other
+#: ``__dict__`` memos) before the value hits the pickle.
+CAPTURE_TRANSFORMS: Dict[str, Callable] = {}
+
+
+def register_snapshot_env(name: str, capture_fn: Callable,
+                          restore_fn: Callable) -> None:
+    SNAPSHOT_ENV[name] = (capture_fn, restore_fn)
+
+
+def register_restore_transform(name: str, fn: Callable) -> None:
+    RESTORE_TRANSFORMS[name] = fn
+
+
+def register_capture_transform(name: str, fn: Callable) -> None:
+    CAPTURE_TRANSFORMS[name] = fn
+
+
+#: source files whose drift invalidates a snapshot — every module that
+#: defines a snapshotted cache's key or value types, or the model-id
+#: interning the values index into
+_FINGERPRINT_MODULES = (
+    "repro.core.access", "repro.core.batchcost", "repro.core.devicecost",
+    "repro.core.elements", "repro.core.memo", "repro.core.primitives",
+    "repro.core.synthesis", "repro.core.templatecost",
+)
+
+
+def snapshot_version() -> str:
+    """``"<schema>:<source fingerprint>"`` — the compatibility key.
+
+    The fingerprint hashes the source of every module that shapes
+    snapshot keys/values, so a code change that could make pickled
+    entries wrong (not merely suboptimal) turns restore into a no-op
+    cold start instead of a silent corruption."""
+    digest = hashlib.sha256()
+    for modname in _FINGERPRINT_MODULES:
+        try:
+            mod = importlib.import_module(modname)
+            with open(mod.__file__, "rb") as fh:
+                digest.update(fh.read())
+        except Exception:
+            digest.update(f"missing:{modname}".encode())
+    return f"{SNAPSHOT_SCHEMA}:{digest.hexdigest()[:16]}"
+
+
+def snapshot_caches(path: str) -> int:
+    """Persist every snapshot-enabled cache to ``path`` (atomically).
+
+    Returns the number of entries written.  The write goes through a
+    sibling temp file + ``os.replace`` so a crash mid-dump never leaves
+    a truncated snapshot where a good one stood."""
+    with MEMO_LOCK:
+        caches = {}
+        for name, cache in REGISTRY.items():
+            if not cache.snapshot:
+                continue
+            strip = CAPTURE_TRANSFORMS.get(name)
+            items = cache.items()
+            if strip is not None:
+                items = [(key, strip(value)) for key, value in items]
+            caches[name] = items
+        env = {name: capture() for name, (capture, _) in
+               SNAPSHOT_ENV.items()}
+    payload = {"version": snapshot_version(), "env": env, "caches": caches}
+    blob = pickle.dumps(payload, protocol=pickle.HIGHEST_PROTOCOL)
+    directory = os.path.dirname(os.path.abspath(path))
+    os.makedirs(directory, exist_ok=True)
+    tmp = f"{path}.tmp.{os.getpid()}"
+    try:
+        with open(tmp, "wb") as fh:
+            fh.write(blob)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+    return sum(len(items) for items in caches.values())
+
+
+def restore_caches(path: str) -> int:
+    """Load a snapshot into the registered caches; 0 on *any* failure.
+
+    Missing file, truncated pickle, schema/fingerprint mismatch, or a
+    value that no longer remaps — every failure path quietly returns 0
+    (cold start).  A service ``start()`` must never die on a stale
+    snapshot.  Partially-restored caches are cleared before returning 0
+    so a torn restore cannot leave inconsistent warm state."""
+    try:
+        with open(path, "rb") as fh:
+            payload = pickle.load(fh)
+        if payload.get("version") != snapshot_version():
+            return 0
+        env = {}
+        for name, data in payload.get("env", {}).items():
+            if name in SNAPSHOT_ENV:
+                env[name] = SNAPSHOT_ENV[name][1](data)
+    except Exception:
+        return 0
+    restored = 0
+    touched: List[DictCache] = []
+    try:
+        with MEMO_LOCK:
+            for name, items in payload.get("caches", {}).items():
+                cache = REGISTRY.get(name)
+                if cache is None or not cache.snapshot:
+                    continue
+                transform = RESTORE_TRANSFORMS.get(name)
+                touched.append(cache)
+                for key, value in items:
+                    if transform is not None:
+                        value = transform(value, env)
+                    cache.load(key, value)
+                    restored += 1
+        return restored
+    except Exception:
+        with MEMO_LOCK:       # a torn restore must not leave partial state
+            for cache in touched:
+                cache.clear()
+        return 0

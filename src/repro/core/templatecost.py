@@ -72,6 +72,7 @@ import numpy as np
 from repro.core import access
 from repro.core.devicecost import TILE, model_id
 from repro.core.elements import Element
+from repro.core import memo
 from repro.core.memo import MEMO_LOCK, DictCache
 from repro.core.synthesis import (CLS_APPEND, CLS_DEP, CLS_DEP_BLOOM,
                                   CLS_IND, CLS_IND_FUNC, CLS_LL, CLS_SKIP,
@@ -230,8 +231,10 @@ class ChainStatics:
         return len(self.stats)
 
 
-#: (chain, depth signature) -> ChainStatics — workload never in the key
-_CHAIN_STATICS = DictCache(maxsize=65536, name="chain_statics")
+#: (chain, depth signature) -> ChainStatics — workload never in the key;
+#: snapshot-enabled (pure structural values, no model ids to remap)
+_CHAIN_STATICS = DictCache(maxsize=65536, name="chain_statics",
+                           snapshot=True)
 
 
 def _compute_chain_statics(chain: Tuple[Element, ...],
@@ -710,7 +713,20 @@ def emit_operation(op: str, t: _Tables, wc: _WorkloadCols
 #: (template, ops) -> interned per-chain model-id array — workload-free:
 #: every workload of a sweep (and every chain sharing a template)
 #: references the SAME ids array object
-_SEGMENT_IDS = DictCache(maxsize=65536, name="segment_statics")
+_SEGMENT_IDS = DictCache(maxsize=65536, name="segment_statics",
+                         snapshot=True)
+
+
+def _restore_segment_ids(value, env):
+    """Remap a snapshotted interned per-chain model-id array onto the
+    live interning table (warm-restart restore)."""
+    ids = env["model_ids"][np.asarray(value, dtype=np.int64)]
+    ids = np.ascontiguousarray(ids)
+    ids.setflags(write=False)
+    return ids
+
+
+memo.register_restore_transform("segment_statics", _restore_segment_ids)
 
 
 def _frozen(arr: np.ndarray) -> np.ndarray:

@@ -6,8 +6,24 @@ registered hardware profiles plus the packed-frontier/segment caches, and
 answers concurrent what-if (design / hardware / workload), workload-sweep
 and auto-completion questions by coalescing a window of them into one
 fused scoring call per hardware profile (see ``docs/serving.md``).
+
+Production traffic hardening (PR 6): requests are admitted through
+bounded priority lanes (interactive vs bulk) with optional per-session
+cost budgets, carry deadlines, and shed explicitly under overload
+(:mod:`repro.serving.admission`, :mod:`repro.serving.lanes`); the
+service warm-restarts from an on-disk snapshot of the synthesis memos.
 """
+from repro.serving.admission import (BudgetExceeded, DeadlineExceeded,
+                                     RejectedError, ServiceError,
+                                     ServiceStoppedError, SessionBudgets,
+                                     TokenBucket, request_cost)
+from repro.serving.lanes import BULK, INTERACTIVE, LaneScheduler
 from repro.serving.service import (DesignCalculatorService, ServiceSession,
                                    ServiceStats)
 
-__all__ = ["DesignCalculatorService", "ServiceSession", "ServiceStats"]
+__all__ = [
+    "DesignCalculatorService", "ServiceSession", "ServiceStats",
+    "ServiceError", "RejectedError", "BudgetExceeded", "DeadlineExceeded",
+    "ServiceStoppedError", "TokenBucket", "SessionBudgets", "request_cost",
+    "LaneScheduler", "INTERACTIVE", "BULK",
+]

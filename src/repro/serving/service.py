@@ -1,4 +1,4 @@
-"""Micro-batching what-if serving engine.
+"""Micro-batching what-if serving engine, hardened for production traffic.
 
 The paper's headline promise is *interactive* design questions — answers
 "on the order of a few seconds or minutes" — and the access pattern of a
@@ -18,14 +18,39 @@ sessions talk to:
   :mod:`repro.core.batchcost` (thread-safe via
   :mod:`repro.core.memo`) persist across questions.
 * **Micro-batching.**  Requests are submitted from any thread and return
-  :class:`concurrent.futures.Future`s.  A single worker drains the queue:
-  the first request opens a coalescing window (``window_s``), everything
-  arriving inside it joins the batch, and the batch is served by splicing
-  every question's packed frontier into **one**
+  :class:`concurrent.futures.Future`s.  A single worker drains the
+  lanes: the first request opens a coalescing window (``window_s``),
+  everything arriving inside it joins the batch, and the batch is served
+  by splicing every question's packed frontier into **one**
   :func:`~repro.core.batchcost.concat_frontiers` frontier per distinct
   hardware profile — one fused scoring call each.  A hardware-variant
   question contributes the *same* packed frontier to two profile groups:
   a pure parameter-table swap, zero recompilation.
+* **Admission control and priority lanes** (PR 6).  Requests are priced
+  in cells (:func:`repro.serving.admission.request_cost` — estimated
+  designs x workload points) and admitted through bounded per-lane
+  queues (:class:`repro.serving.lanes.LaneScheduler`): interactive
+  what-ifs in one lane, bulk sweeps / large completions in the other,
+  dequeued by weighted round-robin so a window never fills with bulk
+  work while interactive questions wait.  A full lane sheds with
+  :class:`~repro.serving.admission.RejectedError`; optional per-session
+  token buckets (``budget_cells``) shed with
+  :class:`~repro.serving.admission.BudgetExceeded` before a request
+  holds a queue slot.  Within a batch, interactive groups score *first*
+  and their futures resolve eagerly — an interactive answer never waits
+  on a bulk group's scoring call.
+* **Deadlines and cancellation.**  A per-request deadline
+  (``deadline_s``) is checked when the batch is assembled and again
+  between coalesced scoring calls; an expired request fails fast with
+  :class:`~repro.serving.admission.DeadlineExceeded` instead of
+  occupying a fused call.  ``Future.cancel()`` before the worker picks a
+  request up drops it without scoring.
+* **Warm restart.**  ``snapshot_path`` makes ``start()`` restore the
+  template-statics and packed-segment memos from a versioned on-disk
+  snapshot (:func:`repro.core.memo.restore_caches`;
+  :meth:`DesignCalculatorService.save_snapshot` writes one), so a
+  restarted service answers its first question from warm caches — and a
+  corrupt or stale snapshot silently cold-starts, never crashes.
 * **Per-session frontier reuse.**  A :class:`ServiceSession` pins the
   packed frontiers of its recent questions, so a designer iterating on
   one baseline never re-packs it — even if a burst of unrelated traffic
@@ -43,15 +68,15 @@ Answers are exactly :class:`~repro.core.whatif.WhatIfAnswer` /
 :class:`~repro.core.autocomplete.SearchResult`; parity with the serial
 scalar oracle (to the fused engine's documented 1e-6) is asserted in
 ``tests/test_serving.py``, ``tests/test_sweep.py`` and
-``benchmarks/serving_bench.py``.  Semantics are documented in
-``docs/serving.md``.
+``benchmarks/serving_bench.py``; the hardened traffic behavior in
+``tests/test_admission.py`` and ``benchmarks/load_bench.py``.  Semantics
+are documented in ``docs/serving.md``.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
 import itertools
-import queue
 import threading
 import time
 from concurrent.futures import Future
@@ -59,7 +84,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import devicecost
+from repro.core import devicecost, memo
 from repro.core.autocomplete import SearchResult, enumerate_frontier
 from repro.core.batchcost import (PackedFrontier, PackedSweep,
                                   concat_frontiers, concat_sweeps,
@@ -71,13 +96,17 @@ from repro.core.synthesis import Workload
 from repro.core.whatif import (WhatIfAnswer, WorkloadSweepAnswer,
                                question_design, question_hardware,
                                question_sweep, question_workload)
+from repro.serving.admission import (BudgetExceeded, DeadlineExceeded,
+                                     RejectedError, ServiceStoppedError,
+                                     SessionBudgets, request_cost)
+from repro.serving.lanes import (BULK, CLOSED, INTERACTIVE, LaneScheduler)
 
 
 @dataclasses.dataclass
 class ServiceStats:
     """Serving counters (snapshot with :meth:`DesignCalculatorService.stats`)."""
 
-    questions: int = 0          # requests submitted
+    questions: int = 0          # requests submitted (admitted or not)
     answered: int = 0           # futures resolved successfully
     failed: int = 0             # futures resolved with an exception
     batches: int = 0            # non-empty coalescing windows served
@@ -87,6 +116,13 @@ class ServiceStats:
     max_batch: int = 0          # largest batch served
     session_frontier_hits: int = 0
     sweeps: int = 0             # workload-sweep requests submitted
+    shed_interactive: int = 0   # interactive-lane overload rejections
+    shed_bulk: int = 0          # bulk-lane overload rejections
+    budget_rejected: int = 0    # session token-bucket rejections
+    expired: int = 0            # requests failed with DeadlineExceeded
+    cancelled: int = 0          # futures cancelled before serving
+    stopped_requests: int = 0   # requests failed by shutdown
+    snapshot_entries: int = 0   # cache entries restored on start()
 
 
 @dataclasses.dataclass
@@ -110,6 +146,7 @@ class _Evaluation:
     packed: Optional[PackedFrontier] = None   # PackedSweep for sweeps
     totals: Optional[np.ndarray] = None
     error: Optional[Exception] = None   # this evaluation's scoring failure
+    owner: Optional["_Request"] = None  # back-pointer, set at serve time
 
 
 @dataclasses.dataclass
@@ -118,25 +155,40 @@ class _Request:
     finalize: Callable[[float], object]   # elapsed-seconds -> answer
     future: Future
     t0: float
+    lane: str = INTERACTIVE
+    deadline: Optional[float] = None      # absolute time.monotonic()
+    deadline_s: Optional[float] = None    # the relative deadline requested
+    cost: float = 1.0                     # admission price in cells
+    remaining: int = 0                    # evals not yet scored/errored
+    dead: bool = False                    # expired/cancelled mid-batch
 
 
 class _SessionState:
-    """Packed frontiers pinned by one session (worker-thread only)."""
+    """Packed frontiers pinned by one session.
+
+    Reads/writes go through an internal lock: the worker thread owns the
+    steady-state traffic, but warm-restart plumbing and tests touch pins
+    from other threads, and an unguarded ``OrderedDict``
+    ``get``+``move_to_end`` is exactly the torn-bookkeeping pattern
+    ``repro.core.memo`` exists to prevent."""
 
     def __init__(self, maxsize: int = 64) -> None:
         self.frontiers: "collections.OrderedDict" = collections.OrderedDict()
         self.maxsize = maxsize
+        self._lock = threading.RLock()
 
     def get(self, key) -> Optional[PackedFrontier]:
-        packed = self.frontiers.get(key)
-        if packed is not None:
-            self.frontiers.move_to_end(key)
-        return packed
+        with self._lock:
+            packed = self.frontiers.get(key)
+            if packed is not None:
+                self.frontiers.move_to_end(key)
+            return packed
 
     def put(self, key, packed: PackedFrontier) -> None:
-        self.frontiers[key] = packed
-        if len(self.frontiers) > self.maxsize:
-            self.frontiers.popitem(last=False)
+        with self._lock:
+            self.frontiers[key] = packed
+            if len(self.frontiers) > self.maxsize:
+                self.frontiers.popitem(last=False)
 
 
 @dataclasses.dataclass
@@ -146,25 +198,29 @@ class ServiceSession:
     service: "DesignCalculatorService"
     name: str
 
-    def what_if_design(self, spec, variant, workload, hw, mix=None):
+    def what_if_design(self, spec, variant, workload, hw, mix=None,
+                       **kwargs):
         return self.service.what_if_design(spec, variant, workload, hw, mix,
-                                           session=self.name)
+                                           session=self.name, **kwargs)
 
-    def what_if_hardware(self, spec, workload, hw, new_hw, mix=None):
+    def what_if_hardware(self, spec, workload, hw, new_hw, mix=None,
+                         **kwargs):
         return self.service.what_if_hardware(spec, workload, hw, new_hw, mix,
-                                             session=self.name)
+                                             session=self.name, **kwargs)
 
-    def what_if_workload(self, spec, workload, new_workload, hw, mix=None):
+    def what_if_workload(self, spec, workload, new_workload, hw, mix=None,
+                         **kwargs):
         return self.service.what_if_workload(spec, workload, new_workload,
-                                             hw, mix, session=self.name)
+                                             hw, mix, session=self.name,
+                                             **kwargs)
 
     def complete_design(self, partial, workload, hw, **kwargs):
         return self.service.complete_design(partial, workload, hw,
                                             session=self.name, **kwargs)
 
-    def workload_sweep(self, specs, workloads, hw, mixes=None):
+    def workload_sweep(self, specs, workloads, hw, mixes=None, **kwargs):
         return self.service.workload_sweep(specs, workloads, hw, mixes,
-                                           session=self.name)
+                                           session=self.name, **kwargs)
 
 
 class DesignCalculatorService:
@@ -184,20 +240,81 @@ class DesignCalculatorService:
     engine:
         ``"fused"`` (default) or ``"grouped"`` — every scoring call goes
         through :meth:`PackedFrontier.score` with this engine.
+    lanes:
+        ``True`` (default) runs the two-lane weighted scheduler with
+        interactive-first group scoring.  ``False`` is the pre-hardening
+        FIFO regime — one queue, no priority, futures resolve when the
+        whole batch has scored — kept as the load-benchmark baseline.
+    interactive_capacity / bulk_capacity:
+        Bounded lane depths; a full lane sheds new requests with
+        :class:`~repro.serving.admission.RejectedError`.
+    lane_weights:
+        Dequeues per lane per weighted round (default 4 interactive :
+        1 bulk).
+    bulk_threshold:
+        Auto-completions whose enumerated frontier reaches this many
+        designs ride the bulk lane (sweeps always do).
+    bulk_per_window:
+        When set, at most this many bulk requests join one coalescing
+        window (excess bulk stays queued for later windows, and the
+        window keeps accepting interactive arrivals until it closes) —
+        the strict per-window occupancy bound for latency-critical
+        deployments.  ``None`` (default) lets same-axis bulk work
+        coalesce freely.
+    budget_cells / budget_refill_per_s:
+        When ``budget_cells`` is set, each session gets a token bucket
+        of that capacity (refilling at ``budget_refill_per_s`` cells/s,
+        default one capacity per second); requests are priced via
+        :func:`repro.serving.admission.request_cost` and shed with
+        :class:`~repro.serving.admission.BudgetExceeded` when the
+        bucket is dry.
+    default_deadline_s:
+        Deadline applied to requests that do not pass their own.
+    snapshot_path:
+        When set, ``start()`` warm-restores the template-statics and
+        packed-segment memos from this snapshot (if present and
+        version-compatible) and :meth:`save_snapshot` writes it.
     """
 
     def __init__(self, profiles: Sequence[HardwareProfile] = (), *,
                  window_s: float = 0.002, max_batch: int = 1024,
-                 engine: str = "fused", start: bool = True) -> None:
+                 engine: str = "fused", start: bool = True,
+                 lanes: bool = True,
+                 interactive_capacity: int = 4096,
+                 bulk_capacity: int = 256,
+                 lane_weights: Optional[Dict[str, int]] = None,
+                 bulk_threshold: int = 64,
+                 bulk_per_window: Optional[int] = None,
+                 budget_cells: Optional[float] = None,
+                 budget_refill_per_s: Optional[float] = None,
+                 default_deadline_s: Optional[float] = None,
+                 snapshot_path: Optional[str] = None) -> None:
         if engine not in ("fused", "grouped"):
             raise ValueError(f"unknown serving engine: {engine!r}")
         self._engine = engine
         self._window = window_s
         self._max_batch = max_batch
+        self._lanes_enabled = lanes
+        self._bulk_threshold = bulk_threshold
+        self._bulk_per_window = bulk_per_window if lanes else None
+        self._default_deadline = default_deadline_s
+        self._snapshot_path = snapshot_path
+        self._restored = False
+        if lanes:
+            self._sched = LaneScheduler(
+                capacities={INTERACTIVE: interactive_capacity,
+                            BULK: bulk_capacity},
+                weights=lane_weights or {INTERACTIVE: 4, BULK: 1})
+        else:   # FIFO baseline: one lane sized like the two combined
+            self._sched = LaneScheduler(
+                capacities={INTERACTIVE: interactive_capacity
+                            + bulk_capacity},
+                weights={INTERACTIVE: 1}, lanes=(INTERACTIVE,))
+        self._budgets = (SessionBudgets(budget_cells, budget_refill_per_s)
+                         if budget_cells is not None else None)
         self._profiles: Dict[str, HardwareProfile] = {}
         self._sessions: Dict[str, _SessionState] = {}
         self._session_counter = itertools.count()
-        self._queue: "queue.Queue[Optional[_Request]]" = queue.Queue()
         self._lock = threading.Lock()      # profiles/sessions/stats registry
         self._stats = ServiceStats()
         self._thread: Optional[threading.Thread] = None
@@ -210,6 +327,14 @@ class DesignCalculatorService:
     def start(self) -> None:
         if self._thread is not None and self._thread.is_alive():
             return
+        if self._snapshot_path and not self._restored:
+            # warm restart: restore the statics/segment memos; 0 on any
+            # failure (missing, corrupt, stale) — never raises
+            restored = memo.restore_caches(self._snapshot_path)
+            self._restored = True
+            with self._lock:
+                self._stats.snapshot_entries = restored
+        self._sched.reopen()
         self._thread = threading.Thread(target=self._loop, daemon=True,
                                         name="design-calculator-serving")
         self._thread.start()
@@ -217,13 +342,15 @@ class DesignCalculatorService:
     def stop(self, timeout: Optional[float] = None) -> None:
         """Drain already-queued requests, then stop the worker.
 
-        Requests that slip in behind the shutdown sentinel are failed
-        (never left with a forever-pending future).  If ``timeout``
-        expires with the worker still running, the service stays
-        stoppable/startable — the thread is only forgotten once dead."""
+        Admission closes immediately: a submit that races shutdown fails
+        with :class:`~repro.serving.admission.ServiceStoppedError`
+        (carrying its would-be queue position) — distinguishable from an
+        overload shed.  If ``timeout`` expires with the worker still
+        running, the service stays stoppable/startable — the thread is
+        only forgotten once dead."""
         if self._thread is None:
             return
-        self._queue.put(None)
+        self._sched.close()
         self._thread.join(timeout)
         if self._thread.is_alive():    # timed out; try again later
             return
@@ -232,17 +359,19 @@ class DesignCalculatorService:
 
     def _fail_pending(self) -> None:
         """Fail every request still queued after the worker has exited."""
-        while True:
-            try:
-                req = self._queue.get_nowait()
-            except queue.Empty:
-                return
-            if req is None:
+        failed = 0
+        for req, lane, pos in self._sched.drain():
+            if req.future.done():
                 continue
-            req.future.set_exception(
-                RuntimeError("service stopped before serving this request"))
+            req.future.set_exception(ServiceStoppedError(
+                f"service stopped before serving this request "
+                f"(position {pos} in the {lane} lane)",
+                queue_position=pos))
+            failed += 1
+        if failed:
             with self._lock:
-                self._stats.failed += 1
+                self._stats.failed += failed
+                self._stats.stopped_requests += failed
 
     close = stop
 
@@ -252,6 +381,15 @@ class DesignCalculatorService:
 
     def __exit__(self, *exc) -> None:
         self.stop()
+
+    def save_snapshot(self, path: Optional[str] = None) -> int:
+        """Persist the warm-restart snapshot (template statics + packed
+        segments + the model-id interning table) atomically; returns the
+        number of entries written."""
+        path = path or self._snapshot_path
+        if not path:
+            raise ValueError("no snapshot path configured")
+        return memo.snapshot_caches(path)
 
     # -- registry -----------------------------------------------------------
     def register_hardware(self, hw: HardwareProfile) -> str:
@@ -280,13 +418,18 @@ class DesignCalculatorService:
 
     def stats(self) -> Dict[str, int]:
         with self._lock:
-            return dict(dataclasses.asdict(self._stats))
+            out = dict(dataclasses.asdict(self._stats))
+        for lane in self._sched.lanes:
+            out[f"queued_{lane}"] = self._sched.depth(lane)
+        return out
 
     # -- submission (any thread) --------------------------------------------
     def submit_design(self, spec: DataStructureSpec,
                       variant: DataStructureSpec, workload: Workload, hw,
                       mix: Optional[Dict[str, float]] = None,
-                      session: Optional[str] = None) -> Future:
+                      session: Optional[str] = None,
+                      deadline_s: Optional[float] = None,
+                      lane: Optional[str] = None) -> Future:
         hw_name = self._profile_name(hw)
         ev = _Evaluation((spec, variant), workload, mix, hw_name, session)
 
@@ -294,12 +437,16 @@ class DesignCalculatorService:
             return WhatIfAnswer(question_design(spec, variant),
                                 float(ev.totals[0]), float(ev.totals[1]),
                                 elapsed)
-        return self._submit([ev], finalize)
+        return self._submit([ev], finalize, session=session,
+                            cost=request_cost(2), deadline_s=deadline_s,
+                            lane=lane or INTERACTIVE)
 
     def submit_hardware(self, spec: DataStructureSpec, workload: Workload,
                         hw, new_hw,
                         mix: Optional[Dict[str, float]] = None,
-                        session: Optional[str] = None) -> Future:
+                        session: Optional[str] = None,
+                        deadline_s: Optional[float] = None,
+                        lane: Optional[str] = None) -> Future:
         base_hw = self._profiles[self._profile_name(hw)]
         var_hw = self._profiles[self._profile_name(new_hw)]
         # identical (specs, workload, mix): both evaluations resolve to the
@@ -312,12 +459,16 @@ class DesignCalculatorService:
             return WhatIfAnswer(question_hardware(base_hw, var_hw),
                                 float(base.totals[0]), float(var.totals[0]),
                                 elapsed)
-        return self._submit([base, var], finalize)
+        return self._submit([base, var], finalize, session=session,
+                            cost=request_cost(2), deadline_s=deadline_s,
+                            lane=lane or INTERACTIVE)
 
     def submit_workload(self, spec: DataStructureSpec, workload: Workload,
                         new_workload: Workload, hw,
                         mix: Optional[Dict[str, float]] = None,
-                        session: Optional[str] = None) -> Future:
+                        session: Optional[str] = None,
+                        deadline_s: Optional[float] = None,
+                        lane: Optional[str] = None) -> Future:
         hw_name = self._profile_name(hw)
         base = _Evaluation((spec,), workload, mix, hw_name, session)
         var = _Evaluation((spec,), new_workload, mix, hw_name, session)
@@ -326,7 +477,9 @@ class DesignCalculatorService:
             return WhatIfAnswer(question_workload(workload, new_workload),
                                 float(base.totals[0]), float(var.totals[0]),
                                 elapsed)
-        return self._submit([base, var], finalize)
+        return self._submit([base, var], finalize, session=session,
+                            cost=request_cost(2), deadline_s=deadline_s,
+                            lane=lane or INTERACTIVE)
 
     def submit_complete(self, partial: Sequence[Element],
                         workload: Workload, hw,
@@ -334,7 +487,9 @@ class DesignCalculatorService:
                         terminals: Optional[Sequence[Element]] = None,
                         mix: Optional[Dict[str, float]] = None,
                         max_depth: int = 3, name: str = "auto",
-                        session: Optional[str] = None) -> Future:
+                        session: Optional[str] = None,
+                        deadline_s: Optional[float] = None,
+                        lane: Optional[str] = None) -> Future:
         hw_name = self._profile_name(hw)
         # enumeration is structural and memoized — do it at submit time so
         # the whole window's frontiers are known when the batch closes
@@ -353,19 +508,28 @@ class DesignCalculatorService:
             best = int(np.argmin(ev.totals))
             return SearchResult(frontier[best], float(ev.totals[best]),
                                 len(frontier), elapsed)
-        return self._submit([ev], finalize)
+        if lane is None:   # big completions ride the bulk lane
+            lane = BULK if len(frontier) >= self._bulk_threshold \
+                else INTERACTIVE
+        return self._submit([ev], finalize, session=session,
+                            cost=request_cost(len(frontier)),
+                            deadline_s=deadline_s, lane=lane)
 
     def submit_sweep(self, specs: Sequence[DataStructureSpec],
                      workloads: Sequence[Workload], hw,
                      mixes=None,
-                     session: Optional[str] = None) -> Future:
+                     session: Optional[str] = None,
+                     deadline_s: Optional[float] = None,
+                     lane: Optional[str] = None) -> Future:
         """A (designs x workloads) grid as one request.
 
         Sweeps over the same workload-point axis arriving in one
         coalescing window splice along the design axis and score as one
         fused sweep call (a distinct axis or profile starts its own
         group); the answer is a
-        :class:`~repro.core.whatif.WorkloadSweepAnswer`."""
+        :class:`~repro.core.whatif.WorkloadSweepAnswer`.  Sweeps ride
+        the bulk lane and pay their whole (designs x points) grid in
+        admission cells."""
         hw_name = self._profile_name(hw)
         specs = tuple(specs)
         points = normalize_points(workloads, mixes)
@@ -378,7 +542,9 @@ class DesignCalculatorService:
             return WorkloadSweepAnswer(
                 question_sweep(points, len(specs)), specs, points,
                 np.asarray(ev.totals), elapsed)
-        return self._submit([ev], finalize)
+        return self._submit([ev], finalize, session=session,
+                            cost=request_cost(len(specs), len(points)),
+                            deadline_s=deadline_s, lane=lane or BULK)
 
     # -- synchronous conveniences -------------------------------------------
     def what_if_design(self, *args, **kwargs) -> WhatIfAnswer:
@@ -398,14 +564,45 @@ class DesignCalculatorService:
 
     # -- the serving loop (worker thread) -----------------------------------
     def _submit(self, evals: List[_Evaluation],
-                finalize: Callable[[float], object]) -> Future:
+                finalize: Callable[[float], object], *,
+                lane: str = INTERACTIVE, cost: float = 1.0,
+                session: Optional[str] = None,
+                deadline_s: Optional[float] = None) -> Future:
         thread = self._thread
         if thread is None or not thread.is_alive():
             raise RuntimeError("service is not running (call start())")
-        fut: Future = Future()
+        if not self._lanes_enabled:
+            lane = INTERACTIVE          # FIFO baseline: one lane
         with self._lock:
             self._stats.questions += 1
-        self._queue.put(_Request(evals, finalize, fut, time.perf_counter()))
+        if self._budgets is not None:
+            try:
+                self._budgets.admit(session, cost)
+            except BudgetExceeded:
+                with self._lock:
+                    self._stats.budget_rejected += 1
+                raise
+        deadline_s = deadline_s if deadline_s is not None \
+            else self._default_deadline
+        deadline = (time.monotonic() + deadline_s
+                    if deadline_s is not None else None)
+        fut: Future = Future()
+        req = _Request(evals, finalize, fut, time.perf_counter(),
+                       lane=lane, deadline=deadline, deadline_s=deadline_s,
+                       cost=cost)
+        try:
+            self._sched.put(req, lane)
+        except RejectedError:
+            with self._lock:
+                if lane == BULK:
+                    self._stats.shed_bulk += 1
+                else:
+                    self._stats.shed_interactive += 1
+            raise
+        except ServiceStoppedError:
+            with self._lock:
+                self._stats.stopped_requests += 1
+            raise
         # close the submit/stop race: if the worker died between the check
         # above and the put, nothing will ever serve the queue — fail the
         # stragglers (including ours) instead of hanging their futures
@@ -415,23 +612,34 @@ class DesignCalculatorService:
 
     def _loop(self) -> None:
         while True:
-            head = self._queue.get()
-            if head is None:
+            head = self._sched.get()
+            if head is CLOSED:
                 return
+            if head is None:       # defensive: untimed get never times out
+                continue
             batch = [head]
-            stop = False
+            bulk_taken = 1 if head.lane == BULK else 0
+            closing = False
             deadline = time.monotonic() + self._window
             while len(batch) < self._max_batch:
                 remaining = deadline - time.monotonic()
                 if remaining <= 0:
                     break
-                try:
-                    nxt = self._queue.get(timeout=remaining)
-                except queue.Empty:
-                    break
+                allowed = None
+                if self._bulk_per_window is not None \
+                        and bulk_taken >= self._bulk_per_window:
+                    # this window's bulk share is spent: keep accepting
+                    # interactive arrivals only; queued bulk waits for
+                    # the next window
+                    allowed = (INTERACTIVE,)
+                nxt = self._sched.get(timeout=remaining, lanes=allowed)
                 if nxt is None:
-                    stop = True
                     break
+                if nxt is CLOSED:
+                    closing = True
+                    break
+                if nxt.lane == BULK:
+                    bulk_taken += 1
                 batch.append(nxt)
             try:
                 self._serve_batch(batch)
@@ -439,7 +647,7 @@ class DesignCalculatorService:
                 for req in batch:
                     if not req.future.done():
                         req.future.set_exception(exc)
-            if stop:
+            if closing:
                 return
 
     def _pack(self, ev: _Evaluation) -> PackedFrontier:
@@ -449,7 +657,8 @@ class DesignCalculatorService:
         else:
             mix_key = tuple(ev.mix.items()) if ev.mix else None
             key = (chains, ev.workload, mix_key)
-        state = self._sessions.get(ev.session) if ev.session else None
+        with self._lock:
+            state = self._sessions.get(ev.session) if ev.session else None
         if state is not None:
             packed = state.get(key)
             if packed is not None:
@@ -465,31 +674,91 @@ class DesignCalculatorService:
             state.put(key, packed)
         return packed
 
+    def _expire(self, req: _Request, now: float) -> None:
+        """Fail a request whose deadline passed before it finished."""
+        req.dead = True
+        late = now - req.deadline
+        req.future.set_exception(DeadlineExceeded(
+            f"deadline of {req.deadline_s:.3f}s exceeded before serving "
+            f"({late * 1e3:.1f} ms late)",
+            deadline_s=req.deadline_s or 0.0, late_by_s=late))
+        with self._lock:
+            self._stats.expired += 1
+
+    def _finalize(self, req: _Request) -> bool:
+        """Resolve one fully-scored request; True on success."""
+        try:
+            for ev in req.evals:
+                if ev.error is not None:
+                    raise ev.error
+            req.future.set_result(
+                req.finalize(time.perf_counter() - req.t0))
+            return True
+        except Exception as exc:
+            req.future.set_exception(exc)
+            return False
+
     def _serve_batch(self, batch: List[_Request]) -> None:
         """Answer one coalescing window: splice every evaluation into one
         frontier per (hardware profile, sweep-point axis), score each
         group with one fused call, slice the per-design totals (or
-        per-grid columns) back out, resolve the futures."""
+        per-grid columns) back out, resolve the futures.
+
+        With lanes enabled, groups containing interactive requests score
+        first and every request's future resolves as soon as its last
+        evaluation is scored — an interactive answer never waits on a
+        bulk group's fused call.  Deadlines are checked here (the
+        dequeue point) and again before every scoring call."""
         if not batch:
             with self._lock:
                 self._stats.empty_windows += 1
             return
         groups: Dict[Tuple, List[_Evaluation]] = {}
         live: List[_Request] = []
+        now = time.monotonic()
+        cancelled = failed = 0
         for req in batch:
+            # Future-based cancel: a request cancelled before the worker
+            # picked it up is dropped without packing or scoring
+            if not req.future.set_running_or_notify_cancel():
+                cancelled += 1
+                continue
+            if req.deadline is not None and now > req.deadline:
+                self._expire(req, now)
+                continue
             try:
                 for ev in req.evals:
+                    ev.owner = req
                     ev.packed = self._pack(ev)
-                for ev in req.evals:
-                    groups.setdefault((ev.hw_name, ev.points),
-                                      []).append(ev)
-                live.append(req)
             except Exception as exc:
                 req.future.set_exception(exc)
-                with self._lock:
-                    self._stats.failed += 1
-        score_calls = 0
-        for (hw_name, points), evals in groups.items():
+                failed += 1
+                continue
+            req.remaining = len(req.evals)
+            for ev in req.evals:
+                groups.setdefault((ev.hw_name, ev.points), []).append(ev)
+            live.append(req)
+
+        def _rank(item) -> Tuple[int, int]:
+            (_, points), evals = item
+            interactive = any(ev.owner.lane == INTERACTIVE for ev in evals)
+            return (0 if interactive else 1, 0 if points is None else 1)
+
+        ordered = sorted(groups.items(), key=_rank) \
+            if self._lanes_enabled else list(groups.items())
+        score_calls = answered = 0
+        for (hw_name, points), evals in ordered:
+            # deadline re-check between coalesced scoring calls: expired
+            # requests fail fast instead of occupying this fused call
+            now = time.monotonic()
+            for ev in evals:
+                req = ev.owner
+                if not req.dead and req.deadline is not None \
+                        and now > req.deadline:
+                    self._expire(req, now)
+            evals = [ev for ev in evals if not ev.owner.dead]
+            if not evals:
+                continue
             hw = self._profiles[hw_name]
             try:
                 if points is not None:   # sweeps splice along designs
@@ -501,30 +770,35 @@ class DesignCalculatorService:
                         n = ev.packed.n_designs
                         ev.totals = grid[:, offset:offset + n]
                         offset += n
-                    continue
-                combined = concat_frontiers([ev.packed for ev in evals])
-                totals = combined.score(hw, engine=self._engine)
-                score_calls += 1
+                else:
+                    combined = concat_frontiers(
+                        [ev.packed for ev in evals])
+                    totals = combined.score(hw, engine=self._engine)
+                    score_calls += 1
+                    offset = 0
+                    for ev in evals:
+                        n = ev.packed.n_segments
+                        ev.totals = totals[offset:offset + n]
+                        offset += n
             except Exception as exc:
                 for ev in evals:   # each group keeps its own failure
                     ev.error = exc
-                continue
-            offset = 0
             for ev in evals:
-                n = ev.packed.n_segments
-                ev.totals = totals[offset:offset + n]
-                offset += n
-        answered = failed = 0
-        for req in live:
-            try:
-                for ev in req.evals:
-                    if ev.error is not None:
-                        raise ev.error
-                req.future.set_result(
-                    req.finalize(time.perf_counter() - req.t0))
+                req = ev.owner
+                req.remaining -= 1
+                if req.remaining == 0 and self._lanes_enabled:
+                    # eager resolution: the future resolves the moment
+                    # its last group scored, ahead of later bulk groups
+                    if self._finalize(req):
+                        answered += 1
+                    else:
+                        failed += 1
+        for req in live:   # FIFO mode, plus any defensive leftovers
+            if req.dead or req.future.done():
+                continue
+            if self._finalize(req):
                 answered += 1
-            except Exception as exc:
-                req.future.set_exception(exc)
+            else:
                 failed += 1
         with self._lock:
             st = self._stats
@@ -532,6 +806,7 @@ class DesignCalculatorService:
             st.score_calls += score_calls
             st.answered += answered
             st.failed += failed
+            st.cancelled += cancelled
             st.max_batch = max(st.max_batch, len(batch))
             if len(batch) > 1:
                 st.coalesced += len(batch)

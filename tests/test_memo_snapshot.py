@@ -1,0 +1,163 @@
+"""Warm-restart snapshots: round-trip fidelity, model-id remapping, and
+the never-crash-on-bad-snapshot contract (docs/serving.md).
+
+A snapshot is an optimization, not state the service depends on — so
+the failure contract is the interesting part: a corrupt, truncated,
+stale or missing snapshot must restore *nothing* (cold start) and must
+never crash ``DesignCalculatorService.start()``."""
+import dataclasses
+import os
+import pickle
+
+import numpy as np
+import pytest
+
+from repro.core import batchcost, devicecost, memo
+from repro.core import elements as el
+from repro.core.hardware import hw1
+from repro.core.synthesis import Workload
+from repro.serving import DesignCalculatorService
+
+W = Workload(n_entries=100_000, n_queries=100)
+SKEWED = dataclasses.replace(W, zipf_alpha=1.0)
+
+SPECS = (el.spec_btree(), el.spec_btree(fanout=40),
+         el.spec_hash_table(), el.spec_skip_list())
+
+
+def _warm(hw):
+    """Populate every snapshotted cache layer and return oracle totals."""
+    flat = batchcost.pack_frontier(SPECS, W)
+    sweep = batchcost.pack_sweep(SPECS, [W, SKEWED])
+    return flat.score(hw), sweep.score(hw)
+
+
+def test_snapshot_roundtrip_restores_warm_packing(tmp_path, hw_analytical):
+    snap = str(tmp_path / "memo.snap")
+    flat_totals, sweep_grid = _warm(hw_analytical)
+    written = memo.snapshot_caches(snap)
+    assert written > 0
+    batchcost.clear_caches()
+    assert memo.restore_caches(snap) == written
+
+    # re-packing must be a pure cache hit — zero frontier/sweep misses
+    flat = batchcost.pack_frontier(SPECS, W)
+    sweep = batchcost.pack_sweep(SPECS, [W, SKEWED])
+    for name in ("frontier", "sweep"):
+        info = memo.REGISTRY[name].info()
+        assert info.misses == 0, f"{name} cache missed after restore"
+        assert info.hits >= 1
+    # and the restored products score identically
+    np.testing.assert_allclose(flat.score(hw_analytical), flat_totals,
+                               rtol=1e-12)
+    np.testing.assert_allclose(sweep.score(hw_analytical), sweep_grid,
+                               rtol=1e-12)
+
+
+def test_restored_rectangular_sweep_keeps_ids_aliased(tmp_path,
+                                                      hw_analytical):
+    """Rectangular sweeps share ONE interned-ids array across points —
+    the property the one-call ``score_sweep`` fast path keys on.  The
+    id-remap on restore must preserve that sharing, not fan the alias
+    out into per-point copies."""
+    snap = str(tmp_path / "memo.snap")
+    _warm(hw_analytical)
+    memo.snapshot_caches(snap)
+    batchcost.clear_caches()
+    assert memo.restore_caches(snap) > 0
+    restored = [value for _, value in memo.REGISTRY["sweep"].items()]
+    assert restored
+    for sweep in restored:
+        assert sweep.rectangular
+        assert all(f.ids is sweep.frontiers[0].ids
+                   for f in sweep.frontiers)
+
+
+def test_snapshot_strips_device_state(tmp_path, hw_analytical):
+    """Scored sweeps memoize device-resident arrays on ``__dict__`` —
+    capture must strip them or the pickle drags live buffers along."""
+    snap = str(tmp_path / "memo.snap")
+    _warm(hw_analytical)                       # scoring populates _f32
+    memo.snapshot_caches(snap)
+    with open(snap, "rb") as fh:
+        payload = pickle.load(fh)
+    for items in payload["caches"].values():
+        for _, value in items:
+            assert "_f32" not in getattr(value, "__dict__", {})
+
+
+def test_restore_remaps_model_ids():
+    """Ids are interned lazily in first-use order, so a fresh process
+    interns in a different order than the one that snapshotted.  The
+    remap array must send each snapshot-order id to the live id of the
+    same model name."""
+    batchcost.pack_frontier(SPECS, W)          # ensure names are interned
+    names = devicecost._capture_model_names()
+    assert len(names) >= 2
+    remap = devicecost._restore_model_remap(list(reversed(names)))
+    live = devicecost._capture_model_names()
+    for old_id, name in enumerate(reversed(names)):
+        assert live[remap[old_id]] == name
+
+
+@pytest.mark.parametrize("corruption", ["missing", "garbage", "truncated",
+                                        "stale_version"])
+def test_bad_snapshot_restores_nothing(tmp_path, hw_analytical, monkeypatch,
+                                       corruption):
+    snap = str(tmp_path / "memo.snap")
+    if corruption == "garbage":
+        with open(snap, "wb") as fh:
+            fh.write(b"\x00not a pickle\xff" * 64)
+    elif corruption == "truncated":
+        _warm(hw_analytical)
+        memo.snapshot_caches(snap)
+        size = os.path.getsize(snap)
+        with open(snap, "r+b") as fh:
+            fh.truncate(size // 2)
+    elif corruption == "stale_version":
+        _warm(hw_analytical)
+        memo.snapshot_caches(snap)
+        monkeypatch.setattr(memo, "SNAPSHOT_SCHEMA", 999)
+    # "missing": never created
+    batchcost.clear_caches()
+    assert memo.restore_caches(snap) == 0
+    for name in ("frontier", "sweep", "packed_spec"):
+        assert memo.REGISTRY[name].info().currsize == 0
+
+
+@pytest.mark.parametrize("corruption", ["garbage", "truncated"])
+def test_service_start_survives_bad_snapshot(tmp_path, corruption):
+    snap = str(tmp_path / "memo.snap")
+    hw = hw1()
+    if corruption == "garbage":
+        with open(snap, "wb") as fh:
+            fh.write(os.urandom(512))
+    else:
+        keeper = DesignCalculatorService([hw], start=False)
+        keeper.save_snapshot(snap)
+        with open(snap, "r+b") as fh:
+            fh.truncate(max(os.path.getsize(snap) // 2, 1))
+    svc = DesignCalculatorService([hw], snapshot_path=snap)
+    try:
+        assert svc.stats()["snapshot_entries"] == 0    # cold, not crashed
+        answer = svc.what_if_design(el.spec_btree(), el.spec_btree(fanout=40),
+                                    W, hw)
+        assert answer.baseline_seconds > 0
+    finally:
+        svc.stop()
+
+
+def test_service_snapshot_roundtrip_end_to_end(tmp_path):
+    snap = str(tmp_path / "memo.snap")
+    hw = hw1()
+    with DesignCalculatorService([hw], snapshot_path=snap) as svc:
+        cold = svc.workload_sweep(list(SPECS), [W, SKEWED], hw)
+        svc.save_snapshot()
+    batchcost.clear_caches()
+    with DesignCalculatorService([hw], snapshot_path=snap) as svc:
+        assert svc.stats()["snapshot_entries"] > 0
+        warm = svc.workload_sweep(list(SPECS), [W, SKEWED], hw)
+        info = memo.REGISTRY["sweep"].info()
+        assert info.misses == 0                # the sweep came from disk
+    np.testing.assert_allclose(np.asarray(warm.totals),
+                               np.asarray(cold.totals), rtol=1e-12)

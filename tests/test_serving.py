@@ -242,3 +242,39 @@ def test_stop_drains_pending_requests(profiles):
     svc.stop(timeout=30.0)
     for f in futures:
         assert f.result().baseline_seconds > 0
+
+
+def test_session_state_lru_safe_under_concurrent_threads():
+    """Session pin state is touched from non-worker threads (warm-restart
+    plumbing, tests): hammered get/put/evict must never tear the LRU
+    bookkeeping (KeyError out of ``move_to_end`` racing an eviction) and
+    must respect ``maxsize`` throughout."""
+    from repro.serving.service import _SessionState
+
+    state = _SessionState(maxsize=8)
+    errors = []
+    stop = threading.Event()
+
+    def hammer(seed):
+        rng = np.random.default_rng(seed)
+        try:
+            while not stop.is_set():
+                key = int(rng.integers(0, 32))
+                if rng.random() < 0.5:
+                    state.put(key, object())
+                else:
+                    state.get(key)
+                assert len(state.frontiers) <= state.maxsize
+        except Exception as exc:   # pragma: no cover - the regression
+            errors.append(exc)
+
+    threads = [threading.Thread(target=hammer, args=(i,)) for i in range(6)]
+    for t in threads:
+        t.start()
+    import time as _time
+    _time.sleep(0.5)
+    stop.set()
+    for t in threads:
+        t.join(timeout=10)
+    assert not errors
+    assert len(state.frontiers) <= state.maxsize
