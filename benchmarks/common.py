@@ -130,14 +130,18 @@ _TUNED_ENV = "_REPRO_BENCH_TUNED"
 _TCMALLOC = "/usr/lib/x86_64-linux-gnu/libtcmalloc.so.4"
 
 
-def apply_process_tuning() -> None:
+def apply_process_tuning(n_devices: int = None) -> None:
     """Re-exec the current command under the standard serving-process
     tuning: tcmalloc preloaded (thread-friendly allocator for the
     multi-client load benchmarks) and ``XLA_FLAGS`` forcing one host
-    device per core.  Both only take effect at process start — tcmalloc
-    must be preloaded and XLA reads its flags when the backend
-    initializes — hence the exec.  No-ops inside the tuned child, when
+    device per core (``n_devices`` overrides; an explicit flag already
+    in the environment always wins).  Both only take effect at process
+    start — tcmalloc must be preloaded and XLA reads its flags when the
+    backend initializes — hence the exec.  The device-count plumbing is
+    shared with the pytest ``devices(n)`` marker via
+    :mod:`repro.testing.devices`.  No-ops inside the tuned child, when
     already configured, or on platforms without tcmalloc."""
+    from repro.testing.devices import forced_device_count, forced_device_env
     if os.environ.get(_TUNED_ENV) == "1":
         return
     env = dict(os.environ)
@@ -148,11 +152,10 @@ def apply_process_tuning() -> None:
         env["LD_PRELOAD"] = (env.get("LD_PRELOAD", "") + " " +
                              _TCMALLOC).strip()
         changed = True
-    flags = env.get("XLA_FLAGS", "")
-    if "--xla_force_host_platform_device_count" not in flags:
-        n = min(os.cpu_count() or 1, 48)
-        env["XLA_FLAGS"] = (
-            flags + f" --xla_force_host_platform_device_count={n}").strip()
+    if forced_device_count(env) is None:
+        n = n_devices if n_devices is not None \
+            else min(os.cpu_count() or 1, 48)
+        env = forced_device_env(n, env)
         changed = True
     if not changed:
         return

@@ -383,6 +383,17 @@ def run(quick: bool = False, smoke: bool = False) -> None:
         "warm_first_question_s": warm_s,
         "warm_restart_speedup": warm_speedup,
     }]
+    # device scaling: questions/sec through the scoring-shard pool at 1
+    # vs 4 forced host devices (subprocess children — the device count
+    # is fixed at backend init).  The >= 2x bar is asserted inside
+    # serving_scaling_row on hosts with >= 4 physical cores and recorded
+    # as an explicit waiver otherwise.
+    from benchmarks import device_scaling
+    scaling = device_scaling.serving_scaling_row(quick)
+    print(f"shard-routed serving at {device_scaling.BAR_DEVICES} devices"
+          f" vs 1: {scaling['speedup_serving_4dev_vs_1dev']:.2f}x "
+          f"({scaling['scaling_bar']})")
+    rows[0].update(scaling)
     keys = list(rows[0].keys())
     print(f"interactive p99: fifo {fifo_i['p99']:.1f} ms -> lanes "
           f"{lanes_i['p99']:.1f} ms ({p99_ratio:.1f}x, target >= "
@@ -392,7 +403,7 @@ def run(quick: bool = False, smoke: bool = False) -> None:
         "priority lanes regressed below the interactive-p99 bar"
     assert warm_speedup >= TARGET_WARM_SPEEDUP, \
         "warm restart regressed below the first-question bar"
-    emit_trajectory("BENCH_load", "PR6 production traffic hardening",
+    emit_trajectory("BENCH_load", "PR7 device-routed serving tier",
                     rows, keys=keys)
 
 

@@ -4,7 +4,8 @@
     PYTHONPATH=src python -m benchmarks.run --smoke
 
 ``--smoke`` is the fast validation path: it runs the search-engine,
-workload-sweep and what-if-serving parity checks at tiny sizes (every
+workload-sweep, what-if-serving and sharded-scoring parity checks at
+tiny sizes (every
 engine against the scalar oracle, grouped sweep grids bit-identical to
 per-workload loops, zero-recompile probes), writes **no** artifacts and
 appends nothing to the BENCH_search / BENCH_serving trajectories —
@@ -18,10 +19,10 @@ import sys
 import time
 import traceback
 
-from benchmarks import (design_space, fig6_accuracy, fig7_bulkload_training,
-                        fig8_cache_skew, fig9_design_search, hillclimb,
-                        kernels_bench, load_bench, roofline, search_bench,
-                        serving_bench)
+from benchmarks import (design_space, device_scaling, fig6_accuracy,
+                        fig7_bulkload_training, fig8_cache_skew,
+                        fig9_design_search, hillclimb, kernels_bench,
+                        load_bench, roofline, search_bench, serving_bench)
 
 BENCHES = [
     ("design_space", design_space.run),
@@ -62,6 +63,8 @@ def main() -> None:
         serving_bench.run(smoke=True)
         print("### benchmark: BENCH_load (smoke)", flush=True)
         load_bench.run(smoke=True)
+        print("### benchmark: device_scaling (smoke)", flush=True)
+        device_scaling.run(smoke=True)
         print(f"### smoke done in {time.perf_counter() - t0:.1f}s")
         return
     if args.only and args.only not in {name for name, _ in BENCHES}:

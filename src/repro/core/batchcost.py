@@ -363,14 +363,37 @@ class PackedFrontier:
             object.__setattr__(self, "_f32", cached)
         return cached
 
+    def split(self, n_parts: int) -> List["PackedFrontier"]:
+        """Segment-contiguous sub-frontiers on tile-aligned cuts (via
+        :func:`repro.core.templatecost.segment_ranges`) — the serving
+        shard pool's partition primitive.  Concatenating the parts'
+        ``score`` outputs reproduces ``score`` on the whole frontier
+        bit for bit: every design's records land wholly in one part."""
+        n_parts = max(min(n_parts, self.n_segments), 1)
+        if n_parts <= 1:
+            return [self]
+        seg_cuts, tile_cuts = templatecost.segment_ranges(
+            self.tile_segments, self.n_segments, n_parts)
+        tile = devicecost.TILE
+        return [PackedFrontier(
+            self.ids[tile_cuts[d] * tile:tile_cuts[d + 1] * tile],
+            self.sizes[tile_cuts[d] * tile:tile_cuts[d + 1] * tile],
+            self.weights[tile_cuts[d] * tile:tile_cuts[d + 1] * tile],
+            self.tile_segments[tile_cuts[d]:tile_cuts[d + 1]]
+            - seg_cuts[d],
+            int(seg_cuts[d + 1] - seg_cuts[d]))
+            for d in range(n_parts)]
+
     def score(self, hw: HardwareProfile, engine: str = "fused",
-              shard: Optional[bool] = None) -> np.ndarray:
-        """Per-design totals under ``hw`` via the selected engine."""
+              shard: Optional[bool] = None, device=None) -> np.ndarray:
+        """Per-design totals under ``hw`` via the selected engine.
+        ``shard``/``device`` pass through to
+        :func:`repro.core.devicecost.score_frontier` (fused only)."""
         if engine == "fused":
             ids, sizes, weights, tiles = self._fused_arrays()
             return devicecost.score_frontier(
                 ids, sizes, weights, tiles,
-                self.n_segments, hw, shard=shard)
+                self.n_segments, hw, shard=shard, device=device)
         if engine != "grouped":
             raise ValueError(f"unknown engine: {engine!r}")
         segments = self.segments
@@ -557,13 +580,78 @@ class PackedSweep:
             object.__setattr__(self, "_f32", cached)
         return cached
 
-    def score(self, hw: HardwareProfile, engine: str = "fused"
-              ) -> np.ndarray:
+    def split(self, n_parts: int) -> List["PackedSweep"]:
+        """Design-contiguous sub-sweeps (the serving shard pool's
+        partition primitive): every point's frontier splits on the same
+        design cuts, so stacking the parts' grids along axis 1
+        reproduces ``score`` bit for bit.  Rectangular sweeps stay
+        rectangular — each cut's ids slice is shared across points by
+        object identity, exactly like the parent's interned ids."""
+        n_parts = max(min(n_parts, self.n_designs), 1)
+        if n_parts <= 1:
+            return [self]
+        shared_ids: Dict[int, List[np.ndarray]] = {}
+        per_point: List[List[PackedFrontier]] = []
+        for f in self.frontiers:
+            parts = f.split(n_parts)
+            cached = shared_ids.get(id(f.ids))
+            if cached is None:
+                shared_ids[id(f.ids)] = [p.ids for p in parts]
+            else:
+                parts = [PackedFrontier(cached[d], p.sizes, p.weights,
+                                        p.tile_segments, p.n_segments)
+                         for d, p in enumerate(parts)]
+            per_point.append(parts)
+        return [PackedSweep(self.points, per_point[0][d].n_segments,
+                            tuple(row[d] for row in per_point))
+                for d in range(n_parts)]
+
+    def _sharded_arrays(self, shard: Optional[bool]):
+        """The retained :func:`repro.core.devicecost.shard_sweep` product
+        for this sweep, or ``None`` when the flat path should serve it.
+
+        Built once per shard count and memoized on the frozen instance
+        (like ``_sweep_arrays``): repeat scores of a retained sweep are
+        pure pmap dispatches against device-committed shards — zero
+        host->device copies, zero recompiles across hardware swaps.
+        """
+        host_ids, _ = self._sweep_arrays()
+        n_dev = devicecost.sweep_shard_count(self.n_points, len(host_ids),
+                                             shard)
+        if (n_dev <= 1 and shard is not True) or self.n_points <= 1:
+            return None   # single-row sweeps: score_sweep's flat fallback
+        cache = self.__dict__.get("_f32_sh")
+        if cache is None:
+            cache = {}
+            object.__setattr__(self, "_f32_sh", cache)
+        state = cache.get(n_dev)
+        if state is None:
+            f0 = self.frontiers[0]
+            bucket = devicecost._pow2(len(f0.ids), 16)
+            if bucket > devicecost.sweep_chunk(-(-self.n_points // n_dev)):
+                state = False   # exceeds one fused chunk: chunked path
+            else:
+                state = devicecost.shard_sweep(*devicecost.pad_sweep(
+                    np.asarray(f0.ids, np.int32),
+                    np.stack([f.sizes for f in self.frontiers]),
+                    np.stack([f.weights for f in self.frontiers]),
+                    np.asarray(f0.tile_segments, np.int32), bucket),
+                    n_dev)
+            cache[n_dev] = state
+        return state or None
+
+    def score(self, hw: HardwareProfile, engine: str = "fused",
+              shard: Optional[bool] = None, device=None) -> np.ndarray:
         """The ``[n_points, n_designs]`` totals grid under ``hw``.
 
         ``engine="grouped"`` scores each point's frontier through the
         PR-1 grouped oracle — bit-identical to looping ``cost_many(...,
-        engine="grouped")`` per workload.
+        engine="grouped")`` per workload.  ``shard`` splits the fused
+        grid across local devices along workload rows
+        (:func:`repro.core.devicecost.sweep_shard_count` decides; the
+        shard product is retained on the instance); ``device`` routes
+        the flat fused call onto one specific device and implies
+        ``shard=False``.
         """
         if self.n_designs == 0 or not self.points:
             return np.zeros((self.n_points, self.n_designs))
@@ -571,13 +659,23 @@ class PackedSweep:
             if self.rectangular:
                 host_ids, (ids, sizes, weights, tiles) = \
                     self._sweep_arrays()
+                if device is None and shard is not False:
+                    state = self._sharded_arrays(shard)
+                    if state is not None:
+                        return devicecost.score_sweep_sharded(
+                            state, self.n_designs, hw, host_ids)
+                    if shard is True and self.n_points == 1:
+                        # single-row grid: segment-range pmap fallback
+                        return self.frontiers[0].score(hw, shard=True)[None]
                 return devicecost.score_sweep(ids, sizes, weights, tiles,
                                               self.n_designs, hw,
-                                              host_ids=host_ids)
+                                              host_ids=host_ids,
+                                              shard=shard, device=device)
             # non-rectangular: one spliced flat fused call over the
             # whole grid (point-major), not one dispatch per point
             flat = concat_frontiers(list(self.frontiers))
-            return flat.score(hw).reshape(self.n_points, self.n_designs)
+            return flat.score(hw, shard=shard, device=device).reshape(
+                self.n_points, self.n_designs)
         if engine != "grouped":
             raise ValueError(f"unknown engine: {engine!r}")
         return np.stack([f.score(hw, engine=engine)

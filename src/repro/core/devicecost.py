@@ -43,6 +43,8 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import os
+import time
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -245,8 +247,50 @@ def device_table(hw: HardwareProfile) -> DeviceTable:
     # threads may build duplicate (equal) tables, last write wins
     table = build_table(hw)
     with MEMO_LOCK:
+        stale = hw._device_table
         hw._device_table = table
+        if stale is not None:
+            _BANK_REPLICAS.discard(lambda k, v: v[0] is stale)
         return table
+
+
+# ---------------------------------------------------------------------------
+# Per-device bank placement.  A table's banks live wherever jax put them
+# (device 0); the sharded paths need them ON every participating device,
+# and the serving shard pool needs them committed to one SPECIFIC device.
+# Both placements happen once per (table, placement) and are interned in
+# the ``device_banks`` cache — after that, repeat scores touch the host
+# only for the O(R) availability check.  Keys carry ``id(table)``; the
+# value keeps a strong reference to the table, so the id cannot be reused
+# while its entry lives, and ``device_table`` discards a profile's
+# replicas the moment it swaps in a rebuilt table.
+# ---------------------------------------------------------------------------
+_BANK_REPLICAS = memo.DictCache(maxsize=32, name="device_banks")
+
+
+def replicated_banks(table: DeviceTable, n_dev: int) -> Dict[str, jax.Array]:
+    """``table.banks`` stacked across the first ``n_dev`` local devices
+    (``jax.device_put_replicated``), ready as a leading-axis pmap input."""
+    key = (id(table), n_dev)
+    hit = _BANK_REPLICAS.get(key)
+    if hit is not None and hit[0] is table:
+        return hit[1]
+    stacked = jax.device_put_replicated(table.banks,
+                                        jax.local_devices()[:n_dev])
+    _BANK_REPLICAS.put(key, (table, stacked))
+    return stacked
+
+
+def _banks_on(table: DeviceTable, device) -> Dict[str, jax.Array]:
+    """The table's banks committed to one specific local device (the
+    serving shard pool routes each partition's jit dispatch by device)."""
+    key = (id(table), "device", device.id)
+    hit = _BANK_REPLICAS.get(key)
+    if hit is not None and hit[0] is table:
+        return hit[1]
+    banks = jax.device_put(table.banks, device)
+    _BANK_REPLICAS.put(key, (table, banks))
+    return banks
 
 
 # ---------------------------------------------------------------------------
@@ -347,10 +391,24 @@ _sweep_jit = jax.jit(_sweep_kernel, static_argnums=(5, 6))
 
 @functools.lru_cache(maxsize=64)
 def _score_pmap(n_segments: int, with_knn: bool):
+    # banks arrive pre-stacked via replicated_banks (one replica per
+    # device, placed once) — in_axes=0 consumes them without the per-call
+    # host broadcast that in_axes=None would re-issue
     return jax.pmap(
         functools.partial(_score_kernel, n_segments=n_segments,
                           with_knn=with_knn),
-        in_axes=(None, 0, 0, 0, 0))
+        in_axes=(0, 0, 0, 0, 0))
+
+
+@functools.lru_cache(maxsize=64)
+def _sweep_pmap(n_segments: int, with_knn: bool):
+    """Workload-row twin of :func:`_score_pmap`: every device scores its
+    own ``[W_shard, R]`` slice of the sweep with the shared record
+    layout (ids/tile_segments replicated, sizes/weights sharded)."""
+    return jax.pmap(
+        functools.partial(_sweep_kernel, n_segments=n_segments,
+                          with_knn=with_knn),
+        in_axes=(0, 0, 0, 0, 0))
 
 
 def _pad_records(ids: np.ndarray, sizes: np.ndarray, weights: np.ndarray,
@@ -385,6 +443,114 @@ def _pad_records(ids: np.ndarray, sizes: np.ndarray, weights: np.ndarray,
                            ).astype(np.int32))
 
 
+# ---------------------------------------------------------------------------
+# Auto-shard threshold.  pmap dispatch costs more than jit dispatch, so
+# small products must stay on one device and large ones must not miss the
+# sharded path.  The cut-over is a per-process knob resolved as: explicit
+# ``set_shard_threshold`` override > ``REPRO_SHARD_THRESHOLD`` env var >
+# a lazily-run device-count-aware calibration (below).
+# ---------------------------------------------------------------------------
+_SHARD_STATE: Dict[str, Optional[int]] = {"override": None,
+                                          "calibrated": None}
+
+#: pow2 record buckets the calibration probes, smallest first
+_CALIBRATION_BUCKETS = (1024, 4096)
+
+SHARD_THRESHOLD_ENV = "REPRO_SHARD_THRESHOLD"
+
+
+def set_shard_threshold(records: Optional[int]) -> None:
+    """Override the auto-shard cut-over (records for frontiers, cells for
+    sweeps).  ``None`` drops the override back to the env-var/calibrated
+    default; the calibration result itself stays memoized."""
+    with MEMO_LOCK:
+        _SHARD_STATE["override"] = \
+            None if records is None else max(int(records), 1)
+
+
+def shard_threshold() -> int:
+    """Product size (frontier records / sweep cells) at which the auto
+    path starts sharding across devices.  See :func:`set_shard_threshold`
+    and the ``REPRO_SHARD_THRESHOLD`` env var; with neither set, a quick
+    calibration times jit vs pmap dispatch at :data:`_CALIBRATION_BUCKETS`
+    once per process (single-device processes skip straight to "never")."""
+    override = _SHARD_STATE["override"]
+    if override is not None:
+        return override
+    env = os.environ.get(SHARD_THRESHOLD_ENV)
+    if env:
+        try:
+            return max(int(env), 1)
+        except ValueError:
+            pass
+    calibrated = _SHARD_STATE["calibrated"]
+    if calibrated is None:
+        # racing threads calibrate redundantly but agree; not worth
+        # holding the memo lock across timed device dispatches
+        calibrated = _SHARD_STATE["calibrated"] = _calibrate_shard_threshold()
+    return calibrated
+
+
+def _calibration_table() -> DeviceTable:
+    """A tiny synthetic all-linear table (row 0 scores y = x) so the
+    calibration never touches a real profile's banks or model interning."""
+    m = 16
+    lin_w = np.zeros((m, 4), np.float32)
+    lin_w[:, 0] = 1.0
+    banks = {k: jnp.asarray(v) for k, v in {
+        "kinds": np.zeros(m, np.int32), "lin_w": lin_w,
+        "lin_y0": np.zeros(m, np.float32),
+        "sig_c": np.zeros((m, _SIG_SLOTS), np.float32),
+        "sig_k": np.ones((m, _SIG_SLOTS), np.float32),
+        "sig_x0": np.zeros((m, _SIG_SLOTS), np.float32),
+        "sig_y0": np.zeros(m, np.float32),
+        "knn_lx": np.full((m, _KNN_SLOTS), KNN_SENTINEL, np.float32),
+        "knn_y": np.zeros((m, _KNN_SLOTS), np.float32),
+        "xlo": np.ones(m, np.float32),
+        "xhi": np.full(m, 1e9, np.float32)}.items()}
+    return DeviceTable("__shard_calibration__", banks, np.ones(m, bool),
+                       m, _SIG_SLOTS, _KNN_SLOTS, has_knn=False,
+                       models_ref=-1)
+
+
+def _best_of(fn, reps: int = 3) -> float:
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _calibrate_shard_threshold() -> int:
+    """Smallest probed record bucket where the pmap path beats the jit
+    path on synthetic frontiers (TILE-sized designs, shared shapes with
+    real traffic); 4x the largest bucket when pmap never wins, and
+    effectively "never" on a single-device process."""
+    if len(jax.local_devices()) <= 1:
+        return _MAX_FUSED_RECORDS
+    table = _calibration_table()
+    for bucket in _CALIBRATION_BUCKETS:
+        ids = np.zeros(bucket, np.int32)
+        sizes = np.ones(bucket, np.float32)
+        weights = np.ones(bucket, np.float32)
+        tiles = np.arange(bucket // TILE, dtype=np.int64)
+        n_seg = bucket // TILE
+
+        def _single():
+            np.asarray(_score_jit(table.banks, ids, sizes, weights,
+                                  tiles.astype(np.int32),
+                                  _pow2(n_seg, 16), False))
+
+        def _sharded():
+            _score_sharded(table, ids, sizes, weights, tiles, n_seg)
+
+        _single(), _sharded()          # compile both paths first
+        if _best_of(_sharded) <= _best_of(_single):
+            return bucket
+    return 4 * _CALIBRATION_BUCKETS[-1]
+
+
 def _check_frontier(table: DeviceTable, ids: np.ndarray) -> None:
     if len(ids) and not table.avail[ids].all():
         missing = sorted({_MODEL_NAMES[m] for m in np.unique(ids)
@@ -396,15 +562,20 @@ def _check_frontier(table: DeviceTable, ids: np.ndarray) -> None:
 def score_frontier(ids: np.ndarray, sizes: np.ndarray, weights: np.ndarray,
                    tile_segments: np.ndarray, n_segments: int,
                    hw: HardwareProfile,
-                   shard: Optional[bool] = None) -> np.ndarray:
+                   shard: Optional[bool] = None,
+                   device=None) -> np.ndarray:
     """Per-design totals for packed frontier records, in one fused call.
 
     Records must be TILE-aligned per design and ``tile_segments`` sorted
     ascending — exactly the layout
     :func:`repro.core.batchcost.pack_frontier` emits.  ``shard=None``
-    auto-shards across local devices when more than one is present;
-    ``shard=True`` forces the pmap path (works on a single device too),
-    ``shard=False`` forces the single-device jit path.
+    auto-shards across local devices when more than one is present and
+    the frontier clears :func:`shard_threshold` records; ``shard=True``
+    forces the pmap path (works on a single device too), ``shard=False``
+    forces the single-device jit path.  ``device`` routes the jit path
+    onto one specific local device (banks committed there once, see
+    :func:`_banks_on`) — the serving shard pool's dispatch primitive;
+    it implies ``shard=False``.
     """
     if n_segments == 0:
         return np.zeros(0, np.float64)
@@ -412,20 +583,22 @@ def score_frontier(ids: np.ndarray, sizes: np.ndarray, weights: np.ndarray,
     _check_frontier(table, ids)
     n_pad = _pow2(n_segments, 16)
     if shard is None:
-        shard = len(jax.local_devices()) > 1 and len(ids) >= 1024
+        shard = device is None and len(jax.local_devices()) > 1 \
+            and len(ids) >= shard_threshold()
     if shard:
         return _score_sharded(table, ids, sizes, weights, tile_segments,
                               n_segments)
+    banks = table.banks if device is None else _banks_on(table, device)
     totals = np.zeros(n_pad, np.float64)
     for lo in range(0, max(len(ids), 1), _MAX_FUSED_RECORDS):
         chunk = slice(lo, lo + _MAX_FUSED_RECORDS)
         tile_chunk = slice(lo // TILE, (lo + _MAX_FUSED_RECORDS) // TILE)
         bucket = _pow2(len(ids[chunk]), 16)
-        out = _score_jit(table.banks,
-                         *_pad_records(ids[chunk], sizes[chunk],
-                                       weights[chunk],
-                                       tile_segments[tile_chunk],
-                                       bucket), n_pad, table.has_knn)
+        padded = _pad_records(ids[chunk], sizes[chunk], weights[chunk],
+                              tile_segments[tile_chunk], bucket)
+        if device is not None:
+            padded = tuple(jax.device_put(a, device) for a in padded)
+        out = _score_jit(banks, *padded, n_pad, table.has_knn)
         totals += np.asarray(out, np.float64)
     return totals[:n_segments]
 
@@ -483,9 +656,91 @@ def to_device_sweep(ids, sizes, weights, tile_segments) -> Tuple:
                  for a in (ids, sizes, weights, tile_segments))
 
 
+def sweep_shard_count(w_axis: int, n_records: int,
+                      shard: Optional[bool] = None) -> int:
+    """How many workload-row shards a ``[w_axis, n_records]`` sweep
+    should use (1 means the flat single-device path).
+
+    ``shard=None`` auto-shards when more than one local device is
+    present, the sweep has rows to split, and the grid clears
+    :func:`shard_threshold` cells; ``shard=True`` forces
+    ``min(devices, w_axis)`` shards (>= 1, so the pmap path is exercised
+    even on one device); ``shard=False`` forces 1."""
+    if shard is False or w_axis <= 0:
+        return 1
+    n_dev = max(min(len(jax.local_devices()), w_axis), 1)
+    if shard is True:
+        return n_dev
+    if n_dev < 2:
+        return 1
+    return n_dev if w_axis * max(n_records, 1) >= shard_threshold() else 1
+
+
+def shard_sweep(ids: np.ndarray, sizes: np.ndarray, weights: np.ndarray,
+                tile_segments: np.ndarray, n_dev: int) -> Tuple:
+    """Stack record-padded rectangular sweep arrays into per-device
+    workload-row shards committed to the first ``n_dev`` local devices.
+
+    ``sizes``/``weights`` are host ``[W, R]`` (R already at its pow2
+    bucket, e.g. via :func:`pad_sweep`).  A ragged W pads by repeating
+    the last sizes row with all-zero weights; the caller slices the
+    output back to ``[:W]``, so pad rows are computed-and-dropped, never
+    observable — the sharded grid stays bit-identical to the flat call.
+    Returns ``(w_axis, (ids, sizes, weights, tile_segments))`` where
+    ``sizes``/``weights`` are pmap-sharded (``jax.device_put_sharded``)
+    and ``ids``/``tile_segments`` replicated: a retained sweep keeps the
+    tuple and every repeat score is a pure pmap dispatch with zero
+    host->device copies."""
+    devices = jax.local_devices()[:n_dev]
+    w_axis = int(sizes.shape[0])
+    w_shard = -(-w_axis // n_dev)
+    pad = n_dev * w_shard - w_axis
+    sizes = np.asarray(sizes, np.float32)
+    weights = np.asarray(weights, np.float32)
+    if pad:
+        sizes = np.concatenate([sizes, np.repeat(sizes[-1:], pad, axis=0)])
+        weights = np.concatenate(
+            [weights, np.zeros((pad, weights.shape[1]), np.float32)])
+    return w_axis, (
+        jax.device_put_replicated(np.asarray(ids, np.int32), devices),
+        jax.device_put_sharded(list(sizes.reshape(n_dev, w_shard, -1)),
+                               devices),
+        jax.device_put_sharded(list(weights.reshape(n_dev, w_shard, -1)),
+                               devices),
+        jax.device_put_replicated(np.asarray(tile_segments, np.int32),
+                                  devices))
+
+
+def _sweep_sharded(table: DeviceTable, state: Tuple,
+                   n_segments: int) -> np.ndarray:
+    """Dispatch a :func:`shard_sweep` product: one pmap call, per-device
+    bank replicas, output rows re-flattened and pad rows sliced off."""
+    w_axis, (ids_sh, sizes_sh, weights_sh, tiles_sh) = state
+    n_dev = int(sizes_sh.shape[0])
+    out = np.asarray(
+        _sweep_pmap(_pow2(n_segments, 16), table.has_knn)(
+            replicated_banks(table, n_dev), ids_sh, sizes_sh, weights_sh,
+            tiles_sh),
+        np.float64)
+    return out.reshape(-1, out.shape[-1])[:w_axis, :n_segments]
+
+
+def score_sweep_sharded(state: Tuple, n_segments: int, hw: HardwareProfile,
+                        host_ids: np.ndarray) -> np.ndarray:
+    """Steady-path twin of :func:`score_sweep` for a prebuilt (retained)
+    :func:`shard_sweep` product: beyond the O(R) availability check this
+    is one pmap dispatch against device-committed shards — zero copies,
+    and hardware swaps reuse the compiled executable."""
+    table = device_table(hw)
+    _check_frontier(table, host_ids)
+    return _sweep_sharded(table, state, n_segments)
+
+
 def score_sweep(ids, sizes, weights, tile_segments, n_segments: int,
                 hw: HardwareProfile,
-                host_ids: Optional[np.ndarray] = None) -> np.ndarray:
+                host_ids: Optional[np.ndarray] = None,
+                shard: Optional[bool] = None,
+                device=None) -> np.ndarray:
     """Per-(workload, design) totals for a rectangular sweep, one fused
     call.
 
@@ -499,6 +754,15 @@ def score_sweep(ids, sizes, weights, tile_segments, n_segments: int,
     Shapes are pow2-bucketed like :func:`score_frontier`, so repeat
     sweeps (and what-if-hardware swaps against a sweep) reuse the
     compiled executable with zero recompilation.
+
+    ``shard`` splits the grid across local devices along workload rows
+    (:func:`sweep_shard_count` decides the shard count; single-row
+    sweeps fall back to PR 2's segment-range pmap) — ``None``
+    auto-shards past :func:`shard_threshold` cells, ``True`` forces the
+    sharded path, ``False`` pins the flat path.  Retained sweeps should
+    prefer :func:`score_sweep_sharded`, which skips the per-call shard
+    build.  ``device`` routes the flat call onto one specific device
+    (implies ``shard=False``).
     """
     w_axis = int(sizes.shape[0])
     if n_segments == 0 or w_axis == 0:
@@ -509,13 +773,38 @@ def score_sweep(ids, sizes, weights, tile_segments, n_segments: int,
     n_pad = _pow2(n_segments, 16)
     chunk_r = sweep_chunk(w_axis)
     n = len(host_ids)
+    if device is None and shard is not False \
+            and isinstance(sizes, np.ndarray):
+        # device-resident retained arrays skip this block: re-sharding
+        # them would pull every array back to the host per call — a
+        # retained sweep shards once via score_sweep_sharded instead
+        n_dev = sweep_shard_count(w_axis, n, shard)
+        if (n_dev > 1 or (shard is True and w_axis > 1)) and \
+                _pow2(n, 16) <= sweep_chunk(-(-w_axis // n_dev)):
+            padded = pad_sweep(host_ids, np.asarray(sizes),
+                               np.asarray(weights),
+                               np.asarray(tile_segments), _pow2(n, 16))
+            return _sweep_sharded(
+                table, shard_sweep(*padded, n_dev), n_segments)
+        if w_axis == 1 and (shard is True or (
+                shard is None and len(jax.local_devices()) > 1
+                and n >= shard_threshold())):
+            # flat frontier disguised as a 1-row sweep: segment-range pmap
+            flat = _score_sharded(table, host_ids, np.asarray(sizes)[0],
+                                  np.asarray(weights)[0],
+                                  np.asarray(tile_segments), n_segments)
+            return flat[None]
+    banks = table.banks if device is None else _banks_on(table, device)
     if n == _pow2(n, 16) and n <= chunk_r:
         # bucket-aligned single chunk — the steady path: PackedSweep
         # hands over cached padded device-resident arrays plus host ids,
         # so beyond the O(R) availability check above this is a pure
         # fused dispatch with zero copies
-        out = _sweep_jit(table.banks, ids, sizes, weights,
-                         tile_segments, n_pad, table.has_knn)
+        args = (ids, sizes, weights, tile_segments)
+        if device is not None:
+            args = tuple(jax.device_put(np.asarray(a), device)
+                         for a in args)
+        out = _sweep_jit(banks, *args, n_pad, table.has_knn)
         return np.asarray(out, np.float64)[:, :n_segments]
     ids = host_ids
     sizes, weights = np.asarray(sizes), np.asarray(weights)
@@ -525,11 +814,11 @@ def score_sweep(ids, sizes, weights, tile_segments, n_segments: int,
         chunk = slice(lo, lo + chunk_r)
         tile_chunk = slice(lo // TILE, (lo + chunk_r) // TILE)
         bucket = _pow2(len(ids[chunk]), 16)
-        out = _sweep_jit(table.banks,
-                         *pad_sweep(ids[chunk], sizes[:, chunk],
-                                    weights[:, chunk],
-                                    tile_segments[tile_chunk], bucket),
-                         n_pad, table.has_knn)
+        padded = pad_sweep(ids[chunk], sizes[:, chunk], weights[:, chunk],
+                           tile_segments[tile_chunk], bucket)
+        if device is not None:
+            padded = tuple(jax.device_put(a, device) for a in padded)
+        out = _sweep_jit(banks, *padded, n_pad, table.has_knn)
         totals += np.asarray(out, np.float64)
     return totals[:, :n_segments]
 
@@ -538,12 +827,10 @@ def _score_sharded(table: DeviceTable, ids: np.ndarray, sizes: np.ndarray,
                    weights: np.ndarray, tile_segments: np.ndarray,
                    n_segments: int) -> np.ndarray:
     """pmap the scorer over contiguous segment ranges, one per device."""
+    from repro.core.templatecost import segment_ranges  # circular at top
     devices = jax.local_devices()
     n_dev = max(min(len(devices), n_segments), 1)
-    # segment-aligned tile boundaries with ~balanced segment counts; design
-    # blocks are tile-aligned by construction, so tile cuts never split one
-    seg_cuts = [round(n_segments * d / n_dev) for d in range(n_dev + 1)]
-    tile_cuts = np.searchsorted(tile_segments, seg_cuts, side="left")
+    seg_cuts, tile_cuts = segment_ranges(tile_segments, n_segments, n_dev)
     rec_bucket = _pow2(int(max(np.diff(tile_cuts), default=1)) * TILE, 16)
     seg_pad = _pow2(int(max(np.diff(seg_cuts), default=1)), 16)
     shards = []
@@ -556,7 +843,8 @@ def _score_sharded(table: DeviceTable, ids: np.ndarray, sizes: np.ndarray,
                                    rec_bucket))
     stacked = [np.stack([s[i] for s in shards]) for i in range(4)]
     out = np.asarray(
-        _score_pmap(seg_pad, table.has_knn)(table.banks, *stacked),
+        _score_pmap(seg_pad, table.has_knn)(
+            replicated_banks(table, n_dev), *stacked),
         np.float64)
     return np.concatenate([
         out[d, :seg_cuts[d + 1] - seg_cuts[d]] for d in range(n_dev)])

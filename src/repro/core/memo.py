@@ -126,6 +126,17 @@ class DictCache:
             self._data.clear()
             self._hits = self._misses = 0
 
+    def discard(self, pred) -> int:
+        """Drop every entry with ``pred(key, value)`` true; returns the
+        count.  Targeted invalidation for identity-keyed caches (the
+        ``device_banks`` replica cache drops a profile's stale replicas
+        when its device table rebuilds)."""
+        with MEMO_LOCK:
+            doomed = [k for k, v in self._data.items() if pred(k, v)]
+            for k in doomed:
+                del self._data[k]
+            return len(doomed)
+
     def info(self) -> CacheInfo:
         with MEMO_LOCK:
             return CacheInfo(self._hits, self._misses, self._maxsize,

@@ -381,6 +381,26 @@ def cache_info() -> Dict[str, Tuple]:
             "segment_statics": _SEGMENT_IDS.info()}
 
 
+def segment_ranges(tile_segments: np.ndarray, n_segments: int,
+                   n_parts: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Contiguous per-shard segment ranges over a packed record layout.
+
+    Returns ``(seg_cuts, tile_cuts)``, each of length ``n_parts + 1``:
+    ``seg_cuts`` splits ``[0, n_segments)`` into ~equal contiguous
+    ranges (round-balanced) and ``tile_cuts`` maps each cut onto the
+    sorted per-tile segment ids, so shard ``d`` owns tiles
+    ``tile_cuts[d]:tile_cuts[d+1]`` — records ``* TILE``.  Design blocks
+    are tile-aligned by construction, so tile cuts never split a design;
+    every segment's records land wholly in one shard, which is what
+    keeps sharded totals bit-identical to the flat reduction.  Shared by
+    ``devicecost._score_sharded`` (pmap shards), ``PackedFrontier.split``
+    (the serving shard pool's partitions) and per-shard packing."""
+    seg_cuts = np.asarray([round(n_segments * d / n_parts)
+                           for d in range(n_parts + 1)])
+    tile_cuts = np.searchsorted(tile_segments, seg_cuts, side="left")
+    return seg_cuts, tile_cuts
+
+
 # ---------------------------------------------------------------------------
 # Flat SoA tables over all chains being packed (structural half)
 # ---------------------------------------------------------------------------

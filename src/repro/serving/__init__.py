@@ -12,6 +12,12 @@ bounded priority lanes (interactive vs bulk) with optional per-session
 cost budgets, carry deadlines, and shed explicitly under overload
 (:mod:`repro.serving.admission`, :mod:`repro.serving.lanes`); the
 service warm-restarts from an on-disk snapshot of the synthesis memos.
+
+Multi-device routing (PR 7): a scoring-shard pool
+(:mod:`repro.serving.shards`) partitions each coalesced window's spliced
+frontier/sweep across local devices, dispatches the partitions
+concurrently with deadlines probed between shard dispatches, and merges
+bit-identical totals before any future resolves.
 """
 from repro.serving.admission import (BudgetExceeded, DeadlineExceeded,
                                      RejectedError, ServiceError,
@@ -20,10 +26,11 @@ from repro.serving.admission import (BudgetExceeded, DeadlineExceeded,
 from repro.serving.lanes import BULK, INTERACTIVE, LaneScheduler
 from repro.serving.service import (DesignCalculatorService, ServiceSession,
                                    ServiceStats)
+from repro.serving.shards import ScoringShardPool
 
 __all__ = [
     "DesignCalculatorService", "ServiceSession", "ServiceStats",
     "ServiceError", "RejectedError", "BudgetExceeded", "DeadlineExceeded",
     "ServiceStoppedError", "TokenBucket", "SessionBudgets", "request_cost",
-    "LaneScheduler", "INTERACTIVE", "BULK",
+    "LaneScheduler", "INTERACTIVE", "BULK", "ScoringShardPool",
 ]

@@ -100,6 +100,7 @@ from repro.serving.admission import (BudgetExceeded, DeadlineExceeded,
                                      RejectedError, ServiceStoppedError,
                                      SessionBudgets, request_cost)
 from repro.serving.lanes import (BULK, CLOSED, INTERACTIVE, LaneScheduler)
+from repro.serving.shards import ScoringShardPool
 
 
 @dataclasses.dataclass
@@ -123,6 +124,7 @@ class ServiceStats:
     cancelled: int = 0          # futures cancelled before serving
     stopped_requests: int = 0   # requests failed by shutdown
     snapshot_entries: int = 0   # cache entries restored on start()
+    shard_dispatches: int = 0   # partitions dispatched by multi-shard groups
 
 
 @dataclasses.dataclass
@@ -274,6 +276,15 @@ class DesignCalculatorService:
         When set, ``start()`` warm-restores the template-statics and
         packed-segment memos from this snapshot (if present and
         version-compatible) and :meth:`save_snapshot` writes it.
+    scoring_shards / shard_min_cells:
+        The scoring-shard pool (:class:`repro.serving.shards.
+        ScoringShardPool`): each (profile, axis) group's spliced product
+        partitions across up to ``scoring_shards`` local devices
+        (default: all of them) once it spans ``shard_min_cells`` cells
+        per partition, dispatches concurrently with deadlines probed
+        between shard dispatches, and merges bit-identically before any
+        future resolves.  On a single-device host the pool degenerates
+        to the pre-shard in-thread call.
     """
 
     def __init__(self, profiles: Sequence[HardwareProfile] = (), *,
@@ -288,7 +299,9 @@ class DesignCalculatorService:
                  budget_cells: Optional[float] = None,
                  budget_refill_per_s: Optional[float] = None,
                  default_deadline_s: Optional[float] = None,
-                 snapshot_path: Optional[str] = None) -> None:
+                 snapshot_path: Optional[str] = None,
+                 scoring_shards: Optional[int] = None,
+                 shard_min_cells: Optional[int] = None) -> None:
         if engine not in ("fused", "grouped"):
             raise ValueError(f"unknown serving engine: {engine!r}")
         self._engine = engine
@@ -312,6 +325,10 @@ class DesignCalculatorService:
                 weights={INTERACTIVE: 1}, lanes=(INTERACTIVE,))
         self._budgets = (SessionBudgets(budget_cells, budget_refill_per_s)
                          if budget_cells is not None else None)
+        self._shards = ScoringShardPool(
+            scoring_shards,
+            **({} if shard_min_cells is None
+               else {"min_cells_per_shard": shard_min_cells}))
         self._profiles: Dict[str, HardwareProfile] = {}
         self._sessions: Dict[str, _SessionState] = {}
         self._session_counter = itertools.count()
@@ -746,7 +763,7 @@ class DesignCalculatorService:
 
         ordered = sorted(groups.items(), key=_rank) \
             if self._lanes_enabled else list(groups.items())
-        score_calls = answered = 0
+        score_calls = answered = shard_dispatches = 0
         for (hw_name, points), evals in ordered:
             # deadline re-check between coalesced scoring calls: expired
             # requests fail fast instead of occupying this fused call
@@ -760,11 +777,31 @@ class DesignCalculatorService:
             if not evals:
                 continue
             hw = self._profiles[hw_name]
+
+            def _probe(shard_idx: int, _evals=evals) -> bool:
+                """Deadline check between shard dispatches (PR 6's
+                between-scoring-calls contract, extended inside one
+                sharded call); False once no owner is left alive."""
+                now = time.monotonic()
+                alive = False
+                for ev in _evals:
+                    req = ev.owner
+                    if not req.dead and req.deadline is not None \
+                            and now > req.deadline:
+                        self._expire(req, now)
+                    alive = alive or not req.dead
+                return alive
+
             try:
                 if points is not None:   # sweeps splice along designs
                     sweep = concat_sweeps([ev.packed for ev in evals])
-                    grid = sweep.score(hw, engine=self._engine)
+                    grid, used = self._shards.score_sweep(
+                        sweep, hw, engine=self._engine,
+                        before_dispatch=_probe)
+                    if grid is None:   # every owner expired mid-dispatch
+                        continue
                     score_calls += 1
+                    shard_dispatches += used if used > 1 else 0
                     offset = 0
                     for ev in evals:
                         n = ev.packed.n_designs
@@ -773,8 +810,13 @@ class DesignCalculatorService:
                 else:
                     combined = concat_frontiers(
                         [ev.packed for ev in evals])
-                    totals = combined.score(hw, engine=self._engine)
+                    totals, used = self._shards.score_frontier(
+                        combined, hw, engine=self._engine,
+                        before_dispatch=_probe)
+                    if totals is None:
+                        continue
                     score_calls += 1
+                    shard_dispatches += used if used > 1 else 0
                     offset = 0
                     for ev in evals:
                         n = ev.packed.n_segments
@@ -785,6 +827,8 @@ class DesignCalculatorService:
                     ev.error = exc
             for ev in evals:
                 req = ev.owner
+                if req.dead:   # expired by a mid-dispatch probe
+                    continue
                 req.remaining -= 1
                 if req.remaining == 0 and self._lanes_enabled:
                     # eager resolution: the future resolves the moment
@@ -804,6 +848,7 @@ class DesignCalculatorService:
             st = self._stats
             st.batches += 1
             st.score_calls += score_calls
+            st.shard_dispatches += shard_dispatches
             st.answered += answered
             st.failed += failed
             st.cancelled += cancelled

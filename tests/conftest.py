@@ -23,3 +23,33 @@ def hw_analytical():
 @pytest.fixture()
 def rng():
     return np.random.default_rng(1234)
+
+
+@pytest.fixture()
+def device_count(request):
+    """The live ``jax.device_count()`` — with subprocess re-invocation.
+
+    A test marked ``@pytest.mark.devices(n)`` that requests this fixture
+    runs inline when the current process already has ``n`` devices;
+    otherwise the fixture re-invokes the exact test node in a subprocess
+    under ``--xla_force_host_platform_device_count=n`` (JAX pins its
+    device list at backend init, so the count cannot change in-process —
+    see :mod:`repro.testing.devices`), fails with the child's output on
+    a child failure, and skips with a "verified in a subprocess" note on
+    success.  One CI invocation thereby covers 2/8/48-way sharding.
+    """
+    import jax
+    marker = request.node.get_closest_marker("devices")
+    current = jax.device_count()
+    if marker is None or current == int(marker.args[0]):
+        return current
+    wanted = int(marker.args[0])
+    from repro.testing.devices import run_pytest_under_devices
+    proc = run_pytest_under_devices(wanted, request.node.nodeid)
+    if proc.returncode != 0:
+        pytest.fail(
+            f"failed under {wanted} forced host devices:\n"
+            f"{proc.stdout[-4000:]}\n{proc.stderr[-2000:]}",
+            pytrace=False)
+    pytest.skip(f"verified in a subprocess under {wanted} forced host "
+                f"devices")

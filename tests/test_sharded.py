@@ -1,0 +1,259 @@
+"""Multi-device sharded scoring + device-routed serving (PR 7).
+
+The contract: sharded ``score_frontier``/``score_sweep`` are
+bit-identical to the single-device jit path (padding/masking only ever
+adds rows that are computed-and-dropped), argmins are identical through
+``design_beam``/``whatif.workload_sweep``, repeat sharded scores and
+hardware swaps recompile nothing, and the serving shard pool partitions
+a window across >= 2 devices while keeping the PR 6 deadline semantics.
+
+Multi-device cases carry ``@pytest.mark.devices(n)``: the
+``device_count`` fixture re-invokes them in a subprocess under
+``--xla_force_host_platform_device_count=n`` (2/8/48-way sharding in
+one CI run, no hardware needed).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import batchcost, devicecost, elements as el, whatif
+from repro.core.autocomplete import design_beam
+from repro.core.batchcost import pack_frontier, pack_sweep
+from repro.core.hardware import hw1, hw3
+from repro.core.synthesis import Workload
+from repro.serving import DesignCalculatorService, ScoringShardPool
+from repro.serving.admission import DeadlineExceeded
+from repro.testing.devices import (DEVICE_COUNT_FLAG, forced_device_count,
+                                   forced_device_env)
+
+BASE = Workload(n_entries=120_000, n_queries=100)
+MIX = {"get": 60.0, "range_get": 20.0, "update": 20.0}
+
+
+def _specs():
+    return [el.spec_btree(), el.spec_array(1), el.spec_hash_table(),
+            el.spec_skip_list(), el.spec_trie(), el.spec_linked_list(),
+            el.spec_sorted_array(1), el.spec_csb_tree()]
+
+
+def _workloads(n=5):
+    return [dataclasses.replace(BASE, zipf_alpha=0.3 * i)
+            for i in range(n)]
+
+
+@pytest.fixture(autouse=True)
+def _reset_threshold():
+    yield
+    devicecost.set_shard_threshold(None)
+
+
+# ---------------------------------------------------------------------------
+# Satellite 1: the shard threshold knob
+# ---------------------------------------------------------------------------
+def test_shard_threshold_override_wins():
+    devicecost.set_shard_threshold(123)
+    assert devicecost.shard_threshold() == 123
+    devicecost.set_shard_threshold(None)
+    assert devicecost.shard_threshold() != 123
+
+
+def test_shard_threshold_env_var(monkeypatch):
+    monkeypatch.setenv(devicecost.SHARD_THRESHOLD_ENV, "777")
+    assert devicecost.shard_threshold() == 777
+    devicecost.set_shard_threshold(55)   # explicit override beats env
+    assert devicecost.shard_threshold() == 55
+    monkeypatch.setenv(devicecost.SHARD_THRESHOLD_ENV, "not-a-number")
+    devicecost.set_shard_threshold(None)
+    assert devicecost.shard_threshold() >= 1   # bad env falls through
+
+
+def test_single_device_calibration_never_shards(device_count):
+    if device_count > 1:
+        pytest.skip("calibration default is device-count dependent")
+    assert devicecost._calibrate_shard_threshold() \
+        == devicecost._MAX_FUSED_RECORDS
+
+
+def test_forced_device_env_helpers():
+    env = forced_device_env(8, {"XLA_FLAGS": f"{DEVICE_COUNT_FLAG}=2 "
+                                             "--other=1"})
+    assert forced_device_count(env) == 8
+    assert "--other=1" in env["XLA_FLAGS"]
+    assert env["XLA_FLAGS"].count(DEVICE_COUNT_FLAG) == 1
+    assert forced_device_count({"XLA_FLAGS": ""}) is None
+
+
+# ---------------------------------------------------------------------------
+# Split/merge partitions (the shard pool's primitive) — any device count
+# ---------------------------------------------------------------------------
+def test_frontier_split_merge_bit_identical(hw_analytical):
+    packed = pack_frontier(_specs(), BASE, MIX)
+    whole = packed.score(hw_analytical, shard=False)
+    for n_parts in (1, 2, 3, len(_specs()), 64):
+        parts = packed.split(n_parts)
+        assert sum(p.n_segments for p in parts) == packed.n_segments
+        merged = np.concatenate(
+            [p.score(hw_analytical, shard=False) for p in parts])
+        assert np.array_equal(merged, whole)
+
+
+def test_sweep_split_merge_bit_identical(hw_analytical):
+    sweep = pack_sweep(_specs(), _workloads(), [MIX] * 5)
+    whole = sweep.score(hw_analytical, shard=False)
+    for n_parts in (2, 3, 64):
+        parts = sweep.split(n_parts)
+        assert all(p.rectangular for p in parts)   # ids stay shared
+        merged = np.concatenate(
+            [p.score(hw_analytical, shard=False) for p in parts], axis=1)
+        assert np.array_equal(merged, whole)
+
+
+def test_sharded_paths_bit_identical_here(hw_analytical):
+    """shard=True (pmap, whatever the local device count) must match the
+    flat jit path bit for bit — the 1-device leg of the parity matrix."""
+    packed = pack_frontier(_specs(), BASE, MIX)
+    assert np.array_equal(packed.score(hw_analytical, shard=True),
+                          packed.score(hw_analytical, shard=False))
+    sweep = pack_sweep(_specs(), _workloads(), [MIX] * 5)
+    assert np.array_equal(sweep.score(hw_analytical, shard=True),
+                          sweep.score(hw_analytical, shard=False))
+    one_row = pack_sweep(_specs(), [BASE], [MIX])
+    assert np.array_equal(one_row.score(hw_analytical, shard=True),
+                          one_row.score(hw_analytical, shard=False))
+
+
+def test_pool_degenerate_is_plain_score(hw_analytical):
+    pool = ScoringShardPool(1)
+    assert pool.n_shards == 1
+    packed = pack_frontier(_specs(), BASE, MIX)
+    totals, used = pool.score_frontier(packed, hw_analytical)
+    assert used == 1
+    assert np.array_equal(totals, packed.score(hw_analytical))
+    sweep = pack_sweep(_specs(), _workloads(), [MIX] * 5)
+    grid, used = pool.score_sweep(sweep, hw_analytical)
+    assert used == 1
+    assert np.array_equal(grid, sweep.score(hw_analytical))
+
+
+def test_pool_abort_when_probe_reports_dead(hw_analytical):
+    pool = ScoringShardPool(1)
+    packed = pack_frontier(_specs(), BASE, MIX)
+    totals, used = pool.score_frontier(packed, hw_analytical,
+                                       before_dispatch=lambda i: False)
+    assert totals is None and used == 0
+
+
+# ---------------------------------------------------------------------------
+# Satellite 3: the multi-device parity matrix (subprocess per count)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n_devices", [
+    pytest.param(2, marks=pytest.mark.devices(2)),
+    pytest.param(8, marks=pytest.mark.devices(8)),
+    pytest.param(48, marks=[pytest.mark.devices(48), pytest.mark.slow]),
+])
+def test_sharded_parity_under_devices(n_devices, device_count):
+    assert device_count == n_devices
+    hw = hw1()
+    specs, workloads = _specs(), _workloads()
+    devicecost.set_shard_threshold(1)   # every auto decision shards
+
+    # frontier: sharded bit-identical to flat, and the auto path shards
+    packed = pack_frontier(specs, BASE, MIX)
+    flat = packed.score(hw, shard=False)
+    assert np.array_equal(packed.score(hw, shard=True), flat)
+    assert np.array_equal(packed.score(hw), flat)   # auto
+
+    # sweep: workload rows pmap across devices, bit-identical grid
+    sweep = pack_sweep(specs, workloads, [MIX] * len(workloads))
+    grid = sweep.score(hw, shard=False)
+    sharded = sweep.score(hw, shard=True)
+    assert np.array_equal(sharded, grid)
+    assert np.array_equal(np.argmin(sharded, axis=1),
+                          np.argmin(grid, axis=1))
+    # 1e-6 against the grouped oracle, like every other engine pairing
+    np.testing.assert_allclose(sharded, sweep.score(hw, engine="grouped"),
+                               rtol=1e-6)
+
+    # zero recompiles on repeat sharded scores AND hardware swaps
+    sweep.score(hw3(), shard=True)   # warm both tables
+    before = devicecost.trace_count()
+    for _ in range(3):
+        assert np.array_equal(sweep.score(hw, shard=True), grid)
+        sweep.score(hw3(), shard=True)
+    packed.score(hw, shard=True)
+    assert devicecost.trace_count() == before
+
+    # single-row sweeps fall back to segment-range sharding, same grid
+    one_row = pack_sweep(specs, [BASE], [MIX])
+    assert np.array_equal(one_row.score(hw, shard=True),
+                          one_row.score(hw, shard=False))
+
+    # the shard pool partitions and merges bit-identically
+    pool = ScoringShardPool(min_cells_per_shard=1)
+    assert pool.n_shards == min(n_devices, len(pool.devices))
+    totals, used = pool.score_frontier(packed, hw)
+    assert used > 1
+    assert np.array_equal(totals, flat)
+    pooled, used = pool.score_sweep(sweep, hw)
+    assert used > 1
+    assert np.array_equal(pooled, grid)
+    pool.close()
+
+    # identical argmins through the public search/sweep surfaces
+    devicecost.set_shard_threshold(devicecost._MAX_FUSED_RECORDS)
+    answer_flat = whatif.workload_sweep(specs, workloads, hw,
+                                        [MIX] * len(workloads))
+    beam_flat = design_beam(BASE, hw, MIX, max_rounds=2)
+    batchcost.clear_caches()
+    devicecost.set_shard_threshold(1)
+    answer_sharded = whatif.workload_sweep(specs, workloads, hw,
+                                           [MIX] * len(workloads))
+    beam_sharded = design_beam(BASE, hw, MIX, max_rounds=2)
+    assert np.array_equal(answer_sharded.totals, answer_flat.totals)
+    assert beam_sharded["design"] == beam_flat["design"]
+    assert beam_sharded["cost_s"] == beam_flat["cost_s"]
+
+
+@pytest.mark.devices(2)
+def test_calibration_with_multiple_devices(device_count):
+    assert device_count == 2
+    threshold = devicecost._calibrate_shard_threshold()
+    assert threshold >= devicecost._CALIBRATION_BUCKETS[0]
+    # the lazily-memoized default resolves to some positive cut-over
+    assert devicecost.shard_threshold() >= 1
+
+
+@pytest.mark.devices(2)
+def test_service_routes_across_scoring_shards(device_count):
+    """A mixed window served across >= 2 scoring shards: bit-identical
+    answers, shard dispatches counted, PR 6 deadlines intact."""
+    assert device_count == 2
+    hw = hw1()
+    specs, workloads = _specs(), _workloads()
+    mixes = [MIX] * len(workloads)
+    oracle = whatif.workload_sweep(specs, workloads, hw, mixes)
+    service = DesignCalculatorService(
+        [hw], scoring_shards=2, shard_min_cells=1, window_s=0.02)
+    try:
+        futures = [service.submit_sweep(specs, workloads, hw, mixes)
+                   for _ in range(2)]
+        futures.append(service.submit_design(
+            el.spec_btree(), el.spec_array(1), BASE, hw, MIX))
+        answers = [f.result(timeout=60) for f in futures]
+        for sweep_answer in answers[:2]:
+            assert np.array_equal(sweep_answer.totals, oracle.totals)
+        direct = whatif.what_if_design(
+            el.spec_btree(), el.spec_array(1), BASE, hw, MIX)
+        np.testing.assert_allclose(answers[2].baseline_seconds,
+                                   direct.baseline_seconds, rtol=1e-12)
+        stats = service.stats()
+        assert stats["shard_dispatches"] >= 2
+        # deadline composition: an already-expired request fails fast
+        # with DeadlineExceeded instead of occupying a sharded call
+        doomed = service.submit_sweep(specs, workloads, hw, mixes,
+                                      deadline_s=1e-9)
+        with pytest.raises(DeadlineExceeded):
+            doomed.result(timeout=60)
+    finally:
+        service.stop()
