@@ -26,11 +26,25 @@ runs *between* shard dispatches — the PR 6 contract that deadlines are
 checked between scoring calls extends to checks between the shards of
 one call.  When the probe reports nothing left alive, remaining
 dispatches are skipped and the group returns ``None``.
+
+Every wait on a dispatched part is **bounded**: ``part_timeout_s``
+(capped by the group's remaining ``deadline`` when one is set) turns a
+hung device into a typed :class:`ShardTimeout` instead of a worker
+thread blocked forever on ``Future.result()``.  Parts the pool walks
+away from — a timed-out sibling, an aborted group — cannot always be
+cancelled (`concurrent.futures` futures already running are
+uncancellable): those are *abandoned*, their eventual results swallowed
+and their count surfaced in ``stats()["abandoned_parts"]``, because an
+invisible thread still occupying a device is exactly the kind of state
+an operator needs to see.
 """
 from __future__ import annotations
 
+import threading
+import time
 from concurrent.futures import ThreadPoolExecutor
-from typing import Callable, List, Optional, Tuple
+from concurrent.futures import TimeoutError as FutureTimeout
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -41,6 +55,30 @@ from repro.core.hardware import HardwareProfile
 #: below this many cells per partition, splitting costs more dispatch
 #: overhead than it recovers — one shard serves the whole product
 DEFAULT_MIN_CELLS_PER_SHARD = 4096
+
+#: generous default bound on one part's device call — the point is that
+#: a wait is never *unbounded*, not that 60s is a good serving deadline
+#: (the service derives much tighter per-part budgets from its window
+#: deadlines)
+DEFAULT_PART_TIMEOUT_S = 60.0
+
+
+class ShardTimeout(TimeoutError):
+    """One partition's device call exceeded its deadline-derived timeout."""
+
+    def __init__(self, message: str, *, part: int,
+                 timeout_s: float) -> None:
+        super().__init__(message)
+        self.part = part
+        self.timeout_s = timeout_s
+
+
+def _swallow(future) -> None:
+    """Done-callback for abandoned parts: retrieve and drop the outcome."""
+    try:
+        future.exception()
+    except Exception:
+        pass
 
 
 class ScoringShardPool:
@@ -54,17 +92,70 @@ class ScoringShardPool:
     """
 
     def __init__(self, n_shards: Optional[int] = None, *,
-                 min_cells_per_shard: int = DEFAULT_MIN_CELLS_PER_SHARD
-                 ) -> None:
+                 min_cells_per_shard: int = DEFAULT_MIN_CELLS_PER_SHARD,
+                 part_timeout_s: float = DEFAULT_PART_TIMEOUT_S) -> None:
         devices = jax.local_devices()
         wanted = len(devices) if n_shards is None else int(n_shards)
         self.devices = devices[:max(min(wanted, len(devices)), 1)]
         self.n_shards = len(self.devices)
         self.min_cells_per_shard = max(int(min_cells_per_shard), 1)
+        self.part_timeout_s = float(part_timeout_s)
+        self._lock = threading.Lock()
+        self._counters: Dict[str, int] = {
+            "shard_timeouts": 0,
+            "abandoned_parts": 0,
+        }
         self._pool = ThreadPoolExecutor(
             max_workers=self.n_shards,
             thread_name_prefix="scoring-shard") \
             if self.n_shards > 1 else None
+
+    def stats(self) -> Dict[str, int]:
+        """Snapshot of the pool's failure-handling counters."""
+        with self._lock:
+            return dict(self._counters)
+
+    def _count(self, key: str, by: int = 1) -> None:
+        with self._lock:
+            self._counters[key] += by
+
+    def _timeout_for(self, deadline: Optional[float]) -> float:
+        """One part-wait's budget: the window deadline's remaining time
+        (floored so a just-expired deadline still lets an already-done
+        future deliver), bounded by ``part_timeout_s`` either way."""
+        if deadline is None:
+            return self.part_timeout_s
+        return max(min(self.part_timeout_s,
+                       deadline - time.monotonic()), 0.01)
+
+    def _abandon(self, futures: List) -> None:
+        """Cancel what still can be; account for in-flight parts that
+        cannot (they keep a device and an executor thread busy invisibly
+        — the counter is the visibility) and swallow their results."""
+        for f in futures:
+            if f.cancel():
+                continue
+            if f.done():
+                _swallow(f)
+                continue
+            self._count("abandoned_parts")
+            f.add_done_callback(_swallow)
+
+    def _gather(self, futures: List, deadline: Optional[float]) -> List:
+        """Await every part with a bounded wait; a timeout abandons the
+        stragglers and raises a typed :class:`ShardTimeout`."""
+        results = []
+        for i, f in enumerate(futures):
+            timeout = self._timeout_for(deadline)
+            try:
+                results.append(f.result(timeout=timeout))
+            except FutureTimeout:
+                self._count("shard_timeouts")
+                self._abandon(futures[i:])
+                raise ShardTimeout(
+                    f"part {i} exceeded its {timeout:.3f}s bounded wait",
+                    part=i, timeout_s=timeout) from None
+        return results
 
     def partitions(self, cells: int) -> int:
         """How many partitions a product of ``cells`` would occupy."""
@@ -76,7 +167,9 @@ class ScoringShardPool:
     def score_frontier(self, packed: PackedFrontier, hw: HardwareProfile,
                        engine: str = "fused",
                        before_dispatch: Optional[Callable[[int], bool]]
-                       = None) -> Tuple[Optional[np.ndarray], int]:
+                       = None,
+                       deadline: Optional[float] = None
+                       ) -> Tuple[Optional[np.ndarray], int]:
         """``(per-design totals, shards used)`` for a spliced frontier.
 
         Totals are ``None`` only when ``before_dispatch`` aborted the
@@ -90,12 +183,14 @@ class ScoringShardPool:
         futures = self._dispatch(parts, hw, engine, before_dispatch)
         if futures is None:
             return None, 0
-        return np.concatenate([f.result() for f in futures]), len(parts)
+        return np.concatenate(self._gather(futures, deadline)), len(parts)
 
     def score_sweep(self, sweep: PackedSweep, hw: HardwareProfile,
                     engine: str = "fused",
                     before_dispatch: Optional[Callable[[int], bool]]
-                    = None) -> Tuple[Optional[np.ndarray], int]:
+                    = None,
+                    deadline: Optional[float] = None
+                    ) -> Tuple[Optional[np.ndarray], int]:
         """``([points, designs] grid, shards used)`` for a spliced sweep.
 
         Partitions cut the design axis (every coalesced sweep in the
@@ -111,19 +206,19 @@ class ScoringShardPool:
         futures = self._dispatch(parts, hw, engine, before_dispatch)
         if futures is None:
             return None, 0
-        return np.concatenate([f.result() for f in futures],
+        return np.concatenate(self._gather(futures, deadline),
                               axis=1), len(parts)
 
     def _dispatch(self, parts: List, hw: HardwareProfile, engine: str,
                   before_dispatch: Optional[Callable[[int], bool]]):
         """Submit one device-routed score per partition; ``None`` when
-        the probe aborts (already-submitted shards are cancelled where
-        possible and otherwise finish harmlessly)."""
+        the probe aborts.  Already-submitted shards are cancelled where
+        possible — a running future ignores ``cancel()``, so those are
+        abandoned-and-accounted, not silently leaked."""
         futures = []
         for i, part in enumerate(parts):
             if before_dispatch is not None and not before_dispatch(i):
-                for f in futures:
-                    f.cancel()
+                self._abandon(futures)
                 return None
             device = self.devices[i % self.n_shards]
             futures.append(self._pool.submit(
