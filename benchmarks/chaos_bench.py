@@ -1,0 +1,505 @@
+"""BENCH_chaos: mixed traffic through the serving tier under injected
+faults — the PR 8 self-healing acceptance run.
+
+Drives the PR 6 closed-loop mixed traffic (interactive what-if clients +
+bulk workload-sweep clients, same shapes as ``benchmarks/load_bench.py``
+so the throughput numbers are comparable to BENCH_load's lanes regime)
+through two arms on one hardened service:
+
+1. **fault-free** — no :class:`~repro.testing.faults.FaultPlan` active:
+   the seams must cost nothing.  Asserted: **zero recompiles** across
+   the measured drive and every request answered; the arm's
+   questions/sec lands in the row next to BENCH_load's.
+2. **chaos** — ~5% of scoring work is sabotaged by a seeded plan:
+   shard dispatches raise (3%) and hang (1%, well past the part
+   timeout) and fused outputs NaN-poison (1%).
+
+Two catastrophic one-shot events are probed *between* the arms, outside
+the timed drives (they are not part of the 5% steady-state fault rate
+the p99 bar is about): the worker loop is crashed once — its in-flight
+window must fail *typed*, with :class:`~repro.serving.WorkerCrashed`,
+and the supervisor must resurrect the loop — and one profile's
+parameter banks are NaN-poisoned once — the fused -> flat -> grouped
+chain must serve the *exact* oracle answer, hold it while degraded, and
+recover through the timed fused probe.
+
+Acceptance bars — all asserted **before** anything is appended to the
+trajectory:
+
+* **nothing lost**: >= ``TARGET_RESOLVED`` of submitted requests
+  resolve with an answer or a typed ``ServiceError``; zero futures hang
+  (every wait bounded), zero untyped errors;
+* **every served answer is right**: interactive answers match the
+  scalar ``cost_workload`` oracle to 1e-6 and sweep grids match the
+  grouped oracle to 1e-6 (itself spot-checked against scalar cells) —
+  regardless of which engine (fused / fused-flat / grouped) served
+  them;
+* **bounded latency damage**: chaos-arm interactive p99 within
+  ``TARGET_CHAOS_P99_RATIO`` x of the fault-free arm's.
+
+Each full run appends one labelled entry to
+experiments/bench/BENCH_chaos.json.  ``run(smoke=True)`` — wired into
+``benchmarks/run.py --smoke`` — injects exactly one shard failure and
+one NaN-bank corruption, oracle-checks both answers, and writes no
+artifacts.  Standalone runs re-exec under
+:func:`benchmarks.common.apply_process_tuning`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from concurrent.futures import TimeoutError as FutureTimeout
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from benchmarks.common import emit_trajectory
+from benchmarks.load_bench import (_bulk_sweep, _interactive_questions,
+                                   _percentiles, _submit_interactive)
+
+#: >= this fraction of submitted requests must resolve with an answer
+#: or a typed ServiceError (the rest may only be admission sheds)
+TARGET_RESOLVED = 0.99
+#: chaos-arm interactive p99 / fault-free interactive p99
+TARGET_CHAOS_P99_RATIO = 3.0
+
+#: the ~5% sabotage plan (rates are per seam crossing)
+CHAOS_SEED = 1808
+FAULT_RATES = {"dispatch_error": 0.035, "dispatch_hang": 0.005,
+               "fused_corrupt": 0.01}
+
+
+def _chaos_plan(hang_s: float):
+    from repro.testing.faults import FaultPlan, FaultRule
+    return FaultPlan(CHAOS_SEED, [
+        FaultRule("shards.dispatch", kind="error",
+                  rate=FAULT_RATES["dispatch_error"]),
+        FaultRule("shards.dispatch", kind="hang",
+                  rate=FAULT_RATES["dispatch_hang"], hang_s=hang_s),
+        FaultRule("devicecost.fused", kind="corrupt",
+                  rate=FAULT_RATES["fused_corrupt"]),
+    ])
+
+
+def _drive(service, duration_s: float, n_interactive: int, n_bulk: int,
+           questions: List[Tuple], sweep, bulk_hw,
+           think_s: Tuple[float, float] = (0.008, 0.03)) -> Dict:
+    """Paced closed-loop mixed load that keeps every outcome: latencies
+    per lane, (question, answer) pairs for parity, and a full resolution
+    census — answered / typed / shed / untyped / hung.
+
+    ``think_s`` is the (interactive, bulk) per-client pause between
+    requests.  Unlike BENCH_load's zero-think-time drives (whose point
+    is saturation behavior), the chaos bench offers *nominal* load: the
+    p99-damage bar is about what healing costs when the system has the
+    slack to heal, not about queueing theory at 100% utilization, where
+    any capacity loss inflates the tail without bound."""
+    from repro.serving import RejectedError, ServiceError
+    out: Dict = {"interactive": [], "bulk": [], "answers": [],
+                 "sweeps": [], "submitted": 0, "answered": 0,
+                 "typed_errors": 0, "shed_interactive": 0, "shed_bulk": 0,
+                 "untyped": [], "hung": 0}
+    lock = threading.Lock()
+    stop = threading.Event()
+    specs, workloads = sweep
+
+    def resolve(fut, t0: float, record) -> None:
+        try:
+            answer = fut.result(timeout=30)
+        except FutureTimeout:
+            with lock:          # a lost/hung future — the cardinal sin
+                out["hung"] += 1
+            return
+        except ServiceError:
+            with lock:
+                out["typed_errors"] += 1
+            return
+        except Exception as exc:    # noqa: BLE001 — census, not control
+            with lock:
+                out["untyped"].append(repr(exc))
+            return
+        dt = time.perf_counter() - t0
+        with lock:
+            out["answered"] += 1
+            record(answer, dt)
+
+    def interactive_client(idx: int) -> None:
+        # staggered starts: a simultaneous thundering herd at arm start
+        # floods the first windows, and with a plan active (executor-
+        # routed parts) the queue wait trips spurious part timeouts
+        # whose hedges queue behind the same backlog — a ramp-in
+        # artifact, not steady-state healing
+        time.sleep(idx * 0.004)
+        i = idx
+        while not stop.is_set():
+            qi = i % len(questions)
+            i += 1
+            t0 = time.perf_counter()
+            try:
+                fut = _submit_interactive(service, questions[qi])
+            except RejectedError:
+                with lock:
+                    out["shed_interactive"] += 1
+                time.sleep(0.001)
+                continue
+            with lock:
+                out["submitted"] += 1
+
+            def record(answer, dt, qi=qi):
+                out["interactive"].append(dt)
+                out["answers"].append((qi, answer))
+            resolve(fut, t0, record)
+            time.sleep(think_s[0])
+
+    def bulk_client(idx: int) -> None:
+        time.sleep(0.005 + idx * 0.02)      # see interactive_client
+        while not stop.is_set():
+            t0 = time.perf_counter()
+            try:
+                fut = service.submit_sweep(specs, workloads, bulk_hw)
+            except RejectedError:
+                with lock:
+                    out["shed_bulk"] += 1
+                time.sleep(0.001)
+                continue
+            with lock:
+                out["submitted"] += 1
+
+            def record(answer, dt):
+                out["bulk"].append(dt)
+                out["sweeps"].append(answer)
+            resolve(fut, t0, record)
+            time.sleep(think_s[1])
+
+    threads = [threading.Thread(target=interactive_client, args=(i,),
+                                daemon=True) for i in range(n_interactive)]
+    threads += [threading.Thread(target=bulk_client, args=(i,),
+                                 daemon=True) for i in range(n_bulk)]
+    t_start = time.perf_counter()
+    for t in threads:
+        t.start()
+    time.sleep(duration_s)
+    stop.set()
+    for t in threads:
+        t.join(timeout=90)
+    out["wall_s"] = time.perf_counter() - t_start
+    return out
+
+
+def _compile_ladder(hws, max_records: int) -> None:
+    """Deterministically pre-trace every fused-kernel signature the
+    drives can produce.
+
+    A fused trace is keyed by the pow2 record bucket and segment pad
+    (``devicecost._pad_records``), and a coalescing window holds
+    anywhere from one evaluation (a lightly-loaded paced client) to a
+    full batch — so the *drive*-based warmup only compiles the window
+    compositions it happens to see.  Walking the pow2 bucket ladder up
+    front makes arm A's zero-recompile assert independent of warmup
+    scheduling luck.  Both the plain and the device-routed dispatch are
+    warmed; profiles share bank shapes, so the ladder costs one trace
+    set total."""
+    import jax
+
+    from repro.core import devicecost, elements as el
+    from repro.core.batchcost import pack_frontier
+    from repro.core.synthesis import Workload
+    # a real fitted model id — _check_frontier rejects unfitted ids
+    mid = pack_frontier([el.spec_btree()],
+                        Workload(n_entries=1000, n_queries=10), None).ids[0]
+    dev = jax.local_devices()[0]
+    for hw in hws:
+        for n_seg in (1, 17):        # n_pad 16 and 32
+            bucket = 16
+            while bucket <= max_records:
+                ids = np.full(bucket, mid, np.int32)
+                sizes = np.ones(bucket, np.float32)
+                weights = np.zeros(bucket, np.float32)
+                tiles = np.zeros(bucket // devicecost.TILE, np.int64)
+                devicecost.score_frontier(ids, sizes, weights, tiles,
+                                          n_seg, hw, shard=False)
+                devicecost.score_frontier(ids, sizes, weights, tiles,
+                                          n_seg, hw, device=dev)
+                bucket *= 2
+
+
+def _interactive_oracles(questions: List[Tuple]) -> List:
+    from repro.core import whatif
+    fns = {"design": whatif.what_if_design,
+           "hardware": whatif.what_if_hardware,
+           "workload": whatif.what_if_workload}
+    return [fns[q[0]](*q[1:], engine="scalar") for q in questions]
+
+
+def _assert_parity(res: Dict, oracles: List, sweep_oracle: np.ndarray,
+                   arm: str) -> None:
+    """Every *served* answer matches its oracle — whichever engine
+    produced it."""
+    for qi, answer in res["answers"]:
+        ref = oracles[qi]
+        for attr in ("baseline_seconds", "variant_seconds"):
+            got, want = getattr(answer, attr), getattr(ref, attr)
+            assert abs(got - want) <= 1e-6 * abs(want), (
+                f"{arm}: interactive answer diverged from the scalar "
+                f"oracle (q{qi} {attr}: {got!r} vs {want!r}, "
+                f"engine={answer.engine})")
+    for answer in res["sweeps"]:
+        assert np.allclose(answer.totals, sweep_oracle, rtol=1e-6), (
+            f"{arm}: sweep grid diverged from the grouped oracle "
+            f"(engine={answer.engine})")
+
+
+def _assert_resolution(res: Dict, arm: str) -> float:
+    assert res["hung"] == 0, \
+        f"{arm}: {res['hung']} futures hung past their bounded wait"
+    assert not res["untyped"], \
+        f"{arm}: untyped client-visible errors: {res['untyped'][:3]}"
+    resolved = res["answered"] + res["typed_errors"]
+    ratio = resolved / max(res["submitted"], 1)
+    assert ratio >= TARGET_RESOLVED, (
+        f"{arm}: only {ratio:.4f} of submitted requests resolved "
+        f"(answered {res['answered']}, typed {res['typed_errors']}, "
+        f"of {res['submitted']})")
+    return ratio
+
+
+def _crash_probe(service, questions: List[Tuple]) -> int:
+    """Crash the worker once; the in-flight window must fail typed and
+    the supervisor must resurrect the loop.  Returns restart count."""
+    from repro.serving import WorkerCrashed
+    from repro.testing.faults import FaultPlan, FaultRule
+    plan = FaultPlan(CHAOS_SEED, [FaultRule("service.worker",
+                                            kind="error", at=(0,))])
+    with plan.activate():
+        fut = _submit_interactive(service, questions[0])
+        try:
+            fut.result(timeout=30)
+            raise AssertionError("injected worker crash did not surface")
+        except WorkerCrashed:
+            pass
+    _submit_interactive(service, questions[0]).result(timeout=30)
+    restarts = service.stats()["worker_restarts"]
+    assert restarts >= 1 and service.health()["worker_alive"]
+    return restarts
+
+
+def _degradation_probe(service, questions: List[Tuple], oracles: List,
+                       victim, probe_s: float) -> None:
+    """NaN-poison one profile's parameter banks (once); the degraded
+    chain must serve the *exact* grouped-oracle answer, stay on it while
+    degraded, and recover through the timed fused probe."""
+    from repro.core import devicecost
+    from repro.testing.faults import FaultPlan, FaultRule
+    qi = next(i for i, q in enumerate(questions) if q[-1] is victim)
+    q, ref = questions[qi], oracles[qi]
+    # the corruption only bites a *rebuilt* table: drop the live one and
+    # rebuild it under the plan *here*, synchronously — a tight part
+    # timeout must not let an abandoned first build race a clean rebuild
+    # for the cache slot (the one-shot rule would be spent on the loser)
+    devicecost.invalidate_table(victim)
+    plan = FaultPlan(CHAOS_SEED + 1, [
+        FaultRule("devicecost.banks", kind="corrupt", rate=1.0,
+                  key=victim.name, max_fires=1)])
+    with plan.activate():
+        devicecost.device_table(victim)
+        assert plan.fires("devicecost.banks") == 1
+        got = _submit_interactive(service, q).result(timeout=30)
+    assert got.engine == "grouped", \
+        f"NaN banks were served by {got.engine!r}, not the grouped oracle"
+    assert abs(got.baseline_seconds - ref.baseline_seconds) \
+        <= 1e-9 * abs(ref.baseline_seconds)
+    assert service.health()["engines"][victim.name]["degraded"]
+    time.sleep(probe_s + 0.1)
+    got = _submit_interactive(service, q).result(timeout=30)
+    assert got.engine == "fused", \
+        "the engine probe did not recover the fused path"
+    assert not service.health()["engines"][victim.name]["degraded"]
+
+
+def _smoke(h1, workload, skewed) -> None:
+    """S6 smoke: one injected shard failure + one NaN-bank corruption,
+    both oracle-checked; no artifacts."""
+    from repro.core import devicecost, whatif
+    from repro.serving import DesignCalculatorService
+    from repro.testing.faults import FaultPlan, FaultRule
+    questions = _interactive_questions(workload, skewed, h1, h1)
+    q = questions[0]
+    oracle = whatif.what_if_design(*q[1:], engine="scalar")
+    svc = DesignCalculatorService([h1], window_s=0.002,
+                                  engine_probe_s=30.0)
+    try:
+        _submit_interactive(svc, q).result(timeout=60)      # warm
+        # one shard-dispatch failure: healed by the pool, served fused
+        with FaultPlan(7, [FaultRule("shards.dispatch", kind="error",
+                                     at=(0,))]).activate():
+            got = _submit_interactive(svc, q).result(timeout=60)
+        assert abs(got.baseline_seconds - oracle.baseline_seconds) \
+            <= 1e-6 * oracle.baseline_seconds
+        assert got.engine == "fused" and \
+            svc.stats()["shard_retries"] >= 1
+        # one NaN-bank corruption: served exactly by the grouped oracle
+        devicecost.invalidate_table(h1)
+        with FaultPlan(7, [FaultRule("devicecost.banks", kind="corrupt",
+                                     rate=1.0, max_fires=1)]).activate():
+            got = _submit_interactive(svc, q).result(timeout=60)
+        assert abs(got.baseline_seconds - oracle.baseline_seconds) \
+            <= 1e-9 * oracle.baseline_seconds
+        assert got.engine == "grouped" and \
+            svc.stats()["fallback_grouped"] >= 1
+    finally:
+        svc.stop()
+    print("chaos smoke: shard failure healed fused, NaN banks served by "
+          "the grouped oracle, both to oracle parity")
+
+
+def run(quick: bool = False, smoke: bool = False) -> None:
+    from repro.core import devicecost, whatif
+    from repro.core.hardware import hw1, hw2
+    from repro.core.synthesis import Workload, cost_workload
+    from repro.serving import DesignCalculatorService
+    from repro.testing.faults import FaultPlan
+
+    workload = Workload(n_entries=100_000, n_queries=100)
+    skewed = dataclasses.replace(workload, zipf_alpha=1.5)
+    h1, h2 = hw1(), hw2()
+    if smoke:
+        _smoke(h1, workload, skewed)
+        return
+
+    duration = 2.0 if quick else 3.0
+    # BENCH_load's lanes client mix, but with a moderate sweep: the
+    # chaos-arm p99 sits on one part timeout + one retry, so the part
+    # timeout wants to be tight, and the timeout floor is a *legit*
+    # bulk dispatch under load — a spurious timeout abandons a part
+    # that is still computing, and on a small host that duplicated work
+    # cascades into worse tails than the hang it was guarding against.
+    # Cheap parts keep every heal (real or spurious) cheap.
+    n_interactive, n_bulk = 8, 3
+    n_specs, n_points = 256, 24
+    part_timeout_s = 0.008
+    engine_probe_s = 0.25
+    questions = _interactive_questions(workload, skewed, h1, h2)
+    sweep = _bulk_sweep(n_specs, n_points, workload)
+    oracles = _interactive_oracles(questions)
+    sweep_oracle = whatif.workload_sweep(*sweep, h1,
+                                         engine="grouped").totals
+    # the grouped oracle itself is spot-checked against scalar cells
+    specs, workloads = sweep
+    for w_i, d_i in ((0, 0), (len(workloads) // 2, len(specs) // 2),
+                     (len(workloads) - 1, len(specs) - 1)):
+        cell = cost_workload(specs[d_i], workloads[w_i], h1)
+        assert abs(sweep_oracle[w_i, d_i] - cell) <= 1e-9 * abs(cell)
+
+    svc = DesignCalculatorService(
+        [h1, h2], window_s=0.002, bulk_per_window=1,
+        shard_part_timeout_s=part_timeout_s,
+        engine_probe_s=engine_probe_s, worker_backoff_s=0.005)
+    try:
+        # warm: pre-trace the whole fused bucket ladder (window
+        # compositions vary run to run), then a short drive to compile
+        # the sweep shape and heat the service's own caches
+        _compile_ladder([h1, h2], 512)
+        _drive(svc, min(duration / 2, 1.5), n_interactive, n_bulk,
+               questions, sweep, h1)
+        # a rule-free plan forces the executor-routed timed path the
+        # fault-free fast path skips: spawn + warm the pool's worker
+        # threads NOW, or the chaos arm's first dispatch pays the cold
+        # start, trips a spurious part timeout, and the abandoned work
+        # wedges the executor into a timeout cascade for ~0.3s
+        with FaultPlan(0, []).activate():
+            for q in questions:
+                _submit_interactive(svc, q).result(timeout=60)
+            svc.submit_sweep(*sweep, h1).result(timeout=60)
+
+        # -- arm A: fault-free — the seams must cost nothing ----------------
+        traces_before = devicecost.trace_count()
+        clean = _drive(svc, duration, n_interactive, n_bulk, questions,
+                       sweep, h1)
+        recompiles = devicecost.trace_count() - traces_before
+        assert recompiles == 0, \
+            f"fault-free chaos arm recompiled the fused scorer {recompiles}x"
+        clean_resolved = _assert_resolution(clean, "fault-free")
+        assert clean["typed_errors"] == 0 and \
+            clean["shed_interactive"] == 0, \
+            "fault-free arm saw errors or interactive sheds"
+        _assert_parity(clean, oracles, sweep_oracle, "fault-free")
+
+        # -- catastrophic one-shot probes (untimed) -------------------------
+        restarts = _crash_probe(svc, questions)
+        _degradation_probe(svc, questions, oracles, h1, engine_probe_s)
+
+        # -- arm B: ~5% chaos -----------------------------------------------
+        plan = _chaos_plan(hang_s=6 * part_timeout_s)
+        with plan.activate():
+            chaos = _drive(svc, duration, n_interactive, n_bulk,
+                           questions, sweep, h1)
+        assert plan.fires() > 0, "the chaos plan injected nothing"
+        chaos_resolved = _assert_resolution(chaos, "chaos")
+        _assert_parity(chaos, oracles, sweep_oracle, "chaos")
+        stats = svc.stats()
+    finally:
+        svc.stop()
+
+    clean_i = _percentiles(clean["interactive"])
+    chaos_i = _percentiles(chaos["interactive"])
+    p99_ratio = chaos_i["p99"] / max(clean_i["p99"], 1e-12)
+    print(f"interactive p99: fault-free {clean_i['p99']:.1f} ms -> "
+          f"chaos {chaos_i['p99']:.1f} ms ({p99_ratio:.2f}x, target <= "
+          f"{TARGET_CHAOS_P99_RATIO:.0f}x); {plan.fires()} faults "
+          f"injected, {chaos['answered']} answered, "
+          f"{chaos['typed_errors']} typed errors")
+    worst = sorted(chaos["interactive"])[-5:]
+    print(f"healing: {stats['shard_timeouts']} timeouts, "
+          f"{stats['shard_retries']} retries, "
+          f"{stats['shard_rescored']} flat rescores, "
+          f"{stats['abandoned_parts']} abandoned, "
+          f"{stats['shard_nonfinite']} non-finite; worst interactive "
+          + " ".join(f"{s * 1e3:.0f}ms" for s in worst))
+    assert p99_ratio <= TARGET_CHAOS_P99_RATIO, (
+        f"chaos p99 {chaos_i['p99']:.1f} ms blew past "
+        f"{TARGET_CHAOS_P99_RATIO:.0f}x the fault-free "
+        f"{clean_i['p99']:.1f} ms")
+
+    rows = [{
+        "bench": "chaos_mixed_load",
+        "duration_s": duration,
+        "clients_interactive": n_interactive,
+        "clients_bulk": n_bulk,
+        "sweep_cells": n_specs * n_points,
+        "fault_rates": dict(FAULT_RATES),
+        "faults_injected": plan.fires(),
+        "fault_counts": plan.counts(),
+        "faultfree_qps": (len(clean["interactive"]) + len(clean["bulk"]))
+        / clean["wall_s"],
+        "faultfree_interactive_p99_ms": clean_i["p99"],
+        "faultfree_recompiles": recompiles,
+        "faultfree_resolved": clean_resolved,
+        "chaos_qps": (len(chaos["interactive"]) + len(chaos["bulk"]))
+        / chaos["wall_s"],
+        "chaos_interactive_p50_ms": chaos_i["p50"],
+        "chaos_interactive_p99_ms": chaos_i["p99"],
+        "chaos_p99_ratio": p99_ratio,
+        "chaos_resolved": chaos_resolved,
+        "chaos_answered": chaos["answered"],
+        "chaos_typed_errors": chaos["typed_errors"],
+        "shard_retries": stats["shard_retries"],
+        "shard_timeouts": stats["shard_timeouts"],
+        "abandoned_parts": stats["abandoned_parts"],
+        "shard_rescored": stats["shard_rescored"],
+        "device_quarantines": stats["device_quarantines"],
+        "nonfinite_groups": stats["nonfinite_groups"],
+        "fallback_flat": stats["fallback_flat"],
+        "fallback_grouped": stats["fallback_grouped"],
+        "engine_degraded": stats["engine_degraded"],
+        "engine_recovered": stats["engine_recovered"],
+        "worker_restarts": restarts,
+    }]
+    emit_trajectory("BENCH_chaos", "PR8 fault injection + self-healing",
+                    rows, keys=list(rows[0].keys()))
+
+
+if __name__ == "__main__":
+    from benchmarks.common import apply_process_tuning
+    apply_process_tuning()
+    run()

@@ -4,10 +4,12 @@
     PYTHONPATH=src python -m benchmarks.run --smoke
 
 ``--smoke`` is the fast validation path: it runs the search-engine,
-workload-sweep, what-if-serving and sharded-scoring parity checks at
-tiny sizes (every
+workload-sweep, what-if-serving, sharded-scoring and fault-injection
+parity checks at tiny sizes (every
 engine against the scalar oracle, grouped sweep grids bit-identical to
-per-workload loops, zero-recompile probes), writes **no** artifacts and
+per-workload loops, zero-recompile probes, one injected shard failure
+and one NaN-bank corruption both healed to oracle parity), writes
+**no** artifacts and
 appends nothing to the BENCH_search / BENCH_serving trajectories —
 CI-friendly, seconds not minutes.  The full trajectory run stays one
 command (no flags).
@@ -19,10 +21,11 @@ import sys
 import time
 import traceback
 
-from benchmarks import (design_space, device_scaling, fig6_accuracy,
-                        fig7_bulkload_training, fig8_cache_skew,
-                        fig9_design_search, hillclimb, kernels_bench,
-                        load_bench, roofline, search_bench, serving_bench)
+from benchmarks import (chaos_bench, design_space, device_scaling,
+                        fig6_accuracy, fig7_bulkload_training,
+                        fig8_cache_skew, fig9_design_search, hillclimb,
+                        kernels_bench, load_bench, roofline, search_bench,
+                        serving_bench)
 
 BENCHES = [
     ("design_space", design_space.run),
@@ -40,6 +43,10 @@ BENCHES = [
     # server — priority-lane latency, shedding, warm restart
     # (BENCH_load.json)
     ("BENCH_load", load_bench.run),
+    # robustness trajectory: the same mixed load under an ~5% seeded
+    # fault plan — self-healing shard pool, degraded-engine chain,
+    # worker resurrection, oracle parity under chaos (BENCH_chaos.json)
+    ("BENCH_chaos", chaos_bench.run),
     ("hillclimb_design", hillclimb.run),
     ("kernels", kernels_bench.run),
     ("roofline", roofline.run),
@@ -63,6 +70,8 @@ def main() -> None:
         serving_bench.run(smoke=True)
         print("### benchmark: BENCH_load (smoke)", flush=True)
         load_bench.run(smoke=True)
+        print("### benchmark: BENCH_chaos (smoke)", flush=True)
+        chaos_bench.run(smoke=True)
         print("### benchmark: device_scaling (smoke)", flush=True)
         device_scaling.run(smoke=True)
         print(f"### smoke done in {time.perf_counter() - t0:.1f}s")

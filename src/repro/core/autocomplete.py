@@ -72,6 +72,9 @@ class SearchResult:
     cost_seconds: float
     explored: int
     elapsed_seconds: float
+    #: the scoring engine that produced the costs (the serving tier
+    #: retags when a degraded-engine fallback served the completion)
+    engine: str = "fused"
 
     def summary(self) -> str:
         return (f"{self.spec.describe()}  cost={self.cost_seconds:.3e}s  "
@@ -203,7 +206,7 @@ def complete_design(partial: Sequence[Element], workload: Workload,
                              for spec in frontier])
     best = int(np.argmin(totals))  # first minimum — Algorithm 1's strict <
     return SearchResult(frontier[best], float(totals[best]), len(frontier),
-                        time.perf_counter() - t0)
+                        time.perf_counter() - t0, engine=engine)
 
 
 def complete_design_sweep(partial: Sequence[Element],
@@ -237,7 +240,7 @@ def complete_design_sweep(partial: Sequence[Element],
     for row in grid:
         best = int(np.argmin(row))   # first minimum — Algorithm 1's strict <
         results.append(SearchResult(frontier[best], float(row[best]),
-                                    len(frontier), elapsed))
+                                    len(frontier), elapsed, engine=engine))
     return results
 
 

@@ -55,6 +55,7 @@ from repro.core import memo
 from repro.core.hardware import HardwareProfile
 from repro.core.memo import MEMO_LOCK
 from repro.core.models import _BASES, KNN_SENTINEL
+from repro.testing import faults
 
 # ---------------------------------------------------------------------------
 # Level-2 model-name interning: frontier records refer to models by id.
@@ -217,6 +218,10 @@ def build_table(hw: HardwareProfile, *, sig_slots: int = _SIG_SLOTS,
         "kinds": kinds, "lin_w": lin_w, "lin_y0": lin_y0,
         "sig_c": sig_c, "sig_k": sig_k, "sig_x0": sig_x0, "sig_y0": sig_y0,
         "knn_lx": knn_lx, "knn_y": knn_y, "xlo": xlo, "xhi": xhi}.items()}
+    # chaos seam: a corrupt rule NaN-poisons the float banks (the int
+    # gather indices stay intact), surfacing as non-finite fused totals
+    # until invalidate_table() forces a clean rebuild
+    banks = faults.corrupt("devicecost.banks", banks, key=hw.name)
     return DeviceTable(hw.name, banks, avail, len(_MODEL_NAMES),
                        sig_slots, knn_slots,
                        has_knn=bool((kinds[avail] == KIND_KNN).any()),
@@ -252,6 +257,20 @@ def device_table(hw: HardwareProfile) -> DeviceTable:
         if stale is not None:
             _BANK_REPLICAS.discard(lambda k, v: v[0] is stale)
         return table
+
+
+def invalidate_table(hw: HardwareProfile) -> None:
+    """Drop a profile's cached device table and every bank replica of it.
+
+    The serving tier's degraded-engine recovery probe calls this before
+    re-trying the fused engine: if the banks were corrupted (non-finite
+    totals demoted the profile to the grouped oracle), the next
+    :func:`device_table` call rebuilds them from the fitted models."""
+    with MEMO_LOCK:
+        stale = hw._device_table
+        hw._device_table = None
+        if stale is not None:
+            _BANK_REPLICAS.discard(lambda k, v: v[0] is stale)
 
 
 # ---------------------------------------------------------------------------
@@ -586,8 +605,10 @@ def score_frontier(ids: np.ndarray, sizes: np.ndarray, weights: np.ndarray,
         shard = device is None and len(jax.local_devices()) > 1 \
             and len(ids) >= shard_threshold()
     if shard:
-        return _score_sharded(table, ids, sizes, weights, tile_segments,
-                              n_segments)
+        return faults.corrupt(
+            "devicecost.fused",
+            _score_sharded(table, ids, sizes, weights, tile_segments,
+                           n_segments))
     banks = table.banks if device is None else _banks_on(table, device)
     totals = np.zeros(n_pad, np.float64)
     for lo in range(0, max(len(ids), 1), _MAX_FUSED_RECORDS):
@@ -600,7 +621,7 @@ def score_frontier(ids: np.ndarray, sizes: np.ndarray, weights: np.ndarray,
             padded = tuple(jax.device_put(a, device) for a in padded)
         out = _score_jit(banks, *padded, n_pad, table.has_knn)
         totals += np.asarray(out, np.float64)
-    return totals[:n_segments]
+    return faults.corrupt("devicecost.fused", totals[:n_segments])
 
 
 def pad_sweep(ids: np.ndarray, sizes: np.ndarray, weights: np.ndarray,
@@ -733,7 +754,8 @@ def score_sweep_sharded(state: Tuple, n_segments: int, hw: HardwareProfile,
     and hardware swaps reuse the compiled executable."""
     table = device_table(hw)
     _check_frontier(table, host_ids)
-    return _sweep_sharded(table, state, n_segments)
+    return faults.corrupt("devicecost.fused",
+                          _sweep_sharded(table, state, n_segments))
 
 
 def score_sweep(ids, sizes, weights, tile_segments, n_segments: int,
@@ -784,8 +806,10 @@ def score_sweep(ids, sizes, weights, tile_segments, n_segments: int,
             padded = pad_sweep(host_ids, np.asarray(sizes),
                                np.asarray(weights),
                                np.asarray(tile_segments), _pow2(n, 16))
-            return _sweep_sharded(
-                table, shard_sweep(*padded, n_dev), n_segments)
+            return faults.corrupt(
+                "devicecost.fused",
+                _sweep_sharded(table, shard_sweep(*padded, n_dev),
+                               n_segments))
         if w_axis == 1 and (shard is True or (
                 shard is None and len(jax.local_devices()) > 1
                 and n >= shard_threshold())):
@@ -793,7 +817,7 @@ def score_sweep(ids, sizes, weights, tile_segments, n_segments: int,
             flat = _score_sharded(table, host_ids, np.asarray(sizes)[0],
                                   np.asarray(weights)[0],
                                   np.asarray(tile_segments), n_segments)
-            return flat[None]
+            return faults.corrupt("devicecost.fused", flat[None])
     banks = table.banks if device is None else _banks_on(table, device)
     if n == _pow2(n, 16) and n <= chunk_r:
         # bucket-aligned single chunk — the steady path: PackedSweep
@@ -805,7 +829,8 @@ def score_sweep(ids, sizes, weights, tile_segments, n_segments: int,
             args = tuple(jax.device_put(np.asarray(a), device)
                          for a in args)
         out = _sweep_jit(banks, *args, n_pad, table.has_knn)
-        return np.asarray(out, np.float64)[:, :n_segments]
+        return faults.corrupt("devicecost.fused",
+                              np.asarray(out, np.float64)[:, :n_segments])
     ids = host_ids
     sizes, weights = np.asarray(sizes), np.asarray(weights)
     tile_segments = np.asarray(tile_segments)
@@ -820,7 +845,7 @@ def score_sweep(ids, sizes, weights, tile_segments, n_segments: int,
             padded = tuple(jax.device_put(a, device) for a in padded)
         out = _sweep_jit(banks, *padded, n_pad, table.has_knn)
         totals += np.asarray(out, np.float64)
-    return totals[:, :n_segments]
+    return faults.corrupt("devicecost.fused", totals[:, :n_segments])
 
 
 def _score_sharded(table: DeviceTable, ids: np.ndarray, sizes: np.ndarray,

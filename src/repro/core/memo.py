@@ -254,25 +254,43 @@ def snapshot_caches(path: str) -> int:
     return sum(len(items) for items in caches.values())
 
 
-def restore_caches(path: str) -> int:
-    """Load a snapshot into the registered caches; 0 on *any* failure.
+#: a restore attempt's entry count plus *why* it went the way it did:
+#: ``restored`` / ``empty`` (valid snapshot, nothing to load) succeed;
+#: ``missing`` / ``corrupt`` (unreadable or failed env rebuild) /
+#: ``stale`` (version mismatch) / ``error`` (torn mid-restore, caches
+#: cleared) all cold-start with 0 entries
+RestoreReport = collections.namedtuple("RestoreReport", "entries outcome")
+
+
+def restore_caches_report(path: str) -> RestoreReport:
+    """Load a snapshot into the registered caches; never raises.
 
     Missing file, truncated pickle, schema/fingerprint mismatch, or a
-    value that no longer remaps — every failure path quietly returns 0
-    (cold start).  A service ``start()`` must never die on a stale
-    snapshot.  Partially-restored caches are cleared before returning 0
-    so a torn restore cannot leave inconsistent warm state."""
+    value that no longer remaps — every failure path quietly cold-starts
+    with 0 entries, but the :class:`RestoreReport` outcome says *which*
+    failure it was, so the serving tier can count and log discarded
+    snapshots instead of silently eating them (a service ``start()``
+    must still never die on a bad snapshot).  Partially-restored caches
+    are cleared before an ``error`` return so a torn restore cannot
+    leave inconsistent warm state."""
+    from repro.testing import faults    # no cycle: faults is stdlib+numpy
     try:
+        faults.check("memo.restore")
         with open(path, "rb") as fh:
             payload = pickle.load(fh)
+    except FileNotFoundError:
+        return RestoreReport(0, "missing")
+    except Exception:
+        return RestoreReport(0, "corrupt")
+    try:
         if payload.get("version") != snapshot_version():
-            return 0
+            return RestoreReport(0, "stale")
         env = {}
         for name, data in payload.get("env", {}).items():
             if name in SNAPSHOT_ENV:
                 env[name] = SNAPSHOT_ENV[name][1](data)
     except Exception:
-        return 0
+        return RestoreReport(0, "corrupt")
     restored = 0
     touched: List[DictCache] = []
     try:
@@ -288,9 +306,15 @@ def restore_caches(path: str) -> int:
                         value = transform(value, env)
                     cache.load(key, value)
                     restored += 1
-        return restored
+        return RestoreReport(restored, "restored" if restored else "empty")
     except Exception:
         with MEMO_LOCK:       # a torn restore must not leave partial state
             for cache in touched:
                 cache.clear()
-        return 0
+        return RestoreReport(0, "error")
+
+
+def restore_caches(path: str) -> int:
+    """:func:`restore_caches_report` for callers that only want the
+    entry count (0 on any failure, preserving the pre-report contract)."""
+    return restore_caches_report(path).entries

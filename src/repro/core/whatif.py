@@ -70,6 +70,10 @@ class WhatIfAnswer:
     baseline_seconds: float
     variant_seconds: float
     elapsed_seconds: float
+    #: the scoring engine that produced the answer ("fused", "grouped",
+    #: "scalar"; the serving tier retags with "fused-flat"/"grouped" when
+    #: a degraded-engine fallback served it — see docs/serving.md)
+    engine: str = "fused"
 
     @property
     def speedup(self) -> float:
@@ -105,7 +109,8 @@ def what_if_design(spec: DataStructureSpec, variant: DataStructureSpec,
                                    pack_frontier([variant], workload, mix)])
         base, var = packed.score(hw, engine=engine)
     return WhatIfAnswer(question_design(spec, variant),
-                        float(base), float(var), time.perf_counter() - t0)
+                        float(base), float(var), time.perf_counter() - t0,
+                        engine=engine)
 
 
 def what_if_hardware(spec: DataStructureSpec, workload: Workload,
@@ -126,7 +131,8 @@ def what_if_hardware(spec: DataStructureSpec, workload: Workload,
         base = packed.score(hw, engine=engine)[0]
         var = packed.score(new_hw, engine=engine)[0]
     return WhatIfAnswer(question_hardware(hw, new_hw),
-                        float(base), float(var), time.perf_counter() - t0)
+                        float(base), float(var), time.perf_counter() - t0,
+                        engine=engine)
 
 
 def what_if_workload(spec: DataStructureSpec, workload: Workload,
@@ -150,7 +156,8 @@ def what_if_workload(spec: DataStructureSpec, workload: Workload,
                                    pack_frontier([spec], new_workload, mix)])
         base, var = packed.score(hw, engine=engine)
     return WhatIfAnswer(question_workload(workload, new_workload),
-                        float(base), float(var), time.perf_counter() - t0)
+                        float(base), float(var), time.perf_counter() - t0,
+                        engine=engine)
 
 
 def question_sweep(points: Sequence[SweepPoint], n_designs: int) -> str:
@@ -170,6 +177,8 @@ class WorkloadSweepAnswer:
     points: Tuple[SweepPoint, ...]
     totals: np.ndarray               # [n_points, n_designs]
     elapsed_seconds: float
+    #: the scoring engine that produced the grid (see WhatIfAnswer.engine)
+    engine: str = "fused"
 
     @property
     def best_indices(self) -> np.ndarray:
@@ -233,7 +242,7 @@ def workload_sweep(specs: Sequence[DataStructureSpec],
                             [dict(p[1]) for p in points], engine=engine)
     return WorkloadSweepAnswer(question_sweep(points, len(specs)), specs,
                                points, totals,
-                               time.perf_counter() - t0)
+                               time.perf_counter() - t0, engine=engine)
 
 
 def add_bloom_filters(spec: DataStructureSpec, num_hashes: int = 4,

@@ -18,19 +18,31 @@ Multi-device routing (PR 7): a scoring-shard pool
 frontier/sweep across local devices, dispatches the partitions
 concurrently with deadlines probed between shard dispatches, and merges
 bit-identical totals before any future resolves.
+
+Self-healing (PR 8): failed/timed-out shard parts retry on a different
+device behind a per-device circuit breaker; non-finite fused results
+fall back fused-sharded -> fused-flat -> grouped oracle per evaluation
+(answers carry the producing ``engine`` tag); a supervisor resurrects a
+crashed worker, failing in-flight futures with the typed
+:class:`~repro.serving.admission.WorkerCrashed`.  Fault-tolerance state
+is observable via ``Service.health()`` and the ``stats()`` counters, and
+exercisable deterministically with :mod:`repro.testing.faults`.
 """
 from repro.serving.admission import (BudgetExceeded, DeadlineExceeded,
                                      RejectedError, ServiceError,
                                      ServiceStoppedError, SessionBudgets,
-                                     TokenBucket, request_cost)
+                                     TokenBucket, WorkerCrashed,
+                                     request_cost)
 from repro.serving.lanes import BULK, INTERACTIVE, LaneScheduler
 from repro.serving.service import (DesignCalculatorService, ServiceSession,
                                    ServiceStats)
-from repro.serving.shards import ScoringShardPool
+from repro.serving.shards import (NonFiniteScore, ScoringShardPool,
+                                  ShardTimeout)
 
 __all__ = [
     "DesignCalculatorService", "ServiceSession", "ServiceStats",
     "ServiceError", "RejectedError", "BudgetExceeded", "DeadlineExceeded",
-    "ServiceStoppedError", "TokenBucket", "SessionBudgets", "request_cost",
-    "LaneScheduler", "INTERACTIVE", "BULK", "ScoringShardPool",
+    "ServiceStoppedError", "WorkerCrashed", "TokenBucket", "SessionBudgets",
+    "request_cost", "LaneScheduler", "INTERACTIVE", "BULK",
+    "ScoringShardPool", "ShardTimeout", "NonFiniteScore",
 ]

@@ -73,6 +73,23 @@ class DeadlineExceeded(ServiceError):
         self.late_by_s = late_by_s      # how far past it we noticed
 
 
+class WorkerCrashed(ServiceError):
+    """The serving worker died while this request was in flight.
+
+    The supervisor restarts the worker (bounded restarts with backoff —
+    see ``docs/serving.md``), but the crashed window's requests are NOT
+    replayed: the client gets this typed error immediately and may
+    resubmit.  ``cause`` carries the exception that killed the worker;
+    ``restarts`` is the worker's restart count at failure time."""
+
+    def __init__(self, message: str, *,
+                 cause: Optional[BaseException] = None,
+                 restarts: int = 0) -> None:
+        super().__init__(message)
+        self.cause = cause
+        self.restarts = restarts
+
+
 class ServiceStoppedError(ServiceError):
     """The service stopped before serving this request.
 

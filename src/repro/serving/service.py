@@ -77,6 +77,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import itertools
+import logging
 import threading
 import time
 from concurrent.futures import Future
@@ -98,9 +99,13 @@ from repro.core.whatif import (WhatIfAnswer, WorkloadSweepAnswer,
                                question_sweep, question_workload)
 from repro.serving.admission import (BudgetExceeded, DeadlineExceeded,
                                      RejectedError, ServiceStoppedError,
-                                     SessionBudgets, request_cost)
+                                     SessionBudgets, WorkerCrashed,
+                                     request_cost)
 from repro.serving.lanes import (BULK, CLOSED, INTERACTIVE, LaneScheduler)
-from repro.serving.shards import ScoringShardPool
+from repro.serving.shards import NonFiniteScore, ScoringShardPool
+from repro.testing import faults
+
+_LOG = logging.getLogger("repro.serving")
 
 
 @dataclasses.dataclass
@@ -125,6 +130,17 @@ class ServiceStats:
     stopped_requests: int = 0   # requests failed by shutdown
     snapshot_entries: int = 0   # cache entries restored on start()
     shard_dispatches: int = 0   # partitions dispatched by multi-shard groups
+    # -- fault tolerance (PR 8; the shard pool's own retry/quarantine
+    # counters merge into stats() from ScoringShardPool.stats()) --------
+    nonfinite_groups: int = 0   # merged group totals that failed isfinite
+    fallback_flat: int = 0      # groups served by the flat fused fallback
+    fallback_grouped: int = 0   # groups served by the grouped oracle
+    engine_degraded: int = 0    # profiles demoted off the fused engine
+    engine_recovered: int = 0   # profiles recovered by a fused probe
+    worker_restarts: int = 0    # supervisor resurrections of the worker
+    snapshot_restored: int = 0  # warm restarts that loaded entries
+    snapshot_discarded: int = 0  # snapshots discarded (corrupt/stale/error)
+    snapshot_corrupt: int = 0   # the unreadable subset of discarded
 
 
 @dataclasses.dataclass
@@ -149,6 +165,7 @@ class _Evaluation:
     totals: Optional[np.ndarray] = None
     error: Optional[Exception] = None   # this evaluation's scoring failure
     owner: Optional["_Request"] = None  # back-pointer, set at serve time
+    engine: Optional[str] = None        # which engine produced totals
 
 
 @dataclasses.dataclass
@@ -301,7 +318,15 @@ class DesignCalculatorService:
                  default_deadline_s: Optional[float] = None,
                  snapshot_path: Optional[str] = None,
                  scoring_shards: Optional[int] = None,
-                 shard_min_cells: Optional[int] = None) -> None:
+                 shard_min_cells: Optional[int] = None,
+                 shard_part_timeout_s: Optional[float] = None,
+                 shard_retries: Optional[int] = None,
+                 shard_quarantine_after: Optional[int] = None,
+                 shard_quarantine_s: Optional[float] = None,
+                 fused_failure_threshold: int = 2,
+                 engine_probe_s: float = 2.0,
+                 max_worker_restarts: int = 8,
+                 worker_backoff_s: float = 0.02) -> None:
         if engine not in ("fused", "grouped"):
             raise ValueError(f"unknown serving engine: {engine!r}")
         self._engine = engine
@@ -325,10 +350,25 @@ class DesignCalculatorService:
                 weights={INTERACTIVE: 1}, lanes=(INTERACTIVE,))
         self._budgets = (SessionBudgets(budget_cells, budget_refill_per_s)
                          if budget_cells is not None else None)
-        self._shards = ScoringShardPool(
-            scoring_shards,
-            **({} if shard_min_cells is None
-               else {"min_cells_per_shard": shard_min_cells}))
+        pool_kwargs = {}
+        for name, value in (("min_cells_per_shard", shard_min_cells),
+                            ("part_timeout_s", shard_part_timeout_s),
+                            ("retries", shard_retries),
+                            ("quarantine_after", shard_quarantine_after),
+                            ("quarantine_s", shard_quarantine_s)):
+            if value is not None:
+                pool_kwargs[name] = value
+        self._shards = ScoringShardPool(scoring_shards, **pool_kwargs)
+        self._fused_failure_threshold = max(int(fused_failure_threshold), 1)
+        self._engine_probe_s = float(engine_probe_s)
+        self._max_worker_restarts = max(int(max_worker_restarts), 0)
+        self._worker_backoff_s = float(worker_backoff_s)
+        #: per-profile fused-engine health (guarded by self._lock):
+        #: name -> {"degraded": bool, "fails": int, "next_probe": float}
+        self._engine_health: Dict[str, Dict] = {}
+        self._snapshot_outcome = "disabled" if not snapshot_path \
+            else "pending"
+        self._inflight: List[_Request] = []
         self._profiles: Dict[str, HardwareProfile] = {}
         self._sessions: Dict[str, _SessionState] = {}
         self._session_counter = itertools.count()
@@ -345,14 +385,26 @@ class DesignCalculatorService:
         if self._thread is not None and self._thread.is_alive():
             return
         if self._snapshot_path and not self._restored:
-            # warm restart: restore the statics/segment memos; 0 on any
-            # failure (missing, corrupt, stale) — never raises
-            restored = memo.restore_caches(self._snapshot_path)
+            # warm restart: restore the statics/segment memos — never
+            # raises, but the outcome (restored / missing / corrupt /
+            # stale / error) is recorded, not swallowed
+            report = memo.restore_caches_report(self._snapshot_path)
             self._restored = True
+            self._snapshot_outcome = report.outcome
             with self._lock:
-                self._stats.snapshot_entries = restored
+                self._stats.snapshot_entries = report.entries
+                if report.outcome == "restored":
+                    self._stats.snapshot_restored += 1
+                elif report.outcome in ("corrupt", "stale", "error"):
+                    self._stats.snapshot_discarded += 1
+                    if report.outcome == "corrupt":
+                        self._stats.snapshot_corrupt += 1
+            if report.outcome in ("corrupt", "stale", "error"):
+                _LOG.warning(
+                    "discarded %s warm-restart snapshot at %s; "
+                    "cold-starting", report.outcome, self._snapshot_path)
         self._sched.reopen()
-        self._thread = threading.Thread(target=self._loop, daemon=True,
+        self._thread = threading.Thread(target=self._supervise, daemon=True,
                                         name="design-calculator-serving")
         self._thread.start()
 
@@ -436,9 +488,81 @@ class DesignCalculatorService:
     def stats(self) -> Dict[str, int]:
         with self._lock:
             out = dict(dataclasses.asdict(self._stats))
+        out.update(self._shards.stats())
         for lane in self._sched.lanes:
             out[f"queued_{lane}"] = self._sched.depth(lane)
         return out
+
+    def health(self) -> Dict:
+        """One structured snapshot of the service's fault-tolerance
+        state: worker liveness/restarts, per-profile engine health
+        (degraded profiles serve from the grouped oracle until a fused
+        probe succeeds), per-device breaker state, queue depths and the
+        warm-restart snapshot outcome."""
+        thread = self._thread
+        now = time.monotonic()
+        with self._lock:
+            engines = {
+                name: {"engine": "grouped" if st["degraded"]
+                       else self._engine,
+                       "degraded": st["degraded"],
+                       "consecutive_failures": st["fails"],
+                       "next_probe_in_s": max(st["next_probe"] - now, 0.0)
+                       if st["degraded"] else 0.0}
+                for name, st in self._engine_health.items()}
+            restarts = self._stats.worker_restarts
+            snapshot = {"outcome": self._snapshot_outcome,
+                        "entries": self._stats.snapshot_entries}
+        return {
+            "worker_alive": bool(thread is not None and thread.is_alive()),
+            "worker_restarts": restarts,
+            "engines": engines,
+            "devices": self._shards.device_health(),
+            "queued": {lane: self._sched.depth(lane)
+                       for lane in self._sched.lanes},
+            "snapshot": snapshot,
+        }
+
+    # -- per-profile fused-engine health (the degraded-mode gate) -----------
+    def _engine_state(self, name: str) -> Dict:
+        # callers hold self._lock
+        return self._engine_health.setdefault(
+            name, {"degraded": False, "fails": 0, "next_probe": 0.0})
+
+    def _fused_allowed(self, name: str, now: float) -> Tuple[bool, bool]:
+        """``(attempt fused?, is this attempt a recovery probe?)``."""
+        with self._lock:
+            st = self._engine_state(name)
+            if not st["degraded"]:
+                return True, False
+            if now >= st["next_probe"]:
+                # claim the probe slot so concurrent windows don't herd
+                st["next_probe"] = now + self._engine_probe_s
+                return True, True
+            return False, False
+
+    def _note_fused_ok(self, name: str) -> None:
+        with self._lock:
+            st = self._engine_state(name)
+            if st["degraded"]:
+                st["degraded"] = False
+                self._stats.engine_recovered += 1
+            st["fails"] = 0
+
+    def _note_fused_failure(self, name: str) -> None:
+        now = time.monotonic()
+        with self._lock:
+            st = self._engine_state(name)
+            st["fails"] += 1
+            if st["fails"] >= self._fused_failure_threshold \
+                    and not st["degraded"]:
+                st["degraded"] = True
+                st["next_probe"] = now + self._engine_probe_s
+                self._stats.engine_degraded += 1
+                _LOG.warning(
+                    "profile %r demoted to the grouped oracle after %d "
+                    "consecutive fused failures (probing back every "
+                    "%.1fs)", name, st["fails"], self._engine_probe_s)
 
     # -- submission (any thread) --------------------------------------------
     def submit_design(self, spec: DataStructureSpec,
@@ -627,6 +751,56 @@ class DesignCalculatorService:
             self._fail_pending()
         return fut
 
+    def _supervise(self) -> None:
+        """Worker supervision: run the coalescing loop, resurrect it.
+
+        A crash in the loop (a bug, a poisoned batch, an injected
+        ``service.worker`` fault) used to be swallowed per-batch; now it
+        propagates here, the in-flight window's futures fail with the
+        typed :class:`~repro.serving.admission.WorkerCrashed`, and the
+        loop restarts with exponential backoff — up to
+        ``max_worker_restarts`` times, after which the service closes
+        admission and fails everything still queued rather than
+        restart-looping forever."""
+        while True:
+            try:
+                self._loop()
+                return                      # orderly CLOSED shutdown
+            except BaseException as exc:    # noqa: BLE001 — supervisor
+                with self._lock:
+                    self._stats.worker_restarts += 1
+                    restarts = self._stats.worker_restarts
+                self._crash_inflight(exc, restarts)
+                if restarts > self._max_worker_restarts:
+                    _LOG.error(
+                        "serving worker crashed %d times (limit %d); "
+                        "giving up: %r", restarts,
+                        self._max_worker_restarts, exc)
+                    self._sched.close()
+                    self._fail_pending()
+                    return
+                _LOG.warning(
+                    "serving worker crashed (%r); restart %d/%d",
+                    exc, restarts, self._max_worker_restarts)
+                time.sleep(min(self._worker_backoff_s * 2 ** (restarts - 1),
+                               1.0))
+
+    def _crash_inflight(self, exc: BaseException, restarts: int) -> None:
+        """Fail the crashed window's in-flight futures with WorkerCrashed."""
+        inflight, self._inflight = self._inflight, []
+        failed = 0
+        for req in inflight:
+            if req.future.done():
+                continue
+            req.future.set_exception(WorkerCrashed(
+                f"serving worker crashed mid-window ({exc!r}); the "
+                f"request was not served and will not be replayed — "
+                f"resubmit if still wanted", cause=exc, restarts=restarts))
+            failed += 1
+        if failed:
+            with self._lock:
+                self._stats.failed += failed
+
     def _loop(self) -> None:
         while True:
             head = self._sched.get()
@@ -658,12 +832,13 @@ class DesignCalculatorService:
                 if nxt.lane == BULK:
                     bulk_taken += 1
                 batch.append(nxt)
-            try:
-                self._serve_batch(batch)
-            except Exception as exc:   # defensive: never kill the loop
-                for req in batch:
-                    if not req.future.done():
-                        req.future.set_exception(exc)
+            # in-flight tracking for the supervisor: a crash anywhere in
+            # _serve_batch fails exactly this window's unresolved futures
+            # with WorkerCrashed instead of hanging them (the old blanket
+            # per-batch except hid crashes from restart accounting)
+            self._inflight = batch
+            self._serve_batch(batch)
+            self._inflight = []
             if closing:
                 return
 
@@ -708,12 +883,146 @@ class DesignCalculatorService:
             for ev in req.evals:
                 if ev.error is not None:
                     raise ev.error
-            req.future.set_result(
-                req.finalize(time.perf_counter() - req.t0))
+            answer = req.finalize(time.perf_counter() - req.t0)
+            # tag the answer with the engine(s) that actually produced it
+            # (fused / fused-flat / grouped), so clients and the chaos
+            # bench can see when a degraded path served them
+            engines = sorted({ev.engine for ev in req.evals if ev.engine})
+            if engines and hasattr(answer, "engine"):
+                answer.engine = engines[0] if len(engines) == 1 \
+                    else ",".join(engines)
+            req.future.set_result(answer)
             return True
         except Exception as exc:
             req.future.set_exception(exc)
             return False
+
+    def _score_group(self, evals: List[_Evaluation], hw: HardwareProfile,
+                     points, probe: Callable[[int], bool],
+                     deadline: Optional[float]
+                     ) -> Optional[Tuple[int, int]]:
+        """Score one (profile, axis) group through the degraded-engine
+        fallback chain: fused-sharded -> fused-flat -> grouped oracle.
+
+        Fused results are validated with a cheap ``isfinite`` reduction
+        (NaN-poisoned parameter banks produce *finite-looking shapes*
+        with garbage values — the one failure a shape check misses).  A
+        fused failure falls back to the flat fused call (same banks, no
+        shard pool — isolating device trouble from bank corruption);
+        when that also fails but the grouped oracle answers, the profile
+        is demoted to the oracle until a timed fused probe — which first
+        drops the possibly-poisoned device banks
+        (:func:`repro.core.devicecost.invalidate_table`) — succeeds.
+        When the oracle *also* rejects the request, that is a request
+        problem, not an engine problem: the oracle's exception surfaces
+        and the profile is not demoted.
+
+        Returns ``(score_calls, shard_dispatches)`` — ``(0, 0)`` when
+        the group failed with every evaluation's ``error`` set — or
+        ``None`` when every owner expired before a scoring call ran.
+        """
+        if points is not None:
+            product = concat_sweeps([ev.packed for ev in evals])
+            pool_call = self._shards.score_sweep
+        else:
+            product = concat_frontiers([ev.packed for ev in evals])
+            pool_call = self._shards.score_frontier
+
+        def finish(result, engine: str, used: int = 1) -> Tuple[int, int]:
+            offset = 0
+            for ev in evals:
+                if points is not None:
+                    n = ev.packed.n_designs
+                    ev.totals = result[:, offset:offset + n]
+                else:
+                    n = ev.packed.n_segments
+                    ev.totals = result[offset:offset + n]
+                ev.engine = engine
+                offset += n
+            return 1, used if used > 1 else 0
+
+        if self._engine != "fused":     # grouped-engine service: no chain
+            try:
+                result, used = pool_call(product, hw, engine=self._engine,
+                                         before_dispatch=probe,
+                                         deadline=deadline)
+            except Exception as exc:
+                for ev in evals:
+                    ev.error = exc
+                return 0, 0
+            if result is None:
+                return None
+            return finish(result, self._engine, used)
+
+        attempt, probing = self._fused_allowed(hw.name, time.monotonic())
+        fused_failures = 0
+        first_error: Optional[Exception] = None
+        if attempt:
+            if probing:
+                # recovery probe: drop the (possibly NaN-poisoned) banks
+                # so the probe scores from freshly built device tables
+                devicecost.invalidate_table(hw)
+            try:
+                result, used = pool_call(product, hw, engine="fused",
+                                         before_dispatch=probe,
+                                         deadline=deadline)
+                if result is None:
+                    return None
+                if not np.isfinite(result).all():
+                    raise NonFiniteScore(
+                        f"merged fused totals for {hw.name!r} contain "
+                        f"non-finite values")
+                self._note_fused_ok(hw.name)
+                return finish(result, "fused", used)
+            except Exception as exc:    # noqa: BLE001 — chain continues
+                fused_failures += 1
+                first_error = exc
+                if isinstance(exc, NonFiniteScore):
+                    with self._lock:
+                        self._stats.nonfinite_groups += 1
+                _LOG.warning("fused sharded scoring failed for %r (%r); "
+                             "retrying flat", hw.name, exc)
+            if not probe(0):
+                return None
+            try:
+                flat = product.score(hw, engine="fused", shard=False)
+                if not np.isfinite(np.asarray(flat)).all():
+                    raise NonFiniteScore(
+                        f"flat fused totals for {hw.name!r} contain "
+                        f"non-finite values")
+                # flat success means the banks are fine: the sharded
+                # failure was device/shard trouble (the pool's breaker
+                # handles that) — engine health resets, no demotion
+                self._note_fused_ok(hw.name)
+                with self._lock:
+                    self._stats.fallback_flat += 1
+                return finish(flat, "fused-flat")
+            except Exception as exc:    # noqa: BLE001 — chain continues
+                fused_failures += 1
+                if isinstance(exc, NonFiniteScore):
+                    with self._lock:
+                        self._stats.nonfinite_groups += 1
+                _LOG.warning("flat fused scoring failed for %r (%r); "
+                             "falling back to the grouped oracle",
+                             hw.name, exc)
+        # grouped oracle: the last resort, and the whole path while the
+        # profile is degraded
+        if not probe(0):
+            return None
+        try:
+            result = product.score(hw, engine="grouped")
+        except Exception as exc:
+            # the oracle rejected the request too: a request problem, not
+            # an engine problem — surface the (more diagnostic) original
+            # fused error when there was one, and don't demote the profile
+            for ev in evals:    # each group keeps its own failure
+                ev.error = first_error if first_error is not None else exc
+            return 0, 0
+        for _ in range(fused_failures):     # oracle fine, fused broken
+            self._note_fused_failure(hw.name)
+        with self._lock:
+            self._stats.fallback_grouped += 1
+        return finish(result, "grouped")
 
     def _serve_batch(self, batch: List[_Request]) -> None:
         """Answer one coalescing window: splice every evaluation into one
@@ -730,6 +1039,9 @@ class DesignCalculatorService:
             with self._lock:
                 self._stats.empty_windows += 1
             return
+        # fault seam: a rule on "service.worker" crashes the loop here,
+        # exercising the supervisor's restart + WorkerCrashed path
+        faults.check("service.worker", len(batch))
         groups: Dict[Tuple, List[_Evaluation]] = {}
         live: List[_Request] = []
         now = time.monotonic()
@@ -792,39 +1104,19 @@ class DesignCalculatorService:
                     alive = alive or not req.dead
                 return alive
 
-            try:
-                if points is not None:   # sweeps splice along designs
-                    sweep = concat_sweeps([ev.packed for ev in evals])
-                    grid, used = self._shards.score_sweep(
-                        sweep, hw, engine=self._engine,
-                        before_dispatch=_probe)
-                    if grid is None:   # every owner expired mid-dispatch
-                        continue
-                    score_calls += 1
-                    shard_dispatches += used if used > 1 else 0
-                    offset = 0
-                    for ev in evals:
-                        n = ev.packed.n_designs
-                        ev.totals = grid[:, offset:offset + n]
-                        offset += n
-                else:
-                    combined = concat_frontiers(
-                        [ev.packed for ev in evals])
-                    totals, used = self._shards.score_frontier(
-                        combined, hw, engine=self._engine,
-                        before_dispatch=_probe)
-                    if totals is None:
-                        continue
-                    score_calls += 1
-                    shard_dispatches += used if used > 1 else 0
-                    offset = 0
-                    for ev in evals:
-                        n = ev.packed.n_segments
-                        ev.totals = totals[offset:offset + n]
-                        offset += n
-            except Exception as exc:
-                for ev in evals:   # each group keeps its own failure
-                    ev.error = exc
+            # the window's part-wait bound: the furthest-out owner
+            # deadline — unless some owner is deadline-free, in which
+            # case only the pool's own part_timeout_s bounds the wait
+            deadline = None
+            if all(ev.owner.deadline is not None for ev in evals):
+                deadline = max(ev.owner.deadline for ev in evals)
+            outcome = self._score_group(evals, hw, points, _probe,
+                                        deadline)
+            if outcome is None:   # every owner expired mid-dispatch
+                continue
+            calls, used = outcome
+            score_calls += calls
+            shard_dispatches += used
             for ev in evals:
                 req = ev.owner
                 if req.dead:   # expired by a mid-dispatch probe
