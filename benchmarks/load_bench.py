@@ -109,7 +109,7 @@ def _drive(service, duration_s: float, n_interactive: int, n_bulk: int,
             i += 1
             t0 = time.perf_counter()
             try:
-                _submit_interactive(service, q).result()
+                _submit_interactive(service, q).result(timeout=120.0)
             except RejectedError:
                 with lock:
                     out["shed_interactive"] += 1
@@ -126,7 +126,8 @@ def _drive(service, duration_s: float, n_interactive: int, n_bulk: int,
         while not stop.is_set():
             t0 = time.perf_counter()
             try:
-                service.submit_sweep(specs, workloads, bulk_hw).result()
+                service.submit_sweep(specs, workloads,
+                                     bulk_hw).result(timeout=300.0)
             except RejectedError:
                 with lock:
                     out["shed_bulk"] += 1
@@ -171,7 +172,7 @@ def _check_parity(service, questions: List[Tuple]) -> None:
                   "hardware": whatif.what_if_hardware,
                   "workload": whatif.what_if_workload}
     for q in questions[:3]:
-        got = _submit_interactive(service, q).result()
+        got = _submit_interactive(service, q).result(timeout=120.0)
         ref = oracle_fns[q[0]](*q[1:], engine="scalar")
         for attr in ("baseline_seconds", "variant_seconds"):
             g, r = getattr(got, attr), getattr(ref, attr)
@@ -250,8 +251,8 @@ def _smoke(h1, h2, workload, skewed) -> None:
     try:
         # warm pass compiles every shape the burst can produce
         for q in questions:
-            _submit_interactive(svc, q).result()
-        svc.submit_sweep(*sweep, h1).result()
+            _submit_interactive(svc, q).result(timeout=120.0)
+        svc.submit_sweep(*sweep, h1).result(timeout=300.0)
         res = _drive(svc, 0.5, n_interactive=4, n_bulk=1,
                      questions=questions, sweep=sweep, bulk_hw=h1)
         traces_before = devicecost.trace_count()

@@ -3,7 +3,8 @@
     PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
     PYTHONPATH=src python -m benchmarks.run --smoke
 
-``--smoke`` is the fast validation path: it runs the search-engine,
+``--smoke`` is the fast validation path: it runs the repro-lint static
+checks (``python -m tools.analyze``), then the search-engine,
 workload-sweep, what-if-serving, sharded-scoring and fault-injection
 parity checks at tiny sizes (every
 engine against the scalar oracle, grouped sweep grids bit-identical to
@@ -64,6 +65,12 @@ def main() -> None:
     args = ap.parse_args()
     if args.smoke:
         t0 = time.perf_counter()
+        print("### repro-lint (smoke)", flush=True)
+        from tools.analyze import render_text, run_paths
+        findings = run_paths()
+        if findings:
+            print(render_text(findings), flush=True)
+            sys.exit(1)
         print("### benchmark: BENCH_search (smoke)", flush=True)
         search_bench.run(smoke=True)
         print("### benchmark: BENCH_serving (smoke)", flush=True)

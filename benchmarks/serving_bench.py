@@ -99,7 +99,7 @@ def _submit(service, q: Tuple):
 
 def _ask_coalesced(service, questions: List[Tuple]) -> List:
     futures = [_submit(service, q) for q in questions]
-    return [f.result() for f in futures]
+    return [f.result(timeout=120.0) for f in futures]
 
 
 def _scalar_oracle(q: Tuple):

@@ -506,6 +506,7 @@ def shard_threshold() -> int:
     if calibrated is None:
         # racing threads calibrate redundantly but agree; not worth
         # holding the memo lock across timed device dispatches
+        # lint: unlocked(idempotent single-key write; races agree on value)
         calibrated = _SHARD_STATE["calibrated"] = _calibrate_shard_threshold()
     return calibrated
 

@@ -525,7 +525,7 @@ class DesignCalculatorService:
 
     # -- per-profile fused-engine health (the degraded-mode gate) -----------
     def _engine_state(self, name: str) -> Dict:
-        # callers hold self._lock
+        # lint: unlocked(every caller already holds self._lock)
         return self._engine_health.setdefault(
             name, {"degraded": False, "fails": 0, "next_probe": 0.0})
 
@@ -688,19 +688,27 @@ class DesignCalculatorService:
                             deadline_s=deadline_s, lane=lane or BULK)
 
     # -- synchronous conveniences -------------------------------------------
+    # These deliberately block without a deadline: the request-level
+    # deadline (deadline_s) plus the worker supervisor guarantee the
+    # future resolves or fails, and stop() drains the queue.
     def what_if_design(self, *args, **kwargs) -> WhatIfAnswer:
+        # lint: untimed-wait(request deadline + supervisor bound the wait)
         return self.submit_design(*args, **kwargs).result()
 
     def what_if_hardware(self, *args, **kwargs) -> WhatIfAnswer:
+        # lint: untimed-wait(request deadline + supervisor bound the wait)
         return self.submit_hardware(*args, **kwargs).result()
 
     def what_if_workload(self, *args, **kwargs) -> WhatIfAnswer:
+        # lint: untimed-wait(request deadline + supervisor bound the wait)
         return self.submit_workload(*args, **kwargs).result()
 
     def complete_design(self, *args, **kwargs) -> SearchResult:
+        # lint: untimed-wait(request deadline + supervisor bound the wait)
         return self.submit_complete(*args, **kwargs).result()
 
     def workload_sweep(self, *args, **kwargs) -> WorkloadSweepAnswer:
+        # lint: untimed-wait(request deadline + supervisor bound the wait)
         return self.submit_sweep(*args, **kwargs).result()
 
     # -- the serving loop (worker thread) -----------------------------------

@@ -505,5 +505,7 @@ class ScoringShardPool:
         return np.concatenate(results, axis=1), len(parts)
 
     def close(self) -> None:
-        if self._pool is not None:
-            self._pool.shutdown(wait=False)
+        with self._lock:
+            pool = self._pool
+        if pool is not None:
+            pool.shutdown(wait=False)

@@ -2,6 +2,8 @@ import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# repo root, for the tools.analyze lint framework (tools/ is a package)
+sys.path.insert(1, os.path.join(os.path.dirname(__file__), ".."))
 
 import numpy as np
 import pytest

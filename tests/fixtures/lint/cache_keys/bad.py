@@ -1,0 +1,20 @@
+"""Seeded cache-keys violations (parsed by the analyzer, never run)."""
+from repro.core.memo import DictCache
+
+PACK_CACHE = DictCache(max_entries=64, name="fixture_pack")
+STATICS_CACHE = DictCache(max_entries=64, name="chain_statics")
+
+
+def pack_with_hardware(spec, hw):
+    key = (spec, hw.stream_bandwidth)       # hardware leaks into the key
+    cached = PACK_CACHE.get(key)
+    if cached is not None:
+        return cached
+    plan = (spec, hw.stream_bandwidth)
+    PACK_CACHE.put(key, plan)
+    return plan
+
+
+def statics_with_workload(template, workload):
+    key = (template, len(workload.entries))   # workload leaks into statics
+    return STATICS_CACHE.get(key)

@@ -1,0 +1,25 @@
+"""Clean twin of the cache-keys fixture: hardware/workload stay out of
+keys, and the hardware-keyed ``device_banks`` exception is exercised."""
+from repro.core.memo import DictCache
+
+PACK_CACHE = DictCache(max_entries=64, name="fixture_pack_clean")
+STATICS_CACHE = DictCache(max_entries=64, name="segment_statics")
+BANKS = DictCache(max_entries=8, name="device_banks")
+
+
+def pack_hardware_free(spec, mix, hw):
+    key = (spec, mix)
+    cached = PACK_CACHE.get(key)
+    if cached is None:
+        cached = PACK_CACHE.put(key, (spec, mix))
+    return cached, hw.stream_bandwidth      # hw used, just not in the key
+
+
+def statics_by_count(template, n_entries, workload):
+    key = (template, n_entries)             # count routed as a parameter
+    return STATICS_CACHE.get(key), workload
+
+
+def banks_for(hw):
+    key = (hw.name, hw.n_devices)           # device_banks IS hw-keyed
+    return BANKS.get(key)

@@ -1,0 +1,6 @@
+"""A suppression with no reason must itself be reported."""
+
+
+def probe(pool):
+    # lint: unlocked()
+    return pool.status

@@ -1,0 +1,24 @@
+"""Seeded future-hygiene violations (parsed by the analyzer, never run)."""
+
+
+def helper(executor, job):
+    return executor.submit(job)             # future-returning helper
+
+
+def drop(executor, job):
+    executor.submit(job)                    # dropped-future
+
+
+def forget(executor, job):
+    fut = executor.submit(job)              # unawaited-future
+    other = 1
+    return other
+
+
+def wait_forever(executor, job):
+    fut = helper(executor, job)             # tracked through the helper
+    return fut.result()                     # untimed-wait
+
+
+def chain(executor, job):
+    return executor.submit(job).result()    # untimed-wait (chained)

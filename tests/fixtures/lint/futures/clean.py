@@ -1,0 +1,26 @@
+"""Clean twin of the futures fixture: bounded waits, real escapes, and a
+documented untimed-wait suppression."""
+
+
+def helper(executor, job):
+    return executor.submit(job)
+
+
+def fan_out(executor, jobs):
+    futures = [executor.submit(j) for j in jobs]
+    return [f.result(timeout=30.0) for f in futures]
+
+
+def handoff(executor, job, sink):
+    fut = helper(executor, job)
+    sink(fut)                               # call-arg escape
+
+
+def stored(executor, job, registry):
+    fut = executor.submit(job)
+    registry["job"] = fut                   # container escape
+
+
+def blocking(executor, job):
+    # lint: untimed-wait(fixture demonstrates a documented suppression)
+    return executor.submit(job).result()

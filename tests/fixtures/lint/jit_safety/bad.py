@@ -1,0 +1,20 @@
+"""Seeded jit-safety violations (parsed by the analyzer, never run)."""
+import jax
+import numpy as np
+
+scale = np.array([1.0, 2.0])                # mutable-looking module array
+
+
+def _pad(v):
+    return int(v)                           # traced-concretize (via descent)
+
+
+def _kernel(x, n, flags=[0]):               # unhashable static default
+    if x > 0:                               # traced-branch
+        x = x + 1
+    v = float(x)                            # traced-concretize
+    w = _pad(x)                             # descends into _pad
+    return x * scale + v + w                # array-closure on `scale`
+
+
+kernel = jax.jit(_kernel, static_argnums=(1, 2))

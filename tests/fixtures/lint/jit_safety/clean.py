@@ -1,0 +1,27 @@
+"""Clean twin of the jit-safety fixture: shape-metadata branches, static
+branches, frozen SCREAMING_CASE constants, hashable statics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+COEFFS = np.array([1.0, 2.0])               # frozen module constant
+
+
+def _pad(v, mult):
+    pad = (-v.shape[0]) % mult
+    if pad == 0:                            # shape-derived: static
+        return v
+    return jnp.concatenate([v, jnp.zeros((pad,), v.dtype)])
+
+
+def _kernel(x, n, with_knn=False):
+    if x.shape[0] == 0:                     # shape metadata branch
+        return x
+    if with_knn:                            # static-arg branch
+        x = x + 1
+    y = _pad(x, n)
+    y = jnp.where(y > 0, y, 0.0)            # traced select, no branch
+    return y * COEFFS[0]
+
+
+kernel = jax.jit(_kernel, static_argnums=(1, 2))

@@ -1,0 +1,20 @@
+"""Seeded lock-discipline violations (parsed by the analyzer, never run)."""
+from repro.core.memo import MEMO_LOCK, REGISTRY
+
+
+class DictCache:
+    def __init__(self):
+        self._data = {}
+        self._hits = 0
+
+    def get(self, key):
+        return self._data.get(key)          # unlocked read
+
+    def put(self, key, value):
+        with MEMO_LOCK:
+            self._data[key] = value
+        self._hits += 1                     # unlocked write
+
+
+def register(name, cache):
+    REGISTRY[name] = cache                  # unlocked guarded-global write

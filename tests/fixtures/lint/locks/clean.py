@@ -1,0 +1,22 @@
+"""Clean twin of the locks fixture, including a documented suppression."""
+from repro.core.memo import MEMO_LOCK, REGISTRY
+
+
+class DictCache:
+    def __init__(self):
+        self._data = {}
+        self._hits = 0
+
+    def get(self, key):
+        with MEMO_LOCK:
+            self._hits += 1
+            return self._data.get(key)
+
+    def snapshot(self):
+        # lint: unlocked(fixture demonstrates a documented suppression)
+        return dict(self._data)
+
+
+def lookup(name):
+    with MEMO_LOCK:
+        return REGISTRY.get(name)

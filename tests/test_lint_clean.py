@@ -1,0 +1,13 @@
+"""The live tree must lint clean: repro-lint runs as part of tier-1, so
+a new concurrency/cache-key/jit-safety violation fails CI here."""
+import pytest
+
+pytestmark = pytest.mark.lint
+
+
+def test_repo_lints_clean():
+    from tools.analyze import DEFAULT_PATHS, run_paths
+    findings = run_paths(DEFAULT_PATHS)
+    assert findings == [], \
+        "repro-lint found new violations:\n" + \
+        "\n".join(f.format() for f in findings)

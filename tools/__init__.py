@@ -1,0 +1,1 @@
+"""Repo tooling: the static-analysis framework lives in tools.analyze."""

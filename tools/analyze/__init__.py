@@ -1,0 +1,21 @@
+"""repro-lint: AST/dataflow checks for the repo's core invariants.
+
+Library API::
+
+    from tools.analyze import run_paths, Finding
+    findings = run_paths(["src/repro", "benchmarks", "tools"])
+
+CLI (exits nonzero on findings)::
+
+    python -m tools.analyze [paths...] [--format json] [--checker NAME]
+
+Checkers: cache-keys (hardware/workload cache-key purity), locks
+(memo/serving lock discipline), futures (submitted-future hygiene),
+jit-safety (tracer-safety of jit/pmap-reachable code), docs-refs
+(documentation references resolve).  See docs/static_analysis.md.
+"""
+from tools.analyze.core import (DEFAULT_PATHS, Finding, render_json,
+                                render_text, run_paths)
+
+__all__ = ["DEFAULT_PATHS", "Finding", "render_json", "render_text",
+           "run_paths"]

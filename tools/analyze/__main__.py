@@ -1,0 +1,56 @@
+"""CLI: ``python -m tools.analyze [paths...] [--format json] ...``
+
+Exit status 0 when the tree lints clean, 1 when any finding survives
+suppressions and the baseline, 2 on usage errors.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from tools.analyze.core import (DEFAULT_PATHS, render_json, render_text,
+                                run_paths)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.analyze",
+        description="repro-lint: static checks for the repo's "
+                    "concurrency, cache-key and jit-safety invariants")
+    ap.add_argument("paths", nargs="*", default=list(DEFAULT_PATHS),
+                    help=f"files/directories to analyze (default: "
+                         f"{' '.join(DEFAULT_PATHS)})")
+    ap.add_argument("--format", choices=("text", "json"), default="text",
+                    help="report format (json is stable, versioned)")
+    ap.add_argument("--checker", action="append", default=None,
+                    metavar="NAME",
+                    help="run only this checker (repeatable)")
+    ap.add_argument("--baseline", default="default",
+                    help="baseline JSON to subtract ('none' to disable)")
+    ap.add_argument("--list", action="store_true",
+                    help="list checkers and rules, then exit")
+    args = ap.parse_args(argv)
+
+    from tools.analyze.checkers import ALL_CHECKERS, BY_NAME
+    if args.list:
+        for c in ALL_CHECKERS:
+            print(f"{c.NAME}:")
+            for rule, desc in c.RULES.items():
+                print(f"  {rule}: {desc}")
+        return 0
+    checkers = ALL_CHECKERS
+    if args.checker:
+        unknown = [n for n in args.checker if n not in BY_NAME]
+        if unknown:
+            ap.error(f"unknown checker(s) {unknown}; "
+                     f"choose from {sorted(BY_NAME)}")
+        checkers = [BY_NAME[n] for n in args.checker]
+    baseline = None if args.baseline == "none" else args.baseline
+    findings = run_paths(args.paths, checkers=checkers, baseline=baseline)
+    render = render_json if args.format == "json" else render_text
+    print(render(findings))
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,8 @@
+"""Checker registry: every repro-lint checker module, in report order."""
+from tools.analyze.checkers import (cache_keys, docs_refs, futures,
+                                    jit_safety, locks)
+
+ALL_CHECKERS = [cache_keys, locks, futures, jit_safety, docs_refs]
+
+#: NAME -> module, for --checker filtering
+BY_NAME = {c.NAME: c for c in ALL_CHECKERS}

@@ -1,0 +1,135 @@
+"""cache-keys: no hardware in synthesis keys, no workload in statics keys.
+
+The Data Calculator's zero-recompilation contract rests on two cache-key
+purity invariants (docs/cost_pipeline.md, asserted at runtime by
+tests/test_cache_keys.py):
+
+* **hardware-in-key** — a :class:`HardwareProfile`-derived value must
+  never reach the key of a registered synthesis/packing cache: packing
+  is hardware-free by design, so re-costing a frontier on new hardware
+  is a pure parameter-table swap.  The ``device_banks`` replica cache is
+  the one deliberate exception (its values ARE per-device bank
+  placements).
+* **workload-in-key** — a workload-derived value must never reach the
+  key of a *statics* cache (``chain_statics``, ``segment_statics``):
+  statics are the workload-free template half, shared by every sweep
+  point.
+
+Statically: per function, parameters typed/named as hardware (resp.
+workload) seed a taint fixpoint; the first argument of ``.get``/
+``.put``/``.load`` on any module-level ``DictCache(name=...)`` variable
+must not be tainted.  Note this is *stricter* than the runtime twin —
+an ``int`` plucked off a workload still counts as workload-derived here
+(route such values through an explicit parameter, the way
+``chain_statics(chain, n_entries)`` does).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Set
+
+from tools.analyze.core import Finding, ModuleRecord
+from tools.analyze.dataflow import (Taint, call_keywords, dotted,
+                                    iter_functions, own_statements)
+
+NAME = "cache-keys"
+
+RULES = {
+    "hardware-in-key": "HardwareProfile-derived value in a registered "
+                       "synthesis/packing cache key",
+    "workload-in-key": "workload-derived value in a template-statics "
+                       "cache key",
+}
+
+#: registered caches whose keys ARE legitimately hardware-derived
+HARDWARE_KEYED_OK = {"device_banks"}
+
+#: registered caches holding workload-free template statics
+#: (mirrors tests/test_cache_keys.py STATICS_CACHES)
+STATICS_CACHES = {"chain_statics", "segment_statics"}
+
+#: cache methods whose first argument is the key
+KEYED_METHODS = {"get", "put", "load"}
+
+_HW_PARAM_NAMES = {"hw", "hardware", "new_hw", "bulk_hw"}
+_WL_PARAM_NAMES = {"workload", "workloads", "new_workload",
+                   "base_workload"}
+
+
+def _registered_caches(tree: ast.Module) -> Dict[str, str]:
+    """Module-level ``VAR = DictCache(..., name="...")`` bindings:
+    var name -> registered cache name (import aliases included — any
+    constructor whose dotted name ends in ``DictCache`` counts)."""
+    out: Dict[str, str] = {}
+    for node in tree.body:
+        if not (isinstance(node, ast.Assign)
+                and isinstance(node.value, ast.Call)):
+            continue
+        callee = dotted(node.value.func)
+        if callee is None or not callee.split(".")[-1].endswith("DictCache"):
+            continue
+        name_kw = call_keywords(node.value).get("name")
+        if not (isinstance(name_kw, ast.Constant)
+                and isinstance(name_kw.value, str)):
+            continue
+        for target in node.targets:
+            if isinstance(target, ast.Name):
+                out[target.id] = name_kw.value
+    return out
+
+
+def _seed_params(func: ast.FunctionDef, type_suffixes: Set[str],
+                 name_set: Set[str]) -> Set[str]:
+    seeds: Set[str] = set()
+    args = func.args
+    for p in args.posonlyargs + args.args + args.kwonlyargs:
+        ann = p.annotation
+        ann_name = None
+        if ann is not None:
+            ann_name = dotted(ann)
+            if ann_name is None and isinstance(ann, ast.Constant) \
+                    and isinstance(ann.value, str):
+                ann_name = ann.value
+        if ann_name is not None and \
+                ann_name.split(".")[-1] in type_suffixes:
+            seeds.add(p.arg)
+        elif p.arg in name_set:
+            seeds.add(p.arg)
+    return seeds
+
+
+def check_module(mod: ModuleRecord) -> Iterable[Finding]:
+    caches = _registered_caches(mod.tree)
+    if not caches:
+        return
+    for func in iter_functions(mod.tree):
+        hw_seeds = _seed_params(func, {"HardwareProfile"}, _HW_PARAM_NAMES)
+        wl_seeds = _seed_params(func, {"Workload"}, _WL_PARAM_NAMES)
+        if not hw_seeds and not wl_seeds:
+            continue
+        hw_taint = Taint(func, hw_seeds) if hw_seeds else None
+        wl_taint = Taint(func, wl_seeds) if wl_seeds else None
+        for node in own_statements(func):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr in KEYED_METHODS
+                    and isinstance(node.func.value, ast.Name)
+                    and node.func.value.id in caches
+                    and node.args):
+                continue
+            cache_name = caches[node.func.value.id]
+            key_expr = node.args[0]
+            if hw_taint is not None and cache_name not in HARDWARE_KEYED_OK \
+                    and hw_taint.expr_tainted(key_expr):
+                yield Finding(
+                    mod.relpath, key_expr.lineno, NAME, "hardware-in-key",
+                    f"hardware-derived value reaches the key of cache "
+                    f"{cache_name!r} in {func.name}() — packing must stay "
+                    f"hardware-free (zero-recompile contract)")
+            if wl_taint is not None and cache_name in STATICS_CACHES \
+                    and wl_taint.expr_tainted(key_expr):
+                yield Finding(
+                    mod.relpath, key_expr.lineno, NAME, "workload-in-key",
+                    f"workload-derived value reaches the key of statics "
+                    f"cache {cache_name!r} in {func.name}() — statics are "
+                    f"shared across every sweep point")

@@ -1,0 +1,110 @@
+"""docs-refs: documentation references must resolve, or the lint fails.
+
+The framework fold-in of ``tools/check_docs.py`` (which remains as a
+thin CLI shim): scans ``README.md`` and ``docs/*.md`` for
+
+* dotted code references (``repro.core.batchcost.pack_sweep``,
+  ``tools.analyze`` ...) — each must import and, where it names an
+  attribute, resolve via ``getattr``;
+* repo-relative file paths (``src/repro/core/whatif.py`` ...) — each
+  must exist.
+
+Repo-scope: runs once per invocation regardless of the analyzed paths.
+"""
+from __future__ import annotations
+
+import glob
+import importlib
+import os
+import re
+import sys
+from typing import Iterable, List
+
+from tools.analyze.core import ROOT, Finding
+
+NAME = "docs-refs"
+
+RULES = {
+    "stale-ref": "documentation references a module/attribute/path that "
+                 "no longer resolves",
+}
+
+for _p in (os.path.join(ROOT, "src"), ROOT):   # repro.* and benchmarks.*
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+#: dotted module/attribute references worth auditing
+_DOTTED = re.compile(r"\b(?:repro|benchmarks|tools)(?:\.[A-Za-z_]\w*)+")
+#: repo-relative paths under the directories docs talk about
+_PATHISH = re.compile(
+    r"\b(?:src|docs|tests|tools|benchmarks|examples|experiments)"
+    r"/[\w][\w./-]*")
+
+
+def doc_files() -> List[str]:
+    return [os.path.join(ROOT, "README.md")] + \
+        sorted(glob.glob(os.path.join(ROOT, "docs", "*.md")))
+
+
+def resolve_dotted(ref: str):
+    """None when ``ref`` imports/getattrs cleanly, else the error."""
+    parts = ref.split(".")
+    for cut in range(len(parts), 0, -1):
+        modname = ".".join(parts[:cut])
+        try:
+            obj = importlib.import_module(modname)
+        except ImportError:
+            continue
+        for attr in parts[cut:]:
+            try:
+                obj = getattr(obj, attr)
+            except AttributeError:
+                return (f"{ref}: module {modname!r} has no attribute "
+                        f"{'.'.join(parts[cut:])!r}")
+        return None
+    return f"{ref}: no importable module prefix"
+
+
+def check_doc_texts(files: List[str]) -> List[str]:
+    """Error strings for every stale reference in ``files`` (the legacy
+    ``check_docs`` contract the tools/check_docs.py shim preserves)."""
+    errors: List[str] = []
+    for path in files:
+        rel = os.path.relpath(path, ROOT)
+        if not os.path.exists(path):
+            errors.append(f"{rel}: file is missing")
+            continue
+        with open(path) as fh:
+            text = fh.read()
+        for ref in sorted(set(_DOTTED.findall(text))):
+            err = resolve_dotted(ref)
+            if err is not None:
+                errors.append(f"{rel}: {err}")
+        for p in sorted(set(_PATHISH.findall(text))):
+            p = p.rstrip(".,:;")    # sentence punctuation
+            if not os.path.exists(os.path.join(ROOT, p)):
+                errors.append(f"{rel}: referenced path {p!r} does not "
+                              f"exist")
+    return errors
+
+
+def _anchor_line(path: str, needle: str) -> int:
+    """First line mentioning ``needle`` (0 when the file is unreadable)."""
+    try:
+        with open(path) as fh:
+            for lineno, line in enumerate(fh, start=1):
+                if needle in line:
+                    return lineno
+    except OSError:
+        pass
+    return 0
+
+
+def check_repo(root: str) -> Iterable[Finding]:
+    for path in doc_files():
+        rel = os.path.relpath(path, ROOT).replace(os.sep, "/")
+        for err in check_doc_texts([path]):
+            msg = err.split(": ", 1)[1] if ": " in err else err
+            needle = msg.split(":")[0].strip().strip("'\"")
+            yield Finding(rel, _anchor_line(path, needle), NAME,
+                          "stale-ref", msg)

@@ -1,0 +1,230 @@
+"""futures: every submitted future must reach a bounded wait or escape.
+
+The PR 8 leak class: a ``.result()`` with no timeout wedges a serving
+thread forever when a fault (or a bug) keeps the future from resolving,
+and a dropped ``executor.submit(...)`` return value leaks work that no
+deadline, abort accounting or :func:`shards._abandon` path will ever
+reclaim.  Statically, per function:
+
+* **dropped-future** — a submit call used as a bare expression
+  statement: nobody can ever wait on, cancel or account for it;
+* **unawaited-future** — a variable bound to a submit call and then
+  never mentioned again;
+* **untimed-wait** — ``.result()`` with no timeout on a tracked future
+  (chained ``submit(...).result()`` included).  Deliberately-blocking
+  waits carry ``# lint: untimed-wait(<reason>)`` — e.g. the service's
+  synchronous conveniences, whose futures are guaranteed to resolve by
+  the worker supervisor or fail at ``stop()``.
+
+Escapes count as handled: returning/yielding the future, passing it to
+any call (``futures_wait``, ``_abandon``, callbacks), storing it in a
+container or attribute, ``.cancel()`` / ``.add_done_callback()``.
+
+Sources are ``X.submit(...)`` / ``X.submit_*(...)`` calls plus calls to
+same-module functions (and same-class methods) that return such a call
+— a per-module summary fixpoint, so ``shards._submit`` or a benchmark's
+``_submit_interactive`` helper is tracked at its call sites too.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from tools.analyze.core import Finding, ModuleRecord
+from tools.analyze.dataflow import (build_parents, class_methods, dotted,
+                                    iter_functions, module_functions,
+                                    own_statements)
+
+NAME = "futures"
+
+RULES = {
+    "dropped-future": "executor.submit(...) result discarded",
+    "unawaited-future": "future assigned but never awaited, cancelled "
+                        "or handed off",
+    "untimed-wait": ".result() with no timeout on a submitted future",
+}
+
+
+def _submit_attr(call: ast.Call) -> bool:
+    return (isinstance(call.func, ast.Attribute)
+            and (call.func.attr == "submit"
+                 or call.func.attr.startswith("submit_")))
+
+
+class _ModuleIndex:
+    """Per-module summary: which local functions return futures."""
+
+    def __init__(self, tree: ast.Module) -> None:
+        self.mod_funcs = module_functions(tree)
+        self.methods: Dict[str, Dict[str, ast.FunctionDef]] = {}
+        self.owner_class: Dict[ast.FunctionDef, str] = {}
+        for node in tree.body:
+            if isinstance(node, ast.ClassDef):
+                ms = class_methods(node)
+                self.methods[node.name] = ms
+                for m in ms.values():
+                    self.owner_class[m] = node.name
+        self.future_funcs: Set[str] = set()          # module-level names
+        self.future_methods: Set[Tuple[str, str]] = set()  # (class, meth)
+        self._summarize()
+
+    def is_source(self, call: ast.Call,
+                  func: Optional[ast.FunctionDef]) -> bool:
+        if _submit_attr(call):
+            return True
+        if isinstance(call.func, ast.Name) \
+                and call.func.id in self.future_funcs:
+            return True
+        if isinstance(call.func, ast.Attribute) \
+                and isinstance(call.func.value, ast.Name) \
+                and call.func.value.id == "self" and func is not None:
+            cls = self.owner_class.get(func)
+            if cls and (cls, call.func.attr) in self.future_methods:
+                return True
+        return False
+
+    def _returns_source(self, func: ast.FunctionDef) -> bool:
+        tracked = _tracked_names(func, self)
+        for node in own_statements(func):
+            if isinstance(node, ast.Return) and node.value is not None:
+                v = node.value
+                if isinstance(v, ast.Call) and self.is_source(v, func):
+                    return True
+                if isinstance(v, ast.Name) and v.id in tracked:
+                    return True
+        return False
+
+    def _summarize(self) -> None:
+        changed = True
+        while changed:
+            changed = False
+            for name, func in self.mod_funcs.items():
+                if name not in self.future_funcs \
+                        and self._returns_source(func):
+                    self.future_funcs.add(name)
+                    changed = True
+            for cls, ms in self.methods.items():
+                for name, func in ms.items():
+                    key = (cls, name)
+                    if key not in self.future_methods \
+                            and self._returns_source(func):
+                        self.future_methods.add(key)
+                        changed = True
+
+
+def _tracked_names(func: ast.FunctionDef, index: _ModuleIndex) -> Set[str]:
+    """Local names bound directly to a future source (``f = X.submit(..)``).
+
+    Container vars of futures (list literals / comprehensions of sources,
+    ``fs.append(source)``) are tracked separately by the caller."""
+    out: Set[str] = set()
+    for node in own_statements(func):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name) \
+                and isinstance(node.value, ast.Call) \
+                and index.is_source(node.value, func):
+            out.add(node.targets[0].id)
+    return out
+
+
+def _container_names(func: ast.FunctionDef, index: _ModuleIndex
+                     ) -> Set[str]:
+    """Local names holding a list/set of future sources."""
+    out: Set[str] = set()
+    for node in own_statements(func):
+        # fs = [source(...) for ...] / {source(...) for ...} / [source, ..]
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name):
+            v = node.value
+            elt = None
+            if isinstance(v, (ast.ListComp, ast.SetComp, ast.GeneratorExp)):
+                elt = v.elt
+            if elt is not None and isinstance(elt, ast.Call) \
+                    and index.is_source(elt, func):
+                out.add(node.targets[0].id)
+            if isinstance(v, (ast.List, ast.Set, ast.Tuple)) and v.elts \
+                    and all(isinstance(e, ast.Call)
+                            and index.is_source(e, func) for e in v.elts):
+                out.add(node.targets[0].id)
+        # fs.append(source(...))
+        if isinstance(node, ast.Call) \
+                and isinstance(node.func, ast.Attribute) \
+                and node.func.attr in ("append", "add") \
+                and isinstance(node.func.value, ast.Name) and node.args \
+                and isinstance(node.args[0], ast.Call) \
+                and index.is_source(node.args[0], func):
+            out.add(node.func.value.id)
+    return out
+
+
+def _itervars(func: ast.FunctionDef, containers: Set[str]) -> Set[str]:
+    """Loop/comprehension variables iterating a future container."""
+    out: Set[str] = set()
+    for node in own_statements(func):
+        iters: List[Tuple[ast.expr, ast.expr]] = []
+        if isinstance(node, ast.For):
+            iters.append((node.target, node.iter))
+        elif isinstance(node, ast.comprehension):
+            iters.append((node.target, node.iter))
+        for target, it in iters:
+            if isinstance(it, ast.Name) and it.id in containers \
+                    and isinstance(target, ast.Name):
+                out.add(target.id)
+    return out
+
+
+def _has_timeout(call: ast.Call) -> bool:
+    return bool(call.args) or any(kw.arg == "timeout"
+                                  for kw in call.keywords)
+
+
+def check_module(mod: ModuleRecord) -> Iterable[Finding]:
+    index = _ModuleIndex(mod.tree)
+    for func in iter_functions(mod.tree):
+        parents = build_parents(func)
+        tracked = _tracked_names(func, index)
+        containers = _container_names(func, index)
+        futureish = tracked | _itervars(func, containers)
+
+        for node in own_statements(func):
+            # 1. bare `X.submit(...)` expression statement
+            if isinstance(node, ast.Expr) \
+                    and isinstance(node.value, ast.Call) \
+                    and index.is_source(node.value, func):
+                yield Finding(
+                    mod.relpath, node.lineno, NAME, "dropped-future",
+                    f"submit result discarded in {func.name}() — nothing "
+                    f"can wait on, cancel or account for this future")
+                continue
+            if not isinstance(node, ast.Call):
+                continue
+            f = node.func
+            # 2. chained `<source>(...).result(...)` and `fut.result(...)`
+            if isinstance(f, ast.Attribute) and f.attr == "result":
+                recv = f.value
+                chained = isinstance(recv, ast.Call) \
+                    and index.is_source(recv, func)
+                named = isinstance(recv, ast.Name) and recv.id in futureish
+                if (chained or named) and not _has_timeout(node):
+                    yield Finding(
+                        mod.relpath, node.lineno, NAME, "untimed-wait",
+                        f".result() with no timeout in {func.name}() — an "
+                        f"unresolved future wedges this thread forever "
+                        f"(pass timeout=, or suppress with a documented "
+                        f"'# lint: untimed-wait(...)')")
+
+        # 3. tracked futures that are never used at all
+        for name in tracked:
+            uses = [n for n in own_statements(func)
+                    if isinstance(n, ast.Name) and n.id == name
+                    and isinstance(n.ctx, ast.Load)]
+            if not uses:
+                assigns = [n for n in own_statements(func)
+                           if isinstance(n, ast.Name) and n.id == name
+                           and isinstance(n.ctx, ast.Store)]
+                line = min((n.lineno for n in assigns),
+                           default=func.lineno)
+                yield Finding(
+                    mod.relpath, line, NAME, "unawaited-future",
+                    f"future {name!r} in {func.name}() is never awaited, "
+                    f"cancelled or handed off (the PR 8 leak class)")

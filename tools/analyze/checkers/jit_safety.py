@@ -1,0 +1,269 @@
+"""jit-safety: jit/pmap-reachable code must honor the tracing contract.
+
+The fused scorer's zero-recompile promise (devicecost, asserted via
+``trace_count``) dies quietly when traced values leak into Python
+control flow or host conversions.  For every function reachable from a
+``jax.jit`` / ``jax.pmap`` binding *in the same module* (direct call,
+decorator, or ``functools.partial`` form — partial-bound and
+``static_argnums``/``static_argnames`` parameters are static):
+
+* **traced-branch** — ``if`` / ``while`` / conditional expressions on a
+  traced value: a ConcretizationTypeError at best, a silent per-value
+  recompile at worst.  Branching on shape metadata is fine —
+  ``x.shape`` / ``x.dtype`` / ``len(x)`` / ``jnp.issubdtype(...)``
+  launder a traced value into static Python.
+* **traced-concretize** — ``float()`` / ``int()`` / ``bool()`` /
+  ``np.asarray()`` / ``.item()`` / ``.tolist()`` on a traced value:
+  forces a device sync inside the trace or fails outright.
+* **array-closure** — the jitted function closes over a module-level
+  numpy/jax array that is reassigned somewhere, or is not a
+  SCREAMING_CASE constant: closed-over arrays are baked into the
+  compiled executable, so swapping them defeats the zero-recompile
+  contract (pass them as arguments instead).  Frozen module constants
+  (``DEFAULT_COEFFS``-style) are allowed.
+* **unhashable-static** — a static parameter with an unhashable default
+  (list/dict/set): ``jax.jit`` requires hashable statics.
+
+Same-module helpers called with traced arguments are analyzed with
+those parameters traced (memoized, cycle-safe) — the padding helpers in
+the kernel wrappers get checked through their call sites.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, FrozenSet, Iterable, List, Optional, Set, Tuple
+
+from tools.analyze.core import Finding, ModuleRecord
+from tools.analyze.dataflow import (Taint, call_keywords, const_int_tuple,
+                                    const_str_tuple, dotted,
+                                    module_functions, own_statements,
+                                    param_names)
+
+NAME = "jit-safety"
+
+RULES = {
+    "traced-branch": "Python control flow on a traced value",
+    "traced-concretize": "host conversion of a traced value",
+    "array-closure": "jitted function closes over a mutable module-level "
+                     "array",
+    "unhashable-static": "static jit parameter with an unhashable "
+                         "default",
+}
+
+_JIT_CALLS = {"jax.jit", "jax.pmap", "pmap", "jit"}
+_PARTIAL_CALLS = {"functools.partial", "partial"}
+_CONCRETIZE_CALLS = {"float", "int", "bool", "np.asarray", "np.array",
+                     "numpy.asarray", "numpy.array"}
+_CONCRETIZE_ATTRS = {"item", "tolist"}
+_ARRAY_PREFIXES = ("np.", "numpy.", "jnp.", "jax.numpy.")
+
+
+def _positional_params(func: ast.FunctionDef) -> List[str]:
+    a = func.args
+    return [p.arg for p in a.posonlyargs + a.args]
+
+
+def _static_names_from_call(call: ast.Call,
+                            func: ast.FunctionDef) -> Set[str]:
+    """Static parameter names from static_argnums/static_argnames."""
+    out: Set[str] = set()
+    kws = call_keywords(call)
+    pos = _positional_params(func)
+    nums = kws.get("static_argnums")
+    if nums is not None:
+        ints = const_int_tuple(nums)
+        if ints:
+            out.update(pos[i] for i in ints if 0 <= i < len(pos))
+    names = kws.get("static_argnames")
+    if names is not None:
+        strs = const_str_tuple(names)
+        if strs:
+            out.update(strs)
+    return out
+
+
+def _jit_roots(tree: ast.Module) -> Dict[ast.FunctionDef, Set[str]]:
+    """jit/pmap-bound same-module functions -> their static param names.
+
+    Covers ``jax.jit(F, ...)`` / ``jax.pmap(F, ...)`` anywhere in the
+    module (``F`` a module-level function name, possibly wrapped in
+    ``functools.partial(F, **static_kwargs)``), plus the decorator forms
+    ``@jax.jit`` and ``@functools.partial(jax.jit, ...)``.
+    """
+    funcs = module_functions(tree)
+    roots: Dict[ast.FunctionDef, Set[str]] = {}
+
+    def note(func: ast.FunctionDef, statics: Set[str]) -> None:
+        roots.setdefault(func, set()).update(statics)
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and dotted(node.func) in _JIT_CALLS \
+                and node.args:
+            target = node.args[0]
+            if isinstance(target, ast.Name) and target.id in funcs:
+                func = funcs[target.id]
+                note(func, _static_names_from_call(node, func))
+            elif isinstance(target, ast.Call) \
+                    and dotted(target.func) in _PARTIAL_CALLS \
+                    and target.args \
+                    and isinstance(target.args[0], ast.Name) \
+                    and target.args[0].id in funcs:
+                func = funcs[target.args[0].id]
+                statics = set(call_keywords(target))   # partial-bound kw
+                statics |= _static_names_from_call(node, func)
+                note(func, statics)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if node.name not in funcs:
+                continue
+            for dec in node.decorator_list:
+                if dotted(dec) in _JIT_CALLS:
+                    note(node, set())
+                elif isinstance(dec, ast.Call):
+                    if dotted(dec.func) in _JIT_CALLS:
+                        note(node, _static_names_from_call(dec, node))
+                    elif dotted(dec.func) in _PARTIAL_CALLS and dec.args \
+                            and dotted(dec.args[0]) in _JIT_CALLS:
+                        note(node, _static_names_from_call(dec, node))
+    return roots
+
+
+def _module_arrays(tree: ast.Module) -> Dict[str, int]:
+    """Module-level names bound to numpy/jax array expressions -> line."""
+    out: Dict[str, int] = {}
+    for node in tree.body:
+        if not isinstance(node, ast.Assign):
+            continue
+        is_array = any(
+            isinstance(sub, ast.Call)
+            and (dotted(sub.func) or "").startswith(_ARRAY_PREFIXES)
+            for sub in ast.walk(node.value))
+        if not is_array:
+            continue
+        for target in node.targets:
+            if isinstance(target, ast.Name):
+                out[target.id] = node.lineno
+    return out
+
+
+def _reassigned_names(tree: ast.Module) -> Set[str]:
+    """Names stored anywhere below module top level (mutated state)."""
+    out: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.Name) \
+                        and isinstance(sub.ctx, (ast.Store, ast.Del)):
+                    out.add(sub.id)
+    return out
+
+
+class _Analyzer:
+    def __init__(self, mod: ModuleRecord) -> None:
+        self.mod = mod
+        self.funcs = module_functions(mod.tree)
+        self.arrays = _module_arrays(mod.tree)
+        self.reassigned = _reassigned_names(mod.tree)
+        self.findings: List[Finding] = []
+        self._seen: Set[Tuple[str, FrozenSet[str]]] = set()
+
+    def analyze(self, func: ast.FunctionDef, traced: Set[str]) -> None:
+        key = (func.name, frozenset(traced))
+        if key in self._seen:
+            return
+        self._seen.add(key)
+        taint = Taint(func, traced, sanitize_shapes=True)
+        locals_ = set(param_names(func)) | {
+            n.id for n in own_statements(func)
+            if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Store)}
+        for node in own_statements(func):
+            if isinstance(node, (ast.If, ast.While)) \
+                    and taint.expr_tainted(node.test):
+                self._emit(node.lineno, "traced-branch",
+                           f"Python {type(node).__name__.lower()} on a "
+                           f"traced value in {func.name}() — branch on "
+                           f"shape metadata or use jnp.where/lax.cond")
+            elif isinstance(node, ast.IfExp) \
+                    and taint.expr_tainted(node.test):
+                self._emit(node.lineno, "traced-branch",
+                           f"conditional expression on a traced value in "
+                           f"{func.name}()")
+            elif isinstance(node, ast.Call):
+                self._check_call(node, func, taint)
+            elif isinstance(node, ast.Name) \
+                    and isinstance(node.ctx, ast.Load) \
+                    and node.id in self.arrays \
+                    and node.id not in locals_:
+                bad = node.id in self.reassigned \
+                    or node.id != node.id.upper()
+                if bad:
+                    self._emit(node.lineno, "array-closure",
+                               f"{func.name}() closes over module array "
+                               f"{node.id!r} — closed-over arrays bake "
+                               f"into the executable; pass it as an "
+                               f"argument")
+
+    def _check_call(self, node: ast.Call, func: ast.FunctionDef,
+                    taint: Taint) -> None:
+        callee = dotted(node.func)
+        if callee in _CONCRETIZE_CALLS \
+                and any(taint.expr_tainted(a) for a in node.args):
+            self._emit(node.lineno, "traced-concretize",
+                       f"{callee}() on a traced value in {func.name}() "
+                       f"forces a host sync inside the trace")
+            return
+        if isinstance(node.func, ast.Attribute) \
+                and node.func.attr in _CONCRETIZE_ATTRS \
+                and taint.expr_tainted(node.func.value):
+            self._emit(node.lineno, "traced-concretize",
+                       f".{node.func.attr}() on a traced value in "
+                       f"{func.name}()")
+            return
+        # same-module helper called with traced arguments: descend
+        if isinstance(node.func, ast.Name) and node.func.id in self.funcs:
+            callee_func = self.funcs[node.func.id]
+            if callee_func is func:
+                return
+            pos = _positional_params(callee_func)
+            traced_params: Set[str] = set()
+            for i, arg in enumerate(node.args):
+                if i < len(pos) and taint.expr_tainted(arg):
+                    traced_params.add(pos[i])
+            for kw in node.keywords:
+                if kw.arg and taint.expr_tainted(kw.value):
+                    traced_params.add(kw.arg)
+            if traced_params:
+                self.analyze(callee_func, traced_params)
+
+    def _emit(self, line: int, rule: str, message: str) -> None:
+        self.findings.append(Finding(self.mod.relpath, line, NAME, rule,
+                                     message))
+
+
+def _check_static_defaults(func: ast.FunctionDef, statics: Set[str],
+                           mod: ModuleRecord) -> Iterable[Finding]:
+    a = func.args
+    pos = a.posonlyargs + a.args
+    defaults = [None] * (len(pos) - len(a.defaults)) + list(a.defaults)
+    pairs = list(zip(pos, defaults)) + list(zip(a.kwonlyargs,
+                                                a.kw_defaults))
+    for param, default in pairs:
+        if param.arg in statics and isinstance(
+                default, (ast.List, ast.Dict, ast.Set)):
+            yield Finding(
+                mod.relpath, default.lineno, NAME, "unhashable-static",
+                f"static jit parameter {param.arg!r} of {func.name}() "
+                f"defaults to an unhashable "
+                f"{type(default).__name__.lower()} — jax.jit requires "
+                f"hashable statics (use a tuple)")
+
+
+def check_module(mod: ModuleRecord) -> Iterable[Finding]:
+    roots = _jit_roots(mod.tree)
+    if not roots:
+        return
+    analyzer = _Analyzer(mod)
+    for func, statics in roots.items():
+        traced = {p for p in param_names(func) if p not in statics}
+        analyzer.analyze(func, traced)
+        yield from _check_static_defaults(func, statics, mod)
+    yield from analyzer.findings

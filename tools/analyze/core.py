@@ -1,0 +1,200 @@
+"""repro-lint core: findings, suppressions, baseline, and the runner.
+
+The framework is deliberately small: a checker is a module exposing
+
+* ``NAME`` — the checker's id (``--checker`` filter, finding prefix);
+* ``RULES`` — ``{rule: one-line description}`` of every rule it emits;
+* ``check_module(mod)`` — per-file entry point taking a
+  :class:`ModuleRecord` and yielding :class:`Finding`s; and/or
+* ``check_repo(root)`` — run once per invocation (repo-wide checkers,
+  e.g. the docs-reference audit).
+
+Findings carry ``path:line`` anchors relative to the repo root.  A
+finding is silenced by a *documented* suppression comment on (or
+directly above) its line::
+
+    self._pool.shutdown(wait=False)   # lint: unlocked(close is owner-only)
+
+The grammar is ``# lint: <rule>(<reason>)`` — the rule must be the exact
+rule id and the reason must be non-empty (a suppression with an empty
+reason is itself reported, so suppressions can't rot into unexplained
+noise).  A suppression comment on its own line applies to the next line.
+
+The checked-in baseline (``tools/analyze/baseline.json``) is a list of
+``{checker, rule, path, message}`` entries subtracted from the report —
+it ships **empty**: real violations get fixed, not grandfathered.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import os
+import re
+import tokenize
+from typing import Dict, Iterable, List, Optional, Sequence, Set
+
+#: repo root — tools/analyze/core.py -> tools/analyze -> tools -> root
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", ".."))
+
+#: default analysis surface (mirrors the CI invocation)
+DEFAULT_PATHS = ("src/repro", "benchmarks", "tools")
+
+#: machine-readable report schema version (bump on breaking changes)
+REPORT_VERSION = 1
+
+_SUPPRESS_RE = re.compile(r"#\s*lint:\s*([A-Za-z0-9_-]+)\(([^)]*)\)")
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Finding:
+    """One rule violation, anchored at ``path:line``."""
+
+    path: str       # repo-relative, forward slashes
+    line: int
+    checker: str
+    rule: str
+    message: str
+
+    def format(self) -> str:
+        return (f"{self.path}:{self.line}: [{self.checker}/{self.rule}] "
+                f"{self.message}")
+
+    def to_dict(self) -> Dict:
+        return {"path": self.path, "line": self.line,
+                "checker": self.checker, "rule": self.rule,
+                "message": self.message}
+
+    def baseline_key(self) -> tuple:
+        # line numbers shift too easily to key a baseline on
+        return (self.checker, self.rule, self.path, self.message)
+
+
+class ModuleRecord:
+    """One parsed source file handed to every file-scope checker."""
+
+    def __init__(self, path: str, relpath: str, text: str,
+                 tree: ast.Module) -> None:
+        self.path = path          # absolute
+        self.relpath = relpath    # repo-relative, forward slashes
+        self.text = text
+        self.tree = tree
+        #: line -> set of rule ids suppressed there (next-line comments
+        #: already folded onto the line they govern)
+        self.suppressions: Dict[int, Set[str]] = {}
+        #: malformed suppressions (empty reason) found while scanning
+        self.bad_suppressions: List[Finding] = []
+        self._scan_suppressions()
+
+    def _scan_suppressions(self) -> None:
+        lines = self.text.splitlines()
+        for lineno, line in enumerate(lines, start=1):
+            for m in _SUPPRESS_RE.finditer(line):
+                rule, reason = m.group(1), m.group(2).strip()
+                if not reason:
+                    self.bad_suppressions.append(Finding(
+                        self.relpath, lineno, "framework",
+                        "bare-suppression",
+                        f"suppression for {rule!r} has no reason — "
+                        f"write '# lint: {rule}(<why it is safe>)'"))
+                    continue
+                target = lineno
+                if line[:m.start()].strip() == "":
+                    target = lineno + 1   # comment-only line: govern next
+                self.suppressions.setdefault(target, set()).add(rule)
+
+    def suppressed(self, rule: str, line: int) -> bool:
+        return rule in self.suppressions.get(line, ())
+
+
+def _iter_py_files(paths: Sequence[str], root: str) -> List[str]:
+    out: List[str] = []
+    for p in paths:
+        absp = p if os.path.isabs(p) else os.path.join(root, p)
+        if os.path.isfile(absp):
+            out.append(absp)
+        elif os.path.isdir(absp):
+            for dirpath, dirnames, filenames in os.walk(absp):
+                dirnames[:] = [d for d in dirnames
+                               if d not in ("__pycache__", ".git")]
+                out.extend(os.path.join(dirpath, f)
+                           for f in sorted(filenames)
+                           if f.endswith(".py"))
+        else:
+            raise FileNotFoundError(f"no such path: {p}")
+    return sorted(set(out))
+
+
+def load_module(path: str, root: str = ROOT) -> Optional[ModuleRecord]:
+    """Parse one file into a :class:`ModuleRecord` (None on syntax error
+    — reported by the runner as a framework finding, not a crash)."""
+    with tokenize.open(path) as fh:
+        text = fh.read()
+    rel = os.path.relpath(path, root).replace(os.sep, "/")
+    tree = ast.parse(text, filename=rel)
+    return ModuleRecord(path, rel, text, tree)
+
+
+def load_baseline(path: Optional[str]) -> Set[tuple]:
+    if path is None or not os.path.exists(path):
+        return set()
+    with open(path) as fh:
+        entries = json.load(fh)
+    return {(e["checker"], e["rule"], e["path"], e["message"])
+            for e in entries}
+
+
+def run_paths(paths: Sequence[str] = DEFAULT_PATHS, *,
+              root: str = ROOT,
+              checkers: Optional[Sequence] = None,
+              baseline: Optional[str] = "default") -> List[Finding]:
+    """Run checkers over ``paths``; returns sorted, unsuppressed findings.
+
+    ``checkers`` is a sequence of checker modules (default: all
+    registered in :mod:`tools.analyze.checkers`); ``baseline`` is a path
+    to a baseline JSON, ``"default"`` for the checked-in one, or ``None``
+    for no baseline.
+    """
+    if checkers is None:
+        from tools.analyze.checkers import ALL_CHECKERS
+        checkers = ALL_CHECKERS
+    if baseline == "default":
+        baseline = os.path.join(ROOT, "tools", "analyze", "baseline.json")
+    findings: List[Finding] = []
+    files = _iter_py_files(paths, root)
+    file_checkers = [c for c in checkers if hasattr(c, "check_module")]
+    repo_checkers = [c for c in checkers if hasattr(c, "check_repo")]
+    for path in files:
+        try:
+            mod = load_module(path, root)
+        except SyntaxError as exc:
+            rel = os.path.relpath(path, root).replace(os.sep, "/")
+            findings.append(Finding(rel, exc.lineno or 0, "framework",
+                                    "syntax-error", str(exc.msg)))
+            continue
+        findings.extend(mod.bad_suppressions)
+        for checker in file_checkers:
+            for f in checker.check_module(mod):
+                if not mod.suppressed(f.rule, f.line):
+                    findings.append(f)
+    for checker in repo_checkers:
+        findings.extend(checker.check_repo(root))
+    known = load_baseline(baseline)
+    findings = [f for f in findings if f.baseline_key() not in known]
+    return sorted(set(findings))
+
+
+def render_text(findings: Iterable[Finding]) -> str:
+    findings = list(findings)
+    lines = [f.format() for f in findings]
+    lines.append(f"repro-lint: {len(findings)} finding"
+                 f"{'' if len(findings) == 1 else 's'}")
+    return "\n".join(lines)
+
+
+def render_json(findings: Iterable[Finding]) -> str:
+    findings = list(findings)
+    return json.dumps({"version": REPORT_VERSION,
+                       "count": len(findings),
+                       "findings": [f.to_dict() for f in findings]},
+                      indent=2, sort_keys=True)

@@ -1,0 +1,261 @@
+"""Shared AST/dataflow machinery for the repro-lint checkers.
+
+Everything here is *intraprocedural* and deliberately conservative in
+the same direction for every checker: taint over-approximates (any
+expression mentioning a tainted name is tainted unless the mention is
+syntactically sanitized), lock dominance under-approximates (only a
+lexically enclosing ``with <lock>:`` counts).  Checkers that need
+cross-function facts build small per-module summaries on top (the
+future-hygiene checker's "returns a future" fixpoint, the jit checker's
+same-module callee walk) — never whole-program analysis.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+
+def build_parents(tree: ast.AST) -> Dict[ast.AST, ast.AST]:
+    """child node -> parent node, for upward walks."""
+    parents: Dict[ast.AST, ast.AST] = {}
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            parents[child] = node
+    return parents
+
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for Name/Attribute chains, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def iter_functions(tree: ast.AST) -> Iterable[ast.FunctionDef]:
+    """Every function/method/nested def in the module, in source order."""
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+def module_functions(tree: ast.Module) -> Dict[str, ast.FunctionDef]:
+    """Top-level functions by name."""
+    return {n.name: n for n in tree.body
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+
+
+def class_methods(cls: ast.ClassDef) -> Dict[str, ast.FunctionDef]:
+    return {n.name: n for n in cls.body
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+
+
+def param_names(func: ast.FunctionDef) -> List[str]:
+    a = func.args
+    names = [p.arg for p in a.posonlyargs + a.args]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    names.extend(p.arg for p in a.kwonlyargs)
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return names
+
+
+def own_statements(func: ast.FunctionDef) -> Iterable[ast.AST]:
+    """The function's own statements, NOT descending into nested defs
+    or lambdas (their locals shadow; checkers analyze them separately)."""
+    stack: List[ast.AST] = list(func.body)
+    while stack:
+        node = stack.pop()
+        yield node
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.Lambda)):
+                continue
+            stack.append(child)
+
+
+def assigned_names(func: ast.FunctionDef) -> Set[str]:
+    """Every name the function binds (assignment targets, loop vars,
+    with-as, comprehension targets, nested def/class names)."""
+    out: Set[str] = set(param_names(func))
+    for node in own_statements(func):
+        if isinstance(node, ast.Name) and isinstance(
+                node.ctx, (ast.Store, ast.Del)):
+            out.add(node.id)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.ClassDef)):
+            out.add(node.name)
+        elif isinstance(node, (ast.Import, ast.ImportFrom)):
+            for alias in node.names:
+                out.add((alias.asname or alias.name).split(".")[0])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Taint
+# ---------------------------------------------------------------------------
+#: attribute reads that launder a traced/tainted value into static shape
+#: metadata — ``x.shape[0]`` is a Python int inside a jitted trace
+SHAPE_ATTRS = frozenset({"shape", "dtype", "ndim", "size"})
+
+#: calls whose result is static even on tainted arguments
+SHAPE_CALLS = frozenset({
+    "len", "isinstance", "type", "id",
+    "jnp.issubdtype", "np.issubdtype", "jnp.iinfo", "jnp.finfo",
+    "np.iinfo", "np.finfo", "jnp.shape", "np.shape", "jnp.result_type",
+})
+
+
+class Taint:
+    """Forward intraprocedural taint over one function body.
+
+    Iterated to fixpoint over the function's own assignments (flow
+    insensitive: an assignment anywhere taints the name everywhere —
+    the conservative direction for invariant checking).
+    """
+
+    def __init__(self, func: ast.FunctionDef, seeds: Set[str],
+                 sanitize_shapes: bool = False) -> None:
+        self.func = func
+        self.tainted: Set[str] = set(seeds)
+        self.sanitize_shapes = sanitize_shapes
+        self._parents = build_parents(func)
+        self._fixpoint()
+
+    def _fixpoint(self) -> None:
+        changed = True
+        while changed:
+            changed = False
+            for node in own_statements(self.func):
+                targets: List[ast.expr] = []
+                value: Optional[ast.expr] = None
+                if isinstance(node, ast.Assign):
+                    targets, value = node.targets, node.value
+                elif isinstance(node, ast.AnnAssign) and node.value:
+                    targets, value = [node.target], node.value
+                elif isinstance(node, ast.AugAssign):
+                    targets, value = [node.target], node.value
+                elif isinstance(node, ast.NamedExpr):
+                    targets, value = [node.target], node.value
+                elif isinstance(node, ast.For):
+                    targets, value = [node.target], node.iter
+                elif isinstance(node, ast.withitem) and node.optional_vars:
+                    targets = [node.optional_vars]
+                    value = node.context_expr
+                elif isinstance(node, ast.comprehension):
+                    targets, value = [node.target], node.iter
+                if value is None or not self.expr_tainted(value):
+                    continue
+                for t in targets:
+                    for name in self._target_names(t):
+                        if name not in self.tainted:
+                            self.tainted.add(name)
+                            changed = True
+
+    @staticmethod
+    def _target_names(target: ast.expr) -> Iterable[str]:
+        if isinstance(target, ast.Name):
+            yield target.id
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for el in target.elts:
+                yield from Taint._target_names(el)
+        elif isinstance(target, ast.Starred):
+            yield from Taint._target_names(target.value)
+
+    def _sanitized(self, name_node: ast.Name) -> bool:
+        """True when this mention of a tainted name is laundered through
+        shape metadata (``x.shape``) or a shape-of call (``len(x)``)."""
+        if not self.sanitize_shapes:
+            return False
+        node: ast.AST = name_node
+        while True:
+            parent = self._parents.get(node)
+            if parent is None:
+                return False
+            if isinstance(parent, ast.Attribute) and parent.value is node:
+                return parent.attr in SHAPE_ATTRS
+            if isinstance(parent, ast.Subscript) and parent.value is node:
+                node = parent          # x[0].shape still sanitizes
+                continue
+            if isinstance(parent, ast.Call) and node in parent.args:
+                callee = dotted(parent.func)
+                if callee in SHAPE_CALLS:
+                    return True
+                return False
+            return False
+
+    def expr_tainted(self, expr: ast.expr) -> bool:
+        for node in ast.walk(expr):
+            if isinstance(node, ast.Name) and node.id in self.tainted \
+                    and isinstance(node.ctx, ast.Load) \
+                    and not self._sanitized(node):
+                return True
+        return False
+
+
+# ---------------------------------------------------------------------------
+# Lock dominance
+# ---------------------------------------------------------------------------
+def under_lock(node: ast.AST, parents: Dict[ast.AST, ast.AST],
+               lock_names: Set[str]) -> bool:
+    """True when ``node`` sits lexically inside ``with <lock>:`` for any
+    lock in ``lock_names`` (dotted names, e.g. ``{"self._lock",
+    "MEMO_LOCK", "memo.MEMO_LOCK"}``)."""
+    cur: Optional[ast.AST] = node
+    while cur is not None:
+        if isinstance(cur, (ast.With, ast.AsyncWith)):
+            for item in cur.items:
+                name = dotted(item.context_expr)
+                if name in lock_names:
+                    return True
+        cur = parents.get(cur)
+    return False
+
+
+def enclosing_function(node: ast.AST, parents: Dict[ast.AST, ast.AST]
+                       ) -> Optional[ast.FunctionDef]:
+    cur = parents.get(node)
+    while cur is not None:
+        if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return cur
+        cur = parents.get(cur)
+    return None
+
+
+def call_keywords(call: ast.Call) -> Dict[str, ast.expr]:
+    return {kw.arg: kw.value for kw in call.keywords if kw.arg}
+
+
+def const_str_tuple(node: ast.expr) -> Optional[Tuple[str, ...]]:
+    """A literal str or tuple/list of str constants, else None."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for el in node.elts:
+            if not (isinstance(el, ast.Constant)
+                    and isinstance(el.value, str)):
+                return None
+            out.append(el.value)
+        return tuple(out)
+    return None
+
+
+def const_int_tuple(node: ast.expr) -> Optional[Tuple[int, ...]]:
+    """A literal int or tuple/list of int constants, else None."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for el in node.elts:
+            if not (isinstance(el, ast.Constant)
+                    and isinstance(el.value, int)):
+                return None
+            out.append(el.value)
+        return tuple(out)
+    return None

@@ -1,25 +1,18 @@
 #!/usr/bin/env python
-"""Tiny docs checker: documentation references must resolve, or CI fails.
+"""Docs checker CLI — now a thin shim over the repro-lint framework.
 
-Scans ``README.md`` and ``docs/*.md`` for
-
-* dotted code references (``repro.core.batchcost.pack_sweep``,
-  ``benchmarks.search_bench`` ...) — each must import and, where it names
-  an attribute, resolve via ``getattr``;
-* repo-relative file paths (``src/repro/core/whatif.py``,
-  ``experiments/bench/BENCH_search.json`` ...) — each must exist.
-
-So a rename or deletion that would silently rot the docs instead fails
-``tests/test_docs.py`` (and this script, runnable standalone):
+The actual scanning lives in ``tools.analyze.checkers.docs_refs`` (the
+``docs-refs`` checker, run as part of ``python -m tools.analyze``).
+This entry point keeps the historical interface working:
 
     PYTHONPATH=src python tools/check_docs.py
+
+``doc_files`` / ``check_docs`` keep their old signatures so existing
+callers (and tests/test_docs.py) are unaffected.
 """
 from __future__ import annotations
 
-import glob
-import importlib
 import os
-import re
 import sys
 from typing import List
 
@@ -28,56 +21,22 @@ for p in (os.path.join(ROOT, "src"), ROOT):   # repro.* and benchmarks.*
     if p not in sys.path:
         sys.path.insert(0, p)
 
-#: dotted module/attribute references worth auditing
-_DOTTED = re.compile(r"\b(?:repro|benchmarks|tools)(?:\.[A-Za-z_]\w*)+")
-#: repo-relative paths under the directories docs talk about
-_PATHISH = re.compile(
-    r"\b(?:src|docs|tests|tools|benchmarks|examples|experiments)"
-    r"/[\w][\w./-]*")
+from tools.analyze.checkers import docs_refs as _docs_refs
+
+_DOTTED = _docs_refs._DOTTED
+_PATHISH = _docs_refs._PATHISH
 
 
 def doc_files() -> List[str]:
-    return [os.path.join(ROOT, "README.md")] + \
-        sorted(glob.glob(os.path.join(ROOT, "docs", "*.md")))
+    return _docs_refs.doc_files()
 
 
 def _resolve_dotted(ref: str):
-    parts = ref.split(".")
-    for cut in range(len(parts), 0, -1):
-        modname = ".".join(parts[:cut])
-        try:
-            obj = importlib.import_module(modname)
-        except ImportError:
-            continue
-        for attr in parts[cut:]:
-            try:
-                obj = getattr(obj, attr)
-            except AttributeError:
-                return (f"{ref}: module {modname!r} has no attribute "
-                        f"{'.'.join(parts[cut:])!r}")
-        return None
-    return f"{ref}: no importable module prefix"
+    return _docs_refs.resolve_dotted(ref)
 
 
 def check_docs() -> List[str]:
-    errors: List[str] = []
-    for path in doc_files():
-        rel = os.path.relpath(path, ROOT)
-        if not os.path.exists(path):
-            errors.append(f"{rel}: file is missing")
-            continue
-        with open(path) as fh:
-            text = fh.read()
-        for ref in sorted(set(_DOTTED.findall(text))):
-            err = _resolve_dotted(ref)
-            if err is not None:
-                errors.append(f"{rel}: {err}")
-        for p in sorted(set(_PATHISH.findall(text))):
-            p = p.rstrip(".,:;")    # sentence punctuation
-            if not os.path.exists(os.path.join(ROOT, p)):
-                errors.append(f"{rel}: referenced path {p!r} does not "
-                              f"exist")
-    return errors
+    return _docs_refs.check_doc_texts(doc_files())
 
 
 def main() -> int:
