@@ -5,8 +5,8 @@
 
 ``--smoke`` is the fast validation path: it runs the repro-lint static
 checks (``python -m tools.analyze``), then the search-engine,
-workload-sweep, what-if-serving, sharded-scoring and fault-injection
-parity checks at tiny sizes (every
+population-search, workload-sweep, what-if-serving, sharded-scoring
+and fault-injection parity checks at tiny sizes (every
 engine against the scalar oracle, grouped sweep grids bit-identical to
 per-workload loops, zero-recompile probes, one injected shard failure
 and one NaN-bank corruption both healed to oracle parity), writes
@@ -25,8 +25,8 @@ import traceback
 from benchmarks import (chaos_bench, design_space, device_scaling,
                         fig6_accuracy, fig7_bulkload_training,
                         fig8_cache_skew, fig9_design_search, hillclimb,
-                        kernels_bench, load_bench, roofline, search_bench,
-                        serving_bench)
+                        kernels_bench, load_bench, popsearch_bench,
+                        roofline, search_bench, serving_bench)
 
 BENCHES = [
     ("design_space", design_space.run),
@@ -37,6 +37,10 @@ BENCHES = [
     # perf trajectory: designs-costed-per-second, scalar vs grouped vs
     # fused (appends an entry to experiments/bench/BENCH_search.json)
     ("BENCH_search", search_bench.run),
+    # search-quality trajectory: population search over the relaxed
+    # continuum vs design_beam at an equal designs-costed cap
+    # (appends to BENCH_search.json as well)
+    ("BENCH_popsearch", popsearch_bench.run),
     # perf trajectory: questions/sec through the concurrent what-if
     # server, serial loop vs coalesced (BENCH_serving.json)
     ("BENCH_serving", serving_bench.run),
@@ -73,6 +77,8 @@ def main() -> None:
             sys.exit(1)
         print("### benchmark: BENCH_search (smoke)", flush=True)
         search_bench.run(smoke=True)
+        print("### benchmark: BENCH_popsearch (smoke)", flush=True)
+        popsearch_bench.run(smoke=True)
         print("### benchmark: BENCH_serving (smoke)", flush=True)
         serving_bench.run(smoke=True)
         print("### benchmark: BENCH_load (smoke)", flush=True)

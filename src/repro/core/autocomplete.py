@@ -46,6 +46,7 @@ from repro.core import batchcost, elements as el
 from repro.core.batchcost import cost_many
 from repro.core.elements import DataStructureSpec, Element
 from repro.core.hardware import HardwareProfile
+from repro.core.search import BudgetExhausted, SearchBudget
 from repro.core.synthesis import Workload, cost_workload
 
 
@@ -299,14 +300,18 @@ def _cost_new_designs(frontier: Sequence[DataStructureSpec],
                       costs: Dict[Tuple[Element, ...], float],
                       workload: Workload, hw: HardwareProfile,
                       mix: Optional[Dict[str, float]], batched: bool,
-                      engine: str) -> int:
+                      engine: str,
+                      budget: Optional[SearchBudget] = None) -> int:
     """Cost only the chains not in ``costs`` (one batched call) and fold
     them in; returns how many new designs were costed.  The seen-set is
     keyed on the cached ``Element`` chain hashes, so successive search
     rounds never re-pack or re-score a design costed earlier — and
     ``explored``/``designs_costed`` counts unique designs.  Deduped
     within the call too: beam rounds can reach one chain through several
-    members' mutations."""
+    members' mutations.  A :class:`repro.core.search.SearchBudget`
+    truncates the batch to its remaining grant (budget accounting is
+    designs-costed, shared with ``population_search`` so equal-budget
+    comparisons are exact) — a zero grant folds in nothing."""
     new: List[DataStructureSpec] = []
     batch: set = set()
     for s in frontier:
@@ -315,6 +320,13 @@ def _cost_new_designs(frontier: Sequence[DataStructureSpec],
             new.append(s)
     if not new:
         return 0
+    if budget is not None:
+        try:
+            new = new[:budget.charge(len(new))]
+        except BudgetExhausted:
+            return 0
+        if not new:
+            return 0
     if batched:
         totals = cost_many(new, workload, hw, mix, engine=engine)
     else:
@@ -328,26 +340,32 @@ def design_hillclimb(workload: Workload, hw: HardwareProfile,
                      mix: Optional[Dict[str, float]] = None,
                      start: Optional[DataStructureSpec] = None,
                      max_steps: int = 30, batched: bool = True,
-                     engine: str = "fused") -> Dict:
+                     engine: str = "fused",
+                     budget: Optional[SearchBudget] = None) -> Dict:
     """Greedy local search; each step packs and costs only the
     never-seen part of the neighbor frontier in one batched call (or a
     scalar loop with ``batched=False`` — the climb path and result are
     identical), reusing cached costs for neighbors revisited across
-    rounds.  Returns a result dict."""
+    rounds.  An optional :class:`repro.core.search.SearchBudget` caps
+    designs costed (the climb stops when the grant runs dry).  Returns
+    a result dict."""
     candidates = default_candidates()
     terminals = default_terminals()
     spec = start or el.spec_btree()
     costs: Dict[Tuple[Element, ...], float] = {}
     t0 = time.perf_counter()
-    _cost_new_designs([spec], costs, workload, hw, mix, batched, engine)
+    _cost_new_designs([spec], costs, workload, hw, mix, batched, engine,
+                      budget)
+    if spec.chain not in costs:
+        raise BudgetExhausted("budget too small to cost the start design")
     current = costs[spec.chain]
     for _ in range(max_steps):
         frontier = design_neighbors(spec.chain, candidates, terminals)
         if not frontier:
             break
         _cost_new_designs(frontier, costs, workload, hw, mix, batched,
-                          engine)
-        totals = np.asarray([costs[s.chain] for s in frontier])
+                          engine, budget)
+        totals = np.asarray([costs.get(s.chain, np.inf) for s in frontier])
         best = int(np.argmin(totals))
         # accept only improvements beyond the documented fused/scalar
         # agreement tolerance (1e-6 relative), so every costing path takes
@@ -367,15 +385,18 @@ def design_beam(workload: Workload, hw: HardwareProfile,
                 mix: Optional[Dict[str, float]] = None,
                 start: Optional[Sequence[DataStructureSpec]] = None,
                 beam_width: int = 4, max_rounds: int = 12,
-                batched: bool = True, engine: str = "fused") -> Dict:
+                batched: bool = True, engine: str = "fused",
+                budget: Optional[SearchBudget] = None) -> Dict:
     """Beam search over the mutation neighborhood.
 
     Each round mutates every beam member and costs the union of
     never-seen neighbors in **one** batched call — the segment cache
     splices previously-packed designs, so round N+1 pays only for
     genuinely new chains (incremental frontier packing).  Stops when a
-    round improves nothing.  Wider exploration than the greedy climb at
-    the same per-round cost profile."""
+    round improves nothing, or when the optional
+    :class:`repro.core.search.SearchBudget` stops granting designs.
+    Wider exploration than the greedy climb at the same per-round cost
+    profile."""
     candidates = default_candidates()
     terminals = default_terminals()
     seeds = list(start) if start else [el.spec_btree()]
@@ -383,13 +404,18 @@ def design_beam(workload: Workload, hw: HardwareProfile,
     by_chain: Dict[Tuple[Element, ...], DataStructureSpec] = {}
     t0 = time.perf_counter()
 
-    def admit(specs: Sequence[DataStructureSpec]) -> None:
-        for s in specs:
-            by_chain.setdefault(s.chain, s)
-        _cost_new_designs(specs, costs, workload, hw, mix, batched, engine)
+    def admit(specs: Sequence[DataStructureSpec]) -> int:
+        costed = _cost_new_designs(specs, costs, workload, hw, mix,
+                                   batched, engine, budget)
+        for s in specs:       # only scored chains compete for the beam
+            if s.chain in costs:
+                by_chain.setdefault(s.chain, s)
+        return costed
 
     admit(seeds)
     beam = sorted(by_chain, key=lambda c: costs[c])[:beam_width]
+    if not beam:
+        raise BudgetExhausted("budget too small to cost any seed design")
     rounds = 0
     for _ in range(max_rounds):
         rounds += 1
@@ -397,9 +423,10 @@ def design_beam(workload: Workload, hw: HardwareProfile,
         neighbors: List[DataStructureSpec] = []
         for chain in beam:
             neighbors.extend(design_neighbors(chain, candidates, terminals))
-        admit(neighbors)
+        costed = admit(neighbors)
         beam = sorted(by_chain, key=lambda c: costs[c])[:beam_width]
-        if costs[beam[0]] >= best_before * (1.0 - 1e-6):
+        if costs[beam[0]] >= best_before * (1.0 - 1e-6) or \
+                (budget is not None and costed == 0):
             break
     spec = by_chain[beam[0]]
     elapsed = time.perf_counter() - t0

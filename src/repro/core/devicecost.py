@@ -325,32 +325,53 @@ def trace_count() -> int:
     return _TRACE_COUNT[0]
 
 
-def _score_kernel(banks: Dict[str, jax.Array], ids: jax.Array,
-                  sizes: jax.Array, weights: jax.Array,
-                  segments: jax.Array, n_segments: int,
-                  with_knn: bool) -> jax.Array:
-    _TRACE_COUNT[0] += 1
-    x = jnp.clip(sizes, banks["xlo"][ids], banks["xhi"][ids])
+def bank_predict(banks: Dict[str, jax.Array], ids: jax.Array,
+                 x: jax.Array, with_knn: bool) -> jax.Array:
+    """Per-record model evaluation against stacked parameter banks.
+
+    ``ids`` is ``[R]``; ``x`` is ``[..., R]`` — any number of leading
+    batch axes (the flat scorer passes ``[R]``, the sweep scorer
+    ``[W, R]``) broadcast against the ``[R, ...]`` bank gathers via the
+    trailing record dimension, so both kernels share one body and the
+    parameter gathers are issued once per record regardless of the
+    batch shape.  Differentiable in ``x`` through the linear-basis and
+    sigmoid families (``jnp.clip``/``log``/``sigmoid`` are smooth
+    inside the fitted range), which is what lets
+    :mod:`repro.core.relax` drive ``jax.grad`` through the very same
+    bank rows the fused engine scores with.  knn rows join through a
+    ``top_k`` gather whose value-gradients flow through the inverse
+    log-distance weights.
+    """
+    x = jnp.clip(x, banks["xlo"][ids], banks["xhi"][ids])
     lx = jnp.log(x + 1.0)
 
     feats = jnp.stack([x, lx, jnp.log(lx + 1.0), x * lx], axis=-1)
     lin = (feats * banks["lin_w"][ids]).sum(-1) + banks["lin_y0"][ids]
 
     sig = (jax.nn.sigmoid(banks["sig_k"][ids] *
-                          (lx[:, None] - banks["sig_x0"][ids])) *
+                          (lx[..., None] - banks["sig_x0"][ids])) *
            banks["sig_c"][ids]).sum(-1) + banks["sig_y0"][ids]
 
     kind = banks["kinds"][ids]
     y = jnp.where(kind == KIND_SIGMOID, sig, lin)
     if with_knn:   # static: profiles without knn models skip the top_k
         klx = banks["knn_lx"][ids]
-        d = jnp.abs(lx[:, None] - klx) + 1e-6
+        d = jnp.abs(lx[..., None] - klx) + 1e-6
         w = jnp.where(klx >= KNN_SENTINEL * 0.5, 0.0, 1.0 / d)
         wk, idx = jax.lax.top_k(w, 4)
-        yk = jnp.take_along_axis(banks["knn_y"][ids], idx, axis=1)
+        yk = jnp.take_along_axis(
+            jnp.broadcast_to(banks["knn_y"][ids], w.shape), idx, axis=-1)
         knn = (wk * yk).sum(-1) / jnp.maximum(wk.sum(-1), 1e-30)
         y = jnp.where(kind == KIND_KNN, knn, y)
-    y = jnp.maximum(y, 0.0)
+    return jnp.maximum(y, 0.0)
+
+
+def _score_kernel(banks: Dict[str, jax.Array], ids: jax.Array,
+                  sizes: jax.Array, weights: jax.Array,
+                  segments: jax.Array, n_segments: int,
+                  with_knn: bool) -> jax.Array:
+    _TRACE_COUNT[0] += 1
+    y = bank_predict(banks, ids, sizes, with_knn)
     # tile-aligned design blocks: dense pre-reduction, then one scatter
     tiles = (weights * y).reshape(-1, TILE).sum(-1)
     return jax.ops.segment_sum(tiles, segments, num_segments=n_segments,
@@ -371,34 +392,11 @@ def _sweep_kernel(banks: Dict[str, jax.Array], ids: jax.Array,
     record layout across every workload point, so the parameter-bank
     gathers (the memory-bound half of the fused call) are issued ONCE for
     all W workloads instead of once per workload — on top of collapsing W
-    dispatches into one.  Per-record math is identical to the flat
-    kernel; only the broadcast shape differs.
+    dispatches into one.  Per-record math is :func:`bank_predict` with a
+    leading batch axis; only the reduction differs.
     """
     _TRACE_COUNT[0] += 1
-    x = jnp.clip(sizes, banks["xlo"][ids][None], banks["xhi"][ids][None])
-    lx = jnp.log(x + 1.0)
-
-    feats = jnp.stack([x, lx, jnp.log(lx + 1.0), x * lx], axis=-1)
-    lin = (feats * banks["lin_w"][ids][None]).sum(-1) + \
-        banks["lin_y0"][ids][None]
-
-    sig = (jax.nn.sigmoid(banks["sig_k"][ids][None] *
-                          (lx[..., None] - banks["sig_x0"][ids][None])) *
-           banks["sig_c"][ids][None]).sum(-1) + banks["sig_y0"][ids][None]
-
-    kind = banks["kinds"][ids][None]
-    y = jnp.where(kind == KIND_SIGMOID, sig, lin)
-    if with_knn:   # static: profiles without knn models skip the top_k
-        klx = banks["knn_lx"][ids]                       # [R, K] — once
-        d = jnp.abs(lx[..., None] - klx[None]) + 1e-6    # [W, R, K]
-        w = jnp.where(klx[None] >= KNN_SENTINEL * 0.5, 0.0, 1.0 / d)
-        wk, idx = jax.lax.top_k(w, 4)
-        yk = jnp.take_along_axis(
-            jnp.broadcast_to(banks["knn_y"][ids][None], w.shape), idx,
-            axis=-1)
-        knn = (wk * yk).sum(-1) / jnp.maximum(wk.sum(-1), 1e-30)
-        y = jnp.where(kind == KIND_KNN, knn, y)
-    y = jnp.maximum(y, 0.0)
+    y = bank_predict(banks, ids, sizes, with_knn)
     tiles = (weights * y).reshape(y.shape[0], -1, TILE).sum(-1)
     return jax.vmap(lambda t: jax.ops.segment_sum(
         t, segments, num_segments=n_segments,

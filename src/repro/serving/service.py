@@ -122,6 +122,7 @@ class ServiceStats:
     max_batch: int = 0          # largest batch served
     session_frontier_hits: int = 0
     sweeps: int = 0             # workload-sweep requests submitted
+    searches: int = 0           # population-search requests submitted
     shed_interactive: int = 0   # interactive-lane overload rejections
     shed_bulk: int = 0          # bulk-lane overload rejections
     budget_rejected: int = 0    # session token-bucket rejections
@@ -687,6 +688,107 @@ class DesignCalculatorService:
                             cost=request_cost(len(specs), len(points)),
                             deadline_s=deadline_s, lane=lane or BULK)
 
+    def submit_search(self, workload: Workload, hw,
+                      mix: Optional[Dict[str, float]] = None, *,
+                      budget_designs: int = 256,
+                      workloads: Optional[Sequence[Workload]] = None,
+                      mixes=None,
+                      session: Optional[str] = None,
+                      deadline_s: Optional[float] = None,
+                      lane: Optional[str] = None,
+                      **search_kwargs) -> Future:
+        """Population-based design search as a served request.
+
+        Runs :func:`repro.core.search.population_search` with every
+        generation's scoring routed through :meth:`submit_sweep` on the
+        bulk lane — so population search rides the same admission
+        control, priority lanes, per-request deadlines and
+        degraded-engine fault-healing chain as any other sweep traffic
+        (an interactive what-if never waits behind a generation's fused
+        call, and a NaN-poisoned bank heals mid-search without the
+        search noticing anything but the answer's engine tag).
+
+        Admission is priced up front for the *whole* designs-costed
+        budget (``request_cost(budget_designs, points)``); the inner
+        per-generation sweeps then ride free of session budgets, so a
+        search is charged exactly once.  ``deadline_s`` bounds the whole
+        search: each generation's sweep gets the remaining slice and the
+        loop itself stops with :class:`DeadlineExceeded` once spent.
+        The future resolves to the ``population_search`` result dict —
+        discrete winner, oracle-verified, budget accounting included.
+        ``search_kwargs`` pass through (``population``, ``generations``,
+        ``seed``, ``templates``, ...).
+        """
+        from repro.core.search import SearchBudget, population_search
+        thread = self._thread
+        if thread is None or not thread.is_alive():
+            raise RuntimeError("service is not running (call start())")
+        hw_name = self._profile_name(hw)
+        hw_profile = self._profiles[hw_name]
+        wls = list(workloads) if workloads is not None else [workload]
+        points = normalize_points(wls, mixes if mixes is not None else mix)
+        with self._lock:
+            self._stats.questions += 1
+            self._stats.searches += 1
+        if self._budgets is not None:
+            try:
+                self._budgets.admit(
+                    session, request_cost(budget_designs, len(points)))
+            except BudgetExceeded:
+                with self._lock:
+                    self._stats.budget_rejected += 1
+                raise
+        deadline_s = deadline_s if deadline_s is not None \
+            else self._default_deadline
+        deadline = (time.monotonic() + deadline_s
+                    if deadline_s is not None else None)
+        sweep_lane = lane or BULK
+        fut: Future = Future()
+
+        def score_fn(specs) -> np.ndarray:
+            remaining = None
+            if deadline is not None:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0.0:
+                    raise DeadlineExceeded(
+                        "search deadline spent before the next "
+                        "generation could score",
+                        deadline_s=deadline_s, late_by_s=-remaining)
+            # session=None: the search already paid its whole budget at
+            # admission — generation sweeps must not double-charge it
+            inner = self.submit_sweep(
+                [s for s in specs], [w for w, _ in points], hw_profile,
+                [dict(mi) for _, mi in points], session=None,
+                deadline_s=remaining, lane=sweep_lane)
+            # lint: untimed-wait(request deadline + supervisor bound the wait)
+            answer = inner.result()
+            return np.asarray(answer.totals, np.float64).mean(axis=0)
+
+        def drive() -> None:
+            if not fut.set_running_or_notify_cancel():
+                return
+            t0 = time.perf_counter()
+            try:
+                result = population_search(
+                    workload, hw_profile, mix,
+                    budget=SearchBudget(budget_designs),
+                    workloads=wls,
+                    mixes=mixes if mixes is not None else mix,
+                    score_fn=score_fn, **search_kwargs)
+            except Exception as exc:    # noqa: BLE001 — future carries it
+                with self._lock:
+                    self._stats.failed += 1
+                fut.set_exception(exc)
+                return
+            with self._lock:
+                self._stats.answered += 1
+            result["elapsed_s"] = time.perf_counter() - t0
+            fut.set_result(result)
+
+        threading.Thread(target=drive, daemon=True,
+                         name=f"repro-search-{id(fut):x}").start()
+        return fut
+
     # -- synchronous conveniences -------------------------------------------
     # These deliberately block without a deadline: the request-level
     # deadline (deadline_s) plus the worker supervisor guarantee the
@@ -710,6 +812,10 @@ class DesignCalculatorService:
     def workload_sweep(self, *args, **kwargs) -> WorkloadSweepAnswer:
         # lint: untimed-wait(request deadline + supervisor bound the wait)
         return self.submit_sweep(*args, **kwargs).result()
+
+    def design_search(self, *args, **kwargs) -> Dict:
+        # lint: untimed-wait(request deadline + supervisor bound the wait)
+        return self.submit_search(*args, **kwargs).result()
 
     # -- the serving loop (worker thread) -----------------------------------
     def _submit(self, evals: List[_Evaluation],

@@ -1,28 +1,43 @@
 """Minimal stand-in for ``hypothesis`` on containers without it installed.
 
 The tier-1 suite uses a small slice of hypothesis: ``@given`` over
-``integers`` / ``lists`` / ``sampled_from`` / ``@composite`` strategies
-with ``@settings(max_examples=..., deadline=None)``.  This module
-implements exactly that slice with deterministic pseudo-random draws so
-the property tests still execute (as seeded random sweeps) when the real
+``integers`` / ``floats`` / ``booleans`` / ``lists`` / ``tuples`` /
+``one_of`` / ``sampled_from`` / ``@composite`` strategies with
+``@settings(max_examples=..., deadline=None)``.  This module implements
+exactly that slice with deterministic pseudo-random draws so the
+property tests still execute (as seeded random sweeps) when the real
 library is unavailable.  Import pattern used by the tests:
 
     try:
-        from hypothesis import given, settings, strategies as st
+        from hypothesis import given, seed, settings, strategies as st
     except ImportError:
         from repro.testing.hypothesis_fallback import (
-            given, settings, strategies as st)
+            given, seed, settings, strategies as st)
 
-No shrinking, no example database, no reproduction strings — failures
-print the drawn arguments instead.
+No shrinking, no example database.  Reproduction instead works through
+one replay seed: every example draws from its own derived seed, a
+failure prints that seed, and setting ``REPRO_PROPERTY_SEED=<seed>``
+re-runs exactly that one example (the property suite's differential
+failures are replayed with a single environment variable, not a
+hypothesis database).
 """
 from __future__ import annotations
 
+import math
+import os
 import random
 import types
 from typing import Any, Callable, List, Optional, Sequence
 
 _SEED = 961748927  # fixed prime: deterministic across runs and workers
+
+#: environment variable naming one derived example seed to replay
+REPLAY_ENV = "REPRO_PROPERTY_SEED"
+
+
+def _example_seed(base: int, example: int) -> int:
+    """The derived seed of example ``example`` — printable, replayable."""
+    return (base + 0x9E3779B9 * (example + 1)) % (1 << 63)
 
 
 class Strategy:
@@ -42,11 +57,45 @@ def integers(min_value: Optional[int] = None,
     return Strategy(lambda rng: rng.randint(lo, hi))
 
 
+def floats(min_value: Optional[float] = None,
+           max_value: Optional[float] = None,
+           allow_nan: bool = False,
+           allow_infinity: bool = False, **_ignored: Any) -> Strategy:
+    """Uniform floats in [min_value, max_value] (finite draws only —
+    the repro property suite never asks for NaN/inf examples)."""
+    lo = 0.0 if min_value is None else float(min_value)
+    hi = lo + 1.0 if max_value is None else float(max_value)
+    if not (math.isfinite(lo) and math.isfinite(hi)) or hi < lo:
+        raise ValueError(f"bad floats bounds [{lo}, {hi}]")
+    return Strategy(lambda rng: rng.uniform(lo, hi))
+
+
+def booleans() -> Strategy:
+    return Strategy(lambda rng: rng.random() < 0.5)
+
+
 def sampled_from(elements: Sequence[Any]) -> Strategy:
     pool = list(elements)
     if not pool:
         raise ValueError("sampled_from requires a non-empty sequence")
     return Strategy(lambda rng: pool[rng.randrange(len(pool))])
+
+
+def tuples(*strats: Strategy) -> Strategy:
+    """Fixed-shape tuple: one element per argument strategy, in order."""
+    return Strategy(lambda rng: tuple(s.draw(rng) for s in strats))
+
+
+def one_of(*strats: Strategy) -> Strategy:
+    """Draw from one of the argument strategies, chosen uniformly (the
+    real library biases toward earlier branches while shrinking; without
+    shrinking a uniform choice covers every branch evenly)."""
+    if len(strats) == 1 and isinstance(strats[0], (list, tuple)):
+        strats = tuple(strats[0])
+    if not strats:
+        raise ValueError("one_of requires at least one strategy")
+    return Strategy(
+        lambda rng: strats[rng.randrange(len(strats))].draw(rng))
 
 
 def lists(elements: Strategy, min_size: int = 0,
@@ -93,22 +142,44 @@ def settings(max_examples: int = 20, deadline: Any = None,
     return deco
 
 
+def seed(value: int) -> Callable:
+    """API parity with ``hypothesis.seed``: pin a property's base seed."""
+    def deco(fn: Callable) -> Callable:
+        fn._fallback_seed = int(value)
+        return fn
+    return deco
+
+
 def given(*strategy_args: Strategy) -> Callable:
     def deco(fn: Callable) -> Callable:
-        max_examples = getattr(fn, "_fallback_settings",
-                               {}).get("max_examples", 20)
-
         # deliberately *not* functools.wraps: pytest must see the (*args,
         # **kwargs) signature, or it would treat the strategy-filled
         # parameters of the wrapped function as fixtures to resolve.
         def wrapper(*args: Any, **kwargs: Any) -> None:
-            rng = random.Random(_SEED)
-            for example in range(max_examples):
+            # settings()/seed() compose in either order with given() (as
+            # with real hypothesis): outer decorators annotate `wrapper`,
+            # inner ones annotate `fn` — resolve at call time, outer wins
+            max_examples = getattr(
+                wrapper, "_fallback_settings",
+                getattr(fn, "_fallback_settings", {})
+            ).get("max_examples", 20)
+            base = getattr(wrapper, "_fallback_seed",
+                           getattr(fn, "_fallback_seed", _SEED))
+            replay = os.environ.get(REPLAY_ENV)
+            if replay:
+                # replay mode: exactly the one failing example, no sweep
+                example_seeds = [int(replay)]
+            else:
+                example_seeds = [_example_seed(base, n)
+                                 for n in range(max_examples)]
+            for example, es in enumerate(example_seeds):
+                rng = random.Random(es)
                 drawn = [s.draw(rng) for s in strategy_args]
                 try:
                     fn(*args, *drawn, **kwargs)
                 except Exception:
                     print(f"falsifying example #{example}: {drawn!r}")
+                    print(f"replay with: {REPLAY_ENV}={es}")
                     raise
 
         wrapper.__name__ = fn.__name__
@@ -120,5 +191,6 @@ def given(*strategy_args: Strategy) -> Callable:
 
 #: the tests import ``strategies as st`` — mirror hypothesis's layout
 strategies = types.SimpleNamespace(
-    integers=integers, lists=lists, sampled_from=sampled_from,
+    integers=integers, floats=floats, booleans=booleans, lists=lists,
+    tuples=tuples, one_of=one_of, sampled_from=sampled_from,
     composite=composite)

@@ -1,0 +1,133 @@
+"""Shared hypothesis strategies for the property-based differential suite.
+
+One place defines what a "random valid input" means — design chains,
+workloads, operation mixes and hardware profiles — so every property
+test (``tests/test_properties.py``) and any future fuzz harness draws
+from the same distributions.  The module works against real
+``hypothesis`` when installed and falls back to
+:mod:`repro.testing.hypothesis_fallback` otherwise (same API slice, the
+fallback's single-seed replay via ``REPRO_PROPERTY_SEED``).
+
+Design chains are *bounded but adversarial*: depth ≤ 3 internal levels,
+fanouts spanning the pow2 bucketing boundaries of the fused engine,
+bloom-filter variants (the tag-only primitive path), both terminal
+classes, mixed capacities.  Workload/mix draws cover the read-fraction
+axis (pure reads through write-heavy) because the cost model branches
+on it.  Hardware draws reuse one cached profile per name — profiles own
+fitted model banks; drawing fresh ones per example would hide the
+cross-example cache interactions the suite exists to catch.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List
+
+try:
+    from hypothesis import given, seed, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:            # container without hypothesis: same slice
+    from repro.testing.hypothesis_fallback import (   # noqa: F401
+        given, seed, settings, strategies as st)
+    HAVE_HYPOTHESIS = False
+
+from repro.core import elements as el
+from repro.core.elements import DataStructureSpec, Element
+from repro.core.hardware import HardwareProfile, analytical_profile
+from repro.core.synthesis import Workload
+
+__all__ = [
+    "HAVE_HYPOTHESIS", "given", "seed", "settings", "st",
+    "design_chains", "design_specs", "workloads", "mixes",
+    "hardware_names", "hardware_profiles", "profile_by_name",
+]
+
+#: fanouts straddling the fused engine's pow2 shape buckets
+_FANOUTS = (2, 3, 16, 20, 64, 100, 256, 1000)
+_CAPACITIES = (16, 64, 256, 1024)
+_BLOOM_BITS = (1 << 10, 1 << 13, 1 << 16)
+_HW_NAMES = ("hw1", "hw2", "hw3")
+
+
+@functools.lru_cache(maxsize=None)
+def profile_by_name(name: str) -> HardwareProfile:
+    """One cached profile per name: model banks are identity-keyed, so
+    every example sharing ``hw1`` exercises the same device table (the
+    realistic steady-state, and the one where memo pollution can bite)."""
+    return analytical_profile(name)
+
+
+@st.composite
+def _internal_elements(draw) -> Element:
+    kind = draw(st.sampled_from(("hash", "range", "btree", "csb", "trie")))
+    fanout = draw(st.sampled_from(_FANOUTS))
+    if kind == "hash":
+        element = el.hash_element(fanout)
+        if draw(st.booleans()):
+            element = element.with_values(
+                bloom_filters=("on", 2, draw(st.sampled_from(_BLOOM_BITS))),
+                filters_memory_layout="scatter")
+        return element
+    if kind == "range":
+        return el.range_element(fanout)
+    if kind == "btree":
+        return el.btree_internal(fanout)
+    if kind == "csb":
+        return el.csb_internal(fanout)
+    return el.trie_element(min(fanout, 256), draw(st.sampled_from((2, 4))))
+
+
+@st.composite
+def _terminal_elements(draw) -> Element:
+    capacity = draw(st.sampled_from(_CAPACITIES))
+    if draw(st.booleans()):
+        return el.ordered_data_page(capacity)
+    return el.unordered_data_page(capacity)
+
+
+@st.composite
+def design_chains(draw, max_depth: int = 3):
+    """A random valid element chain: ≤ ``max_depth`` internal levels plus
+    one terminal, already validated by ``DataStructureSpec``'s rules."""
+    depth = draw(st.integers(min_value=0, max_value=max_depth))
+    chain = tuple(draw(_internal_elements()) for _ in range(depth))
+    return chain + (draw(_terminal_elements()),)
+
+
+@st.composite
+def design_specs(draw, max_depth: int = 3, name: str = "prop"
+                 ) -> DataStructureSpec:
+    return DataStructureSpec(name, draw(design_chains(max_depth)))
+
+
+@st.composite
+def workloads(draw) -> Workload:
+    """Data sizes spanning several pow2 buckets, small enough for the
+    scalar oracle to stay fast at ≥50 examples per invariant."""
+    n_entries = draw(st.sampled_from(
+        (256, 1000, 4096, 30_000, 1 << 17)))
+    n_queries = draw(st.sampled_from((10, 100, 1000)))
+    return Workload(n_entries=n_entries, n_queries=n_queries)
+
+
+@st.composite
+def mixes(draw) -> Dict[str, float]:
+    """Read-fraction-conditioned operation mixes, ``get`` always present
+    (every engine supports it) with optional range/update/bulk traffic."""
+    read_fraction = draw(st.floats(min_value=0.1, max_value=1.0))
+    total = 100.0
+    mix = {"get": round(read_fraction * total, 3)}
+    writes = total - mix["get"]
+    if writes > 0.5:
+        mix["update"] = round(writes, 3)
+    if draw(st.booleans()):
+        mix["range_get"] = float(draw(st.integers(1, 20)))
+    return mix
+
+
+def hardware_names():
+    return st.sampled_from(_HW_NAMES)
+
+
+@st.composite
+def hardware_profiles(draw) -> HardwareProfile:
+    return profile_by_name(draw(hardware_names()))

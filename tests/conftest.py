@@ -9,6 +9,41 @@ import numpy as np
 import pytest
 
 
+@pytest.fixture(autouse=True)
+def _memo_pollution_guard(request):
+    """Bound the global memo state around every property-based test.
+
+    Long property sweeps share one process-wide memo layer (segment /
+    frontier / sweep caches plus every externally registered cache); a
+    cache that grows past its declared bound — or that
+    ``clear_caches()`` cannot drain — is cross-example pollution that
+    can mask a parity failure behind a stale cached cost.  For tests
+    carrying the ``properties`` marker this fixture starts them from a
+    cold memo, snapshots ``cache_info()`` after the sweep, fails on any
+    cache exceeding its bound, then proves the whole layer drains back
+    to zero.  Non-property tests are untouched (several intentionally
+    assert on warm-cache hit counters).
+    """
+    if request.node.get_closest_marker("properties") is None:
+        yield
+        return
+    from repro.core import batchcost
+    batchcost.clear_caches()
+    yield
+    grown = {name: info for name, info in batchcost.cache_info().items()
+             if info.maxsize is not None and info.currsize > info.maxsize}
+    assert not grown, (
+        f"memo caches grew past their declared bounds during a property "
+        f"sweep (cross-example pollution): {grown}")
+    batchcost.clear_caches()
+    undrained = {name: info.currsize
+                 for name, info in batchcost.cache_info().items()
+                 if info.currsize}
+    assert not undrained, (
+        f"clear_caches() left warm entries behind — an unregistered or "
+        f"mis-registered memo: {undrained}")
+
+
 @pytest.fixture(scope="session")
 def cpu_profile():
     """A quickly-trained container hardware profile shared across tests."""

@@ -1,0 +1,127 @@
+"""Property-based differential suite over the whole cost pipeline.
+
+Random (design, workload, hardware, mix) triples from
+:mod:`repro.testing.strategies` drive four invariants the pipeline
+documents but example-based tests only spot-check:
+
+* scalar oracle == grouped engine (1e-9) == fused engine (1e-6) on any
+  valid input, not just the paper's named designs;
+* ``pack_frontier`` → ``split`` → ``concat_frontiers`` is an identity
+  (arrays and scores, bit for bit);
+* every cell of a ``cost_sweep`` grid equals the per-point
+  ``cost_many`` answer;
+* a memo snapshot save/restore round-trip preserves scoring exactly.
+
+Runs deterministically with or without real hypothesis installed (the
+fallback in :mod:`repro.testing.hypothesis_fallback` draws from derived
+per-example seeds).  On a failure the fallback prints one replay seed;
+re-run just that example with ``REPRO_PROPERTY_SEED=<seed>``.
+The autouse ``_memo_pollution_guard`` fixture (tests/conftest.py)
+cold-starts and drain-checks the global memo layer around every test
+here, so cross-example cache pollution cannot mask a parity failure.
+"""
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.core import batchcost, memo
+from repro.core.synthesis import cost_workload
+from repro.testing.strategies import (design_specs, given, hardware_profiles,
+                                      mixes, settings, st, workloads)
+
+pytestmark = pytest.mark.properties
+
+#: every invariant must clear the issue's bar of >= 50 random examples
+EXAMPLES = 50
+
+
+# ---------------------------------------------------------------------------
+# Invariant 1: three engines, one answer.
+# ---------------------------------------------------------------------------
+@settings(max_examples=EXAMPLES, deadline=None)
+@given(design_specs(), workloads(), mixes(), hardware_profiles())
+def test_engine_parity(spec, workload, mix, hw):
+    """fused == grouped == scalar oracle on random valid triples."""
+    scalar = cost_workload(spec, workload, hw, mix)
+    grouped = float(batchcost.cost_many(
+        [spec], workload, hw, mix, engine="grouped")[0])
+    fused = float(batchcost.cost_many(
+        [spec], workload, hw, mix, engine="fused")[0])
+    assert scalar > 0.0
+    np.testing.assert_allclose(grouped, scalar, rtol=1e-9)
+    np.testing.assert_allclose(fused, scalar, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Invariant 2: pack -> split -> concat is an identity.
+# ---------------------------------------------------------------------------
+@settings(max_examples=EXAMPLES, deadline=None)
+@given(st.lists(design_specs(), min_size=1, max_size=6),
+       st.integers(min_value=1, max_value=8),
+       workloads(), mixes(), hardware_profiles())
+def test_frontier_split_concat_roundtrip(specs, n_parts, workload, mix, hw):
+    """Splitting a packed frontier and splicing the parts back together
+    reproduces the original record arrays and scores bit for bit."""
+    frontier = batchcost.pack_frontier(specs, workload, mix)
+    parts = frontier.split(n_parts)
+    spliced = batchcost.concat_frontiers(parts)
+    assert spliced.n_segments == frontier.n_segments
+    np.testing.assert_array_equal(spliced.ids, frontier.ids)
+    np.testing.assert_array_equal(spliced.sizes, frontier.sizes)
+    np.testing.assert_array_equal(spliced.weights, frontier.weights)
+    np.testing.assert_array_equal(spliced.tile_segments,
+                                  frontier.tile_segments)
+    np.testing.assert_array_equal(spliced.score(hw), frontier.score(hw))
+    # the parts themselves tile the whole: stacked scores == whole score
+    stacked = np.concatenate([p.score(hw) for p in parts])
+    np.testing.assert_array_equal(stacked, frontier.score(hw))
+
+
+# ---------------------------------------------------------------------------
+# Invariant 3: a sweep grid is exactly its per-point columns.
+# ---------------------------------------------------------------------------
+@settings(max_examples=EXAMPLES, deadline=None)
+@given(st.lists(design_specs(), min_size=1, max_size=4),
+       st.lists(workloads(), min_size=1, max_size=3),
+       mixes(), hardware_profiles())
+def test_sweep_grid_matches_cost_many(specs, wls, mix, hw):
+    """Every ``cost_sweep`` cell equals the per-point ``cost_many``
+    answer: bit-identical on the grouped engine, and within the
+    documented 1e-6 of the scalar-parity contract on the fused engine."""
+    grid_grouped = batchcost.cost_sweep(specs, wls, hw, mix,
+                                        engine="grouped")
+    grid_fused = batchcost.cost_sweep(specs, wls, hw, mix, engine="fused")
+    assert grid_grouped.shape == (len(wls), len(specs))
+    for i, w in enumerate(wls):
+        per_point = batchcost.cost_many(specs, w, hw, mix,
+                                        engine="grouped")
+        np.testing.assert_array_equal(grid_grouped[i], per_point)
+        np.testing.assert_allclose(grid_fused[i], per_point, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Invariant 4: memo snapshots restore with full fidelity.
+# ---------------------------------------------------------------------------
+@settings(max_examples=EXAMPLES, deadline=None)
+@given(st.lists(design_specs(), min_size=1, max_size=4),
+       workloads(), mixes(), hardware_profiles())
+def test_memo_snapshot_roundtrip(specs, workload, mix, hw):
+    """snapshot -> clear -> restore preserves warm-path scoring exactly
+    (and the restore lands entries back in the caches it drained)."""
+    cold = batchcost.cost_many(specs, workload, hw, mix, engine="fused")
+    fd, path = tempfile.mkstemp(suffix=".memo")
+    os.close(fd)
+    try:
+        written = memo.snapshot_caches(path)
+        assert written > 0            # packing populated snapshot caches
+        batchcost.clear_caches()
+        report = memo.restore_caches_report(path)
+        assert report.outcome == "restored"
+        assert report.entries == written
+        warm = batchcost.cost_many(specs, workload, hw, mix,
+                                   engine="fused")
+        np.testing.assert_array_equal(warm, cold)
+    finally:
+        os.unlink(path)

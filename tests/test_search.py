@@ -1,0 +1,251 @@
+"""Unit coverage for PR 10: the relaxed continuum + population search.
+
+Complements the random-input differential suite in
+``tests/test_properties.py`` with targeted checks of the search stack:
+budget accounting, the relax encode/decode bridge, the evolutionary
+operators' validity envelope, the search loop's contracts (oracle
+verification, determinism, never-re-pack, budget truncation), the
+budgeted ``design_hillclimb``/``design_beam`` rewiring, and
+``DesignCalculatorService.submit_search``.
+"""
+import random
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import batchcost, elements as el, relax, search
+from repro.core.hardware import hw1
+from repro.core.relax import RelaxedDesign, RelaxTemplate
+from repro.core.synthesis import Workload, cost_workload
+
+WORKLOAD = Workload(n_entries=1 << 16, n_queries=100)
+MIX = {"get": 80.0, "update": 20.0}
+
+
+# ---------------------------------------------------------------------------
+# SearchBudget
+# ---------------------------------------------------------------------------
+def test_budget_charges_and_truncates():
+    b = search.SearchBudget(10)
+    assert b.charge(4) == 4
+    assert b.spent == 4 and b.remaining == 6 and not b.exhausted
+    assert b.charge(8) == 6          # truncated to the remaining grant
+    assert b.exhausted
+    with pytest.raises(search.BudgetExhausted):
+        b.charge(1)
+    assert b.charge(0) == 0          # zero-charge probe never raises
+
+
+def test_budget_rejects_bad_arguments():
+    with pytest.raises(ValueError):
+        search.SearchBudget(0)
+    with pytest.raises(ValueError):
+        search.SearchBudget(5).charge(-1)
+
+
+def test_budget_thread_safe_exact_total():
+    b = search.SearchBudget(1000)
+    granted = []
+
+    def worker():
+        local = 0
+        while True:
+            try:
+                local += b.charge(7)
+            except search.BudgetExhausted:
+                break
+        granted.append(local)
+
+    threads = [threading.Thread(target=worker) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert sum(granted) == 1000 == b.spent
+
+
+# ---------------------------------------------------------------------------
+# relax: encode/decode bridge
+# ---------------------------------------------------------------------------
+def test_decode_encode_roundtrip_exact():
+    rng = random.Random(7)
+    for template in search.DEFAULT_TEMPLATES:
+        for _ in range(16):
+            design = search.random_design(rng, template)
+            spec = relax.decode(design)
+            back = relax.encode(spec)
+            assert back is not None
+            assert relax.decode(back).chain == spec.chain
+
+
+def test_encode_rejects_foreign_chains():
+    assert relax.encode(el.spec_skip_list()) is None
+
+
+def test_template_validation():
+    with pytest.raises(ValueError):
+        RelaxTemplate(("UDP", "B+"))          # terminal must come last
+    with pytest.raises(ValueError):
+        RelaxTemplate(("B+", "ODP"), bloom=True)   # bloom needs Hash root
+
+
+def test_decode_respects_knob_floors():
+    d = RelaxedDesign(RelaxTemplate(("B+", "ODP")), (-3.0, -3.0)).clipped()
+    spec = relax.decode(d)
+    fanout, capacity = spec.chain[0].fanout, spec.chain[-1].capacity
+    assert fanout >= 2 and capacity >= 16
+
+
+# ---------------------------------------------------------------------------
+# Evolutionary operators stay inside the decodable family.
+# ---------------------------------------------------------------------------
+def test_mutate_and_crossover_always_decodable():
+    rng = random.Random(11)
+    pool = [search.random_design(rng, t) for t in search.DEFAULT_TEMPLATES]
+    for _ in range(300):
+        a, b = rng.choice(pool), rng.choice(pool)
+        child = search.mutate(rng, search.crossover(rng, a, b),
+                              sigma=0.8, structural_p=0.5)
+        spec = relax.decode(child)        # raises if structurally invalid
+        internals = len(child.template.levels) - 1
+        assert internals <= search.MAX_INTERNAL_LEVELS
+        assert cost_workload(spec, WORKLOAD, hw1(), MIX) > 0.0
+        pool.append(child)
+
+
+# ---------------------------------------------------------------------------
+# population_search contracts
+# ---------------------------------------------------------------------------
+def test_population_search_verifies_and_stays_in_budget():
+    hw = hw1()
+    result = search.population_search(
+        WORKLOAD, hw, MIX, budget=search.SearchBudget(64),
+        population=8, generations=50, refine_top=2, refine_steps=2,
+        seed=3)
+    assert result["designs_costed"] <= 64
+    oracle = cost_workload(result["design"], WORKLOAD, hw, MIX)
+    assert abs(oracle - result["cost_s"]) / oracle <= search.ORACLE_RTOL
+    assert result["oracle_cost_s"] is not None
+    # best-so-far history is monotone non-increasing
+    assert all(a >= b for a, b in zip(result["history"],
+                                      result["history"][1:]))
+
+
+def test_population_search_deterministic():
+    hw = hw1()
+    runs = [search.population_search(
+        WORKLOAD, hw, MIX, budget=search.SearchBudget(48),
+        population=8, generations=50, seed=5) for _ in range(2)]
+    assert runs[0]["cost_s"] == runs[1]["cost_s"]
+    assert runs[0]["design"].chain == runs[1]["design"].chain
+
+
+def test_population_search_charges_only_fresh_chains():
+    """The seen-set dedups across generations: total designs charged
+    equals the number of distinct chains that reached the engine."""
+    hw = hw1()
+    scored = []
+
+    def spy(specs):
+        scored.extend(s.chain for s in specs)
+        grid = batchcost.cost_sweep(specs, [WORKLOAD], hw, MIX)
+        return np.asarray(grid, np.float64).mean(axis=0)
+
+    result = search.population_search(
+        WORKLOAD, hw, MIX, budget=search.SearchBudget(64),
+        population=8, generations=50, seed=3, score_fn=spy)
+    assert len(scored) == len(set(scored)) == result["designs_costed"]
+
+
+def test_population_search_tiny_budget_raises():
+    # the budget dies mid-generation-0 scoring with nothing reported
+    with pytest.raises(search.BudgetExhausted):
+        search.population_search(
+            WORKLOAD, hw1(), MIX, budget=search.SearchBudget(1),
+            population=8, generations=2, seed=0,
+            score_fn=lambda specs: (_ for _ in ()).throw(
+                search.BudgetExhausted("no engine call allowed")))
+
+
+def test_population_search_multi_point_axis():
+    hw = hw1()
+    wls = [Workload(n_entries=1 << 14, n_queries=100),
+           Workload(n_entries=1 << 16, n_queries=100)]
+    result = search.population_search(
+        WORKLOAD, hw, MIX, budget=search.SearchBudget(48),
+        population=8, generations=20, seed=2, workloads=wls)
+    mean_oracle = float(np.mean([
+        cost_workload(result["design"], w, hw, MIX) for w in wls]))
+    assert abs(mean_oracle - result["cost_s"]) / mean_oracle \
+        <= search.ORACLE_RTOL
+
+
+# ---------------------------------------------------------------------------
+# Budgeted hillclimb/beam rewiring
+# ---------------------------------------------------------------------------
+def test_beam_unconstrained_budget_matches_unbudgeted():
+    from repro.core.autocomplete import design_beam
+    hw = hw1()
+    free = design_beam(WORKLOAD, hw, MIX, beam_width=2, max_rounds=4)
+    budget = search.SearchBudget(10_000)
+    capped = design_beam(WORKLOAD, hw, MIX, beam_width=2, max_rounds=4,
+                         budget=budget)
+    assert capped["cost_s"] == free["cost_s"]
+    assert capped["design"] == free["design"]
+    assert budget.spent == capped["designs_costed"] \
+        == free["designs_costed"]
+
+
+def test_hillclimb_budget_truncates_and_accounts():
+    from repro.core.autocomplete import design_hillclimb
+    hw = hw1()
+    budget = search.SearchBudget(9)
+    result = design_hillclimb(WORKLOAD, hw, MIX, max_steps=6,
+                              budget=budget)
+    assert budget.spent <= 9
+    assert result["designs_costed"] == budget.spent
+    assert np.isfinite(result["cost_s"]) and result["cost_s"] > 0.0
+
+
+def test_hillclimb_unconstrained_budget_matches_unbudgeted():
+    from repro.core.autocomplete import design_hillclimb
+    hw = hw1()
+    free = design_hillclimb(WORKLOAD, hw, MIX, max_steps=4)
+    budget = search.SearchBudget(10_000)
+    capped = design_hillclimb(WORKLOAD, hw, MIX, max_steps=4,
+                              budget=budget)
+    assert capped["cost_s"] == free["cost_s"]
+    assert capped["design"] == free["design"]
+    assert budget.spent == capped["designs_costed"]
+
+
+# ---------------------------------------------------------------------------
+# The serving tier's submit_search
+# ---------------------------------------------------------------------------
+def test_service_submit_search_matches_direct(hw_analytical):
+    from repro.serving.service import DesignCalculatorService
+    direct = search.population_search(
+        WORKLOAD, hw_analytical, MIX, budget=search.SearchBudget(48),
+        population=8, generations=20, seed=4)
+    with DesignCalculatorService([hw_analytical]) as svc:
+        answer = svc.submit_search(
+            WORKLOAD, hw_analytical, MIX, budget_designs=48,
+            population=8, generations=20, seed=4).result(timeout=120)
+        assert svc.stats()["searches"] == 1
+    assert answer["cost_s"] == direct["cost_s"]
+    assert answer["design"].chain == direct["design"].chain
+    oracle = cost_workload(answer["design"], WORKLOAD, hw_analytical, MIX)
+    assert abs(oracle - answer["cost_s"]) / oracle <= search.ORACLE_RTOL
+
+
+def test_service_submit_search_deadline(hw_analytical):
+    from repro.serving.admission import DeadlineExceeded
+    from repro.serving.service import DesignCalculatorService
+    with DesignCalculatorService([hw_analytical]) as svc:
+        fut = svc.submit_search(
+            WORKLOAD, hw_analytical, MIX, budget_designs=512,
+            population=16, generations=200, seed=0,
+            deadline_s=1e-4)
+        with pytest.raises(DeadlineExceeded):
+            fut.result(timeout=120)
